@@ -1,0 +1,41 @@
+"""Kernel micro-benchmarks: Pallas (interpret) vs jnp reference wall time and
+— more importantly on CPU — agreement sweeps.  On real TPU hardware the same
+harness times the compiled kernels."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from .harness import row, timeit
+
+
+def run():
+    rng = np.random.default_rng(0)
+
+    from repro.kernels.frontier_expand.kernel import lbs_pallas
+    from repro.kernels.frontier_expand.ref import lbs_ref
+    deg = rng.integers(0, 32, size=1024).astype(np.int32)
+    scan = jnp.cumsum(jnp.asarray(deg))
+    t_ref = timeit(lambda: lbs_ref(scan, 8192))
+    t_pal = timeit(lambda: lbs_pallas(scan, 8192))
+    row("kernels/lbs/ref", t_ref * 1e6, "budget=8192")
+    row("kernels/lbs/pallas-interpret", t_pal * 1e6, "budget=8192")
+
+    from repro.kernels.queue_compact.ops import compact
+    from repro.kernels.queue_compact.ref import compact_ref
+    items = jnp.asarray(rng.integers(0, 1 << 20, size=4096), jnp.int32)
+    mask = jnp.asarray(rng.random(4096) < 0.5)
+    t_ref = timeit(lambda: compact_ref(items, mask))
+    t_pal = timeit(lambda: compact(items, mask))
+    row("kernels/compact/ref", t_ref * 1e6, "n=4096")
+    row("kernels/compact/pallas-interpret", t_pal * 1e6, "n=4096")
+
+    from repro.kernels.flash_attention.kernel import flash_attention_pallas
+    from repro.kernels.flash_attention.ref import attention_ref
+    q = jnp.asarray(rng.standard_normal((4, 256, 128)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((2, 256, 128)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((2, 256, 128)), jnp.float32)
+    t_ref = timeit(lambda: attention_ref(q, k, v))
+    t_pal = timeit(lambda: flash_attention_pallas(q, k, v))
+    row("kernels/flash/ref", t_ref * 1e6, "bh4xs256xd128")
+    row("kernels/flash/pallas-interpret", t_pal * 1e6, "bh4xs256xd128")

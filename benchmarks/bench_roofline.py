@@ -1,0 +1,37 @@
+"""Roofline table reader: summarizes experiments/dryrun/*.json.
+
+CSV: name = roofline/<arch>/<shape>/<mesh>, us = wall (max term, us),
+derived = dominant;terms;fraction.  This is the per-cell source for
+EXPERIMENTS.md section Roofline.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .harness import row
+
+DRYRUN_DIR = os.environ.get("DRYRUN_DIR", "experiments/dryrun")
+
+
+def run():
+    files = sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json")))
+    if not files:
+        row("roofline/NO_DATA", 0.0,
+            "run repro.launch.dryrun --all first")
+        return
+    for path in files:
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("skipped"):
+            continue
+        wall = max(rec["t_compute_s"], rec["t_memory_s"],
+                   rec["t_collective_s"])
+        name = (f"roofline/{rec['arch']}/{rec['shape']}/"
+                f"{rec['mesh']}/{rec.get('tag', 'baseline')}")
+        row(name, wall * 1e6,
+            f"dom={rec['dominant']};tC={rec['t_compute_s']:.2e};"
+            f"tM={rec['t_memory_s']:.2e};tN={rec['t_collective_s']:.2e};"
+            f"useful={rec['usefulness']:.2f};"
+            f"frac={rec['roofline_fraction']:.4f}")

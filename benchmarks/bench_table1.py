@@ -1,0 +1,69 @@
+"""Paper Table 1 analogue: runtime of BSP vs three Atos variants on the
+three case studies x {scale-free, mesh-like} synthetic datasets.
+
+Variants mirror the paper's:
+  persist-warp : persistent scheduler, per-item expansion (task-LB only)
+  persist-CTA  : persistent scheduler, merge-path expansion (task+data LB)
+  discrete-CTA : discrete scheduler, merge-path expansion
+
+CSV columns: name, us_per_call, derived (speedup vs BSP).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.algorithms.bfs import bfs_bsp, bfs_speculative
+from repro.algorithms.coloring import coloring_async, coloring_bsp
+from repro.algorithms.pagerank import pagerank_async, pagerank_bsp
+from repro.core import SchedulerConfig
+from repro.graph import grid2d, rmat
+
+from .harness import row, timeit
+
+DATASETS = {
+    "scale_free": lambda: rmat(9, 8, seed=1),
+    "mesh_like": lambda: grid2d(32, 32),
+}
+
+VARIANTS = {
+    "persist-warp": dict(persistent=True, strategy="per_item"),
+    "persist-CTA": dict(persistent=True, strategy="merge_path"),
+    "discrete-CTA": dict(persistent=False, strategy="merge_path"),
+}
+
+
+def _cfg(persistent):
+    return SchedulerConfig(num_workers=16, fetch_size=4,
+                           persistent=persistent, max_rounds=1 << 20)
+
+
+def run():
+    for dname, make in DATASETS.items():
+        g = make()
+        # ---- BFS
+        t_bsp = timeit(lambda: bfs_bsp(g, 0)[0])
+        row(f"table1/bfs/{dname}/BSP", t_bsp * 1e6, "x1.00")
+        for vname, v in VARIANTS.items():
+            t = timeit(lambda: bfs_speculative(
+                g, 0, _cfg(v["persistent"]), strategy=v["strategy"])[0])
+            row(f"table1/bfs/{dname}/{vname}", t * 1e6,
+                f"x{t_bsp / t:.2f}")
+        # ---- PageRank
+        t_bsp = timeit(lambda: pagerank_bsp(g, eps=1e-6)[0])
+        row(f"table1/pagerank/{dname}/BSP", t_bsp * 1e6, "x1.00")
+        for vname, v in VARIANTS.items():
+            if v["strategy"] == "per_item":
+                continue  # pagerank push uses merge-path expansion only
+            t = timeit(lambda: pagerank_async(
+                g, _cfg(v["persistent"]), eps=1e-6)[0])
+            row(f"table1/pagerank/{dname}/{vname}", t * 1e6,
+                f"x{t_bsp / t:.2f}")
+        # ---- Graph coloring
+        t_bsp = timeit(lambda: coloring_bsp(g)[0])
+        row(f"table1/coloring/{dname}/BSP", t_bsp * 1e6, "x1.00")
+        for vname, v in VARIANTS.items():
+            if v["strategy"] == "per_item" and vname != "persist-warp":
+                continue
+            t = timeit(lambda: coloring_async(g, _cfg(v["persistent"]))[0])
+            row(f"table1/coloring/{dname}/{vname}", t * 1e6,
+                f"x{t_bsp / t:.2f}")

@@ -1,0 +1,65 @@
+"""The paper's analysis experiments, reproduced:
+
+  1. Fig-4 analogue — runtime heatmap over (num_workers x fetch_size);
+  2. section 6.4 — vertex-ID permutation vs graph-coloring overwork;
+  3. kernel strategy — persistent vs discrete round/dispatch counts.
+
+  PYTHONPATH=src python examples/atos_tradeoffs.py
+"""
+import time
+
+import numpy as np
+
+from repro.algorithms.bfs import bfs_speculative
+from repro.algorithms.coloring import coloring_async
+from repro.core import SchedulerConfig
+from repro.graph import grid2d, permute_vertices, rmat
+
+
+def heatmap():
+    print("=== Fig 4 analogue: BFS runtime (ms) over workers x fetch ===")
+    g = rmat(9, 8, seed=1)
+    print(f"{'':>8}" + "".join(f"fetch={f:<6}" for f in [1, 4, 16]))
+    for w in [4, 16, 64]:
+        cells = []
+        for f in [1, 4, 16]:
+            cfg = SchedulerConfig(num_workers=w, fetch_size=f,
+                                  persistent=True, max_rounds=1 << 20)
+            bfs_speculative(g, 0, cfg)  # warm
+            t0 = time.perf_counter()
+            bfs_speculative(g, 0, cfg)
+            cells.append(f"{(time.perf_counter() - t0) * 1e3:8.1f}    ")
+        print(f"w={w:<6}" + "".join(cells))
+
+
+def permutation():
+    print("\n=== section 6.4: vertex-ID permutation vs coloring overwork ===")
+    g = grid2d(24, 24)
+    perm = np.random.default_rng(0).permutation(g.num_vertices).astype(np.int32)
+    gp = permute_vertices(g, perm)
+    cfg = SchedulerConfig(num_workers=16, fetch_size=8, persistent=True,
+                          max_rounds=1 << 20)
+    for name, gg in [("sorted IDs  ", g), ("permuted IDs", gp)]:
+        _, info = coloring_async(gg, cfg)
+        print(f"  {name}: work/|V| = {info['work'] / gg.num_vertices:.3f}")
+
+
+def kernel_strategy():
+    print("\n=== kernel strategy: persistent vs discrete (BFS, mesh) ===")
+    g = grid2d(32, 32)
+    for persistent in [True, False]:
+        cfg = SchedulerConfig(num_workers=16, fetch_size=2,
+                              persistent=persistent, max_rounds=1 << 20)
+        t0 = time.perf_counter()
+        _, info = bfs_speculative(g, 0, cfg)
+        dt = (time.perf_counter() - t0) * 1e3
+        kind = "persistent" if persistent else "discrete  "
+        n_dispatch = 1 if persistent else info["rounds"]
+        print(f"  {kind}: rounds={info['rounds']:5d} wall={dt:7.1f} ms "
+              f"({n_dispatch} host dispatches)")
+
+
+if __name__ == "__main__":
+    heatmap()
+    permutation()
+    kernel_strategy()

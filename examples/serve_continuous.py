@@ -1,0 +1,41 @@
+"""Continuous batching vs BSP batch serving — the Atos scheduler on LLM
+requests with skewed output lengths (the serving convoy experiment).
+
+  PYTHONPATH=src python examples/serve_continuous.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import smoke_config
+from repro.models import transformer as T
+from repro.models.params import init_params
+from repro.serving.engine import ContinuousBatchingEngine, Request
+
+
+def main():
+    cfg = smoke_config("minitron-4b")
+    params = init_params(T.model_spec(cfg), jax.random.PRNGKey(0),
+                         jnp.float32)
+    rng = np.random.default_rng(0)
+    # heavy-tailed output lengths: most requests short, a few long
+    reqs = [Request(uid=i, prompt=[int(rng.integers(1, cfg.vocab_size))],
+                    max_new_tokens=int(rng.choice([2, 3, 3, 16])))
+            for i in range(16)]
+
+    for mode in ["bsp", "continuous"]:
+        trace = []
+        eng = ContinuousBatchingEngine(cfg, params, num_slots=4, max_len=64,
+                                       mode=mode)
+        res = eng.run(list(reqs), trace=trace)
+        st = res["stats"]
+        print(f"\nmode={mode}")
+        print(f"  wavefronts      : {st.wavefronts}")
+        print(f"  mean occupancy  : {st.mean_occupancy:.3f}")
+        print(f"  active-slot trace: {trace}")
+    print("\ncontinuous admits into freed slots every wavefront "
+          "(relaxed barrier) -> fewer wavefronts for the same tokens.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,167 @@
+"""BFS case study — BSP Dijkstra (Alg 1) vs. speculative relaxed-barrier BFS (Alg 2).
+
+BSP BFS is level-synchronous: the frontier at depth d is fully expanded
+behind a barrier before depth d+1 starts, so every vertex is first reached on
+a shortest path (zero overwork).  Speculative BFS pops a *wavefront* of
+vertices from the Atos queue; because the queue mixes depths, a vertex may be
+reached first via a non-shortest path and later re-relaxed — the paper's
+concurrency-vs-overwork trade.  Both produce exact shortest hop distances.
+
+GPU->TPU adaptation: ``atomicMin(&neighbor.dist, ...)`` becomes a vectorized
+``dist.at[nbr].min(cand)`` scatter-min over the wavefront's expanded edges
+(order-independent, deterministic).  "Was my relaxation the winner?" is
+answered by comparing against the pre-scatter value — the same information
+CUDA's atomicMin returns.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core import (SchedulerConfig, WorkCounter, expand_merge_path,
+                    expand_per_item, make_queue)
+from ..core import scheduler as sched
+from ..graph.csr import CSRGraph
+
+INF = jnp.int32(0x7FFFFFFF)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class BFSState:
+    dist: jax.Array
+    counter: WorkCounter
+
+
+# --------------------------------------------------------------------- BSP
+@partial(jax.jit, static_argnums=(2,))
+def _bsp_level(graph: CSRGraph, carry, max_degree: int):
+    """One level-synchronous step over a dense frontier mask."""
+    dist, frontier, level, work = carry
+    deg = graph.row_ptr[1:] - graph.row_ptr[:-1]
+    # expand every frontier vertex, padded to max_degree (data-parallel flat)
+    vids = jnp.arange(graph.num_vertices, dtype=jnp.int32)
+    j = jnp.arange(max_degree, dtype=jnp.int32)
+    edge = graph.row_ptr[:-1][:, None] + j[None, :]
+    in_row = j[None, :] < deg[:, None]
+    active = in_row & frontier[:, None]
+    nbr = graph.col_idx[jnp.clip(edge, 0, graph.num_edges - 1)]
+    cand = jnp.where(active, level + 1, INF)
+    new_dist = dist.at[jnp.where(active, nbr, 0)].min(
+        jnp.where(active, cand, INF), mode="drop"
+    )
+    new_frontier = new_dist < dist  # improved this level
+    work = work + jnp.sum(active.astype(jnp.int32))
+    return new_dist, new_frontier, level + 1, work
+
+
+def bfs_bsp(graph: CSRGraph, source: int, max_levels: int | None = None):
+    """Level-synchronous BFS; host loop per level = discrete BSP kernels."""
+    n = graph.num_vertices
+    max_degree = int(jnp.max(graph.degrees()))
+    dist = jnp.full((n,), INF, jnp.int32).at[source].set(0)
+    frontier = jnp.zeros((n,), bool).at[source].set(True)
+    level = jnp.int32(0)
+    work = jnp.int32(0)
+    max_levels = max_levels or n
+    levels = 0
+    frontier_sizes = []
+    while bool(jnp.any(frontier)) and levels < max_levels:
+        frontier_sizes.append(int(jnp.sum(frontier)))
+        dist, frontier, level, work = _bsp_level(
+            graph, (dist, frontier, level, work), max_degree
+        )
+        levels += 1
+    return dist, {"levels": levels, "work": int(work),
+                  "frontier_sizes": frontier_sizes}
+
+
+# ------------------------------------------------------------- speculative
+def _make_wavefront_fn(graph: CSRGraph, strategy: str, work_budget: int,
+                       max_degree: int):
+    def f(items, valid, state: BFSState):
+        if strategy == "merge_path":      # CTA worker: task+data-parallel LB
+            ex = expand_merge_path(items, valid, graph.row_ptr, graph.col_idx,
+                                   work_budget)
+            # items whose rows spill past the work budget are re-queued whole
+            # (progress is guaranteed: budget >= max_degree, so the first
+            # popped item always expands fully).
+            safe = jnp.where(valid, items, 0)
+            deg = jnp.where(valid, graph.row_ptr[safe + 1] - graph.row_ptr[safe], 0)
+            excl = jnp.cumsum(deg) - deg
+            truncated = valid & (excl + deg > work_budget)
+        else:                             # warp worker: task-parallel only
+            ex = expand_per_item(items, valid, graph.row_ptr, graph.col_idx,
+                                 max_degree)
+            truncated = jnp.zeros_like(valid)
+        # edges owned by truncated rows are excluded entirely: the row is
+        # re-queued whole and will relax+push on re-expansion (if we relaxed
+        # the prefix now but suppressed its pushes, the re-expansion would
+        # see "no improvement" and the neighbor would never be enqueued).
+        live = ex.valid & ~truncated[ex.owner]
+        cand = jnp.where(live, state.dist[ex.src] + 1, INF)
+        before = state.dist[ex.nbr]
+        tgt = jnp.where(live, ex.nbr, 0)
+        new_dist = state.dist.at[tgt].min(jnp.where(live, cand, INF),
+                                          mode="drop")
+        improved = live & (cand < before)
+        # within-wavefront dedup (beyond-paper): several lanes may improve
+        # the same neighbor; only the winning relaxation needs to requeue it.
+        # On the GPU this would need extra atomics; in the deterministic
+        # wavefront a scatter-min over lane ids is free and cuts overwork.
+        n = state.dist.shape[0]
+        lanes = jnp.arange(ex.nbr.shape[0], dtype=jnp.int32)
+        first_lane = jnp.full((n,), ex.nbr.shape[0], jnp.int32).at[
+            jnp.where(improved, ex.nbr, n)
+        ].min(jnp.where(improved, lanes, ex.nbr.shape[0]), mode="drop")
+        improved &= first_lane[ex.nbr] == lanes
+        counter = state.counter.add(jnp.sum((valid & ~truncated).astype(jnp.int32)))
+        out_items = jnp.concatenate([jnp.where(improved, ex.nbr, 0),
+                                     jnp.where(truncated, items, 0)])
+        out_mask = jnp.concatenate([improved, truncated])
+        return out_items, out_mask, BFSState(dist=new_dist, counter=counter)
+
+    return f
+
+
+def bfs_speculative(
+    graph: CSRGraph,
+    source: int,
+    cfg: SchedulerConfig,
+    strategy: str = "merge_path",
+    work_budget: int | None = None,
+    queue_capacity: int | None = None,
+    trace: list | None = None,
+) -> Tuple[jax.Array, dict]:
+    """Relaxed-barrier BFS on the Atos scheduler.
+
+    ``strategy``: "merge_path" (CTA-style) or "per_item" (warp-style).
+    """
+    n = graph.num_vertices
+    max_degree = int(jnp.max(graph.degrees()))
+    if work_budget is None:
+        # LBS budget per wavefront; truncated rows are re-queued, so this is
+        # a throughput knob, not a correctness one.
+        work_budget = cfg.wavefront * max(
+            8, int(float(jnp.mean(graph.degrees())) * 4)
+        )
+    # progress guarantee: the first popped item must always expand fully
+    work_budget = max(work_budget, max_degree)
+    queue_capacity = queue_capacity or max(4 * n, 1024)
+    queue = make_queue(queue_capacity, jnp.array([source], dtype=jnp.int32))
+    state = BFSState(
+        dist=jnp.full((n,), INF, jnp.int32).at[source].set(0),
+        counter=WorkCounter.zero(),
+    )
+    f = _make_wavefront_fn(graph, strategy, work_budget, max_degree)
+    _, state, stats = sched.run(f, queue, state, cfg, trace=trace)
+    info = {
+        "rounds": int(stats.rounds),
+        "work": int(state.counter.work),
+        "dropped": int(stats.dropped),
+    }
+    return state.dist, info

@@ -1,0 +1,190 @@
+"""Graph-coloring case study — BSP speculative greedy (Alg 5) vs. relaxed (Alg 6).
+
+Both variants use *speculative greedy* coloring [Gebremedhin-Manne]: assign
+each vertex the minimum color not used by its neighbors (reading possibly
+stale neighbor colors), then detect conflicts and re-color.  The BSP variant
+barriers between the assign and detect phases; the relaxed variant fuses them
+in one uberkernel — task sign distinguishes assign (+) from detect (-),
+exactly Alg 6's encoding (we use +v+1 / -(v+1) so vertex 0 is signable).
+
+Speculation cost: adjacent vertices colored in the same wavefront read each
+other's *stale* colors and may pick the same color -> conflict -> recolor.
+The paper shows this is driven by "consecutive queue entries are neighbors"
+(meaningful vertex IDs); we reproduce their 6.4 permutation experiment.
+
+GPU->TPU adaptations (DESIGN.md):
+  * conflict tie-break — Alg 5/6 re-add any vertex that sees its color on a
+    neighbor; on the GPU, timing asymmetry breaks color-pick symmetry, but a
+    deterministic lockstep wavefront would livelock (both endpoints forever
+    re-pick the same color).  We use the standard ID tie-break: the
+    higher-ID endpoint re-colors.  Same fixed point, guaranteed progress.
+  * forbidden-color bitset — CUDA builds a shared-memory forbidden array per
+    vertex; we build a [wavefront, max_colors] one-hot table and take argmin
+    (vectorizes over the 8x128 VPU).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core import SchedulerConfig, WorkCounter, make_queue
+from ..core import scheduler as sched
+from ..graph.csr import CSRGraph
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class ColorState:
+    colors: jax.Array   # int32 [n], -1 = uncolored
+    counter: WorkCounter  # assign tasks processed (Table 4 unit: ratio vs n)
+
+
+def _gather_neighbor_colors(graph, vids, valid, max_degree):
+    """[w, max_degree] neighbor colors, -1 padded."""
+    safe = jnp.where(valid, vids, 0)
+    deg = jnp.where(valid, graph.row_ptr[safe + 1] - graph.row_ptr[safe], 0)
+    j = jnp.arange(max_degree, dtype=jnp.int32)
+    edge = graph.row_ptr[safe][:, None] + j[None, :]
+    in_row = j[None, :] < deg[:, None]
+    nbr = graph.col_idx[jnp.clip(edge, 0, graph.num_edges - 1)]
+    return nbr, in_row
+
+
+def _min_free_color(colors, nbr, in_row, max_colors):
+    """Per row: smallest color in [0, max_colors) unused by valid neighbors."""
+    nbr_colors = jnp.where(in_row, colors[nbr], -1)          # [w, d]
+    onehot = jax.nn.one_hot(nbr_colors, max_colors, dtype=jnp.bool_)
+    forbidden = jnp.any(onehot, axis=1)                      # [w, c]
+    return jnp.argmin(forbidden, axis=1).astype(jnp.int32)   # first False
+
+
+def _priority(v):
+    """Deterministic pseudo-random priority (Gebremedhin-Manne symmetry
+    breaking).  A pure ID tie-break serializes lattice graphs into diagonal
+    waves under the deterministic wavefront; hashing restores the O(log n)
+    expected rounds the paper's GPU timing noise provides for free."""
+    h = (v.astype(jnp.uint32) * jnp.uint32(2654435761)) ^ jnp.uint32(0x9E3779B9)
+    h = (h ^ (h >> 13)) * jnp.uint32(0x85EBCA6B)
+    return h ^ (h >> 16)
+
+
+def _conflicts(colors, vids, valid, nbr, in_row):
+    """Does v share a color with a higher-priority neighbor? (v recolors)."""
+    safe = jnp.where(valid, vids, 0)
+    my = colors[safe]
+    pv, pn = _priority(safe)[:, None], _priority(nbr)
+    # total order: (hash, id) — id breaks the (rare) hash collisions
+    loses = (pn < pv) | ((pn == pv) & (nbr < safe[:, None]))
+    clash = in_row & (colors[nbr] == my[:, None]) & loses & \
+        (my[:, None] >= 0)
+    return jnp.any(clash, axis=1) & valid
+
+
+def coloring_bsp(
+    graph: CSRGraph,
+    max_iters: int = 10000,
+    trace: list | None = None,
+) -> Tuple[jax.Array, dict]:
+    """Alg 5: assign-all / barrier / detect-all, double buffered."""
+    n = graph.num_vertices
+    max_degree = int(jnp.max(graph.degrees()))
+    max_colors = max_degree + 1
+
+    @jax.jit
+    def assign(colors, frontier):
+        vids = jnp.arange(n, dtype=jnp.int32)
+        nbr, in_row = _gather_neighbor_colors(graph, vids, frontier, max_degree)
+        pick = _min_free_color(colors, nbr, in_row, max_colors)
+        return jnp.where(frontier, pick, colors)
+
+    @jax.jit
+    def detect(colors, frontier):
+        vids = jnp.arange(n, dtype=jnp.int32)
+        nbr, in_row = _gather_neighbor_colors(graph, vids, frontier, max_degree)
+        return _conflicts(colors, vids, frontier, nbr, in_row)
+
+    colors = jnp.full((n,), -1, jnp.int32)
+    frontier = jnp.ones((n,), bool)
+    iters, work = 0, 0
+    while iters < max_iters and bool(jnp.any(frontier)):
+        fsize = int(jnp.sum(frontier))
+        colors = assign(colors, frontier)
+        frontier = detect(colors, frontier)
+        work += fsize
+        iters += 1
+        if trace is not None:
+            trace.append(fsize)
+    return colors, {"iters": iters, "work": work}
+
+
+def coloring_async(
+    graph: CSRGraph,
+    cfg: SchedulerConfig,
+    queue_capacity: int | None = None,
+    trace: list | None = None,
+) -> Tuple[jax.Array, dict]:
+    """Alg 6: fused assign/detect uberkernel on the Atos queue.
+
+    Task encoding: +(v+1) = assign color to v; -(v+1) = detect conflict at v.
+    A wavefront mixes both kinds (and multiple speculation depths).
+    """
+    n = graph.num_vertices
+    max_degree = int(jnp.max(graph.degrees()))
+    max_colors = max_degree + 1
+    queue_capacity = queue_capacity or max(4 * n, 1024)
+
+    def f(items, valid, state: ColorState):
+        is_assign = valid & (items > 0)
+        is_detect = valid & (items < 0)
+        vids = jnp.where(is_assign, items - 1, -items - 1)
+        vids = jnp.where(valid, vids, 0)
+
+        # ---- phase A: assigns (all reads see pre-wavefront colors = stale
+        # speculation, exactly the GPU race the paper analyzes)
+        nbr, in_row = _gather_neighbor_colors(graph, vids, is_assign, max_degree)
+        pick = _min_free_color(state.colors, nbr, in_row, max_colors)
+        # duplicate assign tasks for one vertex cannot exist (1 assign ->
+        # 1 detect -> at most 1 re-assign), so this scatter has unique targets
+        colors = state.colors.at[jnp.where(is_assign, vids, n)].set(
+            jnp.where(is_assign, pick, 0), mode="drop")
+
+        # ---- phase B: detects run on post-assign colors of THIS wavefront
+        # (uberkernel fusion: later tasks see earlier tasks' commits)
+        nbr_d, in_row_d = _gather_neighbor_colors(graph, vids, is_detect,
+                                                  max_degree)
+        bad = _conflicts(colors, vids, is_detect, nbr_d, in_row_d)
+
+        out = jnp.concatenate([
+            jnp.where(is_assign, -(vids + 1), 0),   # assign -> queue a detect
+            jnp.where(bad, vids + 1, 0),            # conflict -> re-assign
+        ])
+        mask = jnp.concatenate([is_assign, bad])
+        counter = state.counter.add(jnp.sum(is_assign.astype(jnp.int32)))
+        return out, mask, ColorState(colors=colors, counter=counter)
+
+    queue = make_queue(queue_capacity, jnp.arange(1, n + 1, dtype=jnp.int32))
+    state = ColorState(colors=jnp.full((n,), -1, jnp.int32),
+                       counter=WorkCounter.zero())
+    _, state, stats = sched.run(f, queue, state, cfg, trace=trace)
+    info = {
+        "rounds": int(stats.rounds),
+        "work": int(state.counter.work),
+        "dropped": int(stats.dropped),
+    }
+    return state.colors, info
+
+
+def validate_coloring(graph: CSRGraph, colors) -> bool:
+    """Proper coloring: no edge joins two same-colored vertices; all colored."""
+    import numpy as np
+
+    c = np.asarray(colors)
+    if (c < 0).any():
+        return False
+    rp = np.asarray(graph.row_ptr)
+    ci = np.asarray(graph.col_idx)
+    src = np.repeat(np.arange(graph.num_vertices), np.diff(rp))
+    return bool((c[src] != c[ci]).all())

@@ -1,0 +1,248 @@
+"""PageRank case study — BSP push (Alg 3) vs. asynchronous push (Alg 4).
+
+Residual ("push") PageRank: every vertex holds (rank, residue).  Processing a
+vertex harvests its residue into its rank and pushes ``lambda * res / deg`` to
+each out-neighbor's residue.  Converged when all residues <= eps; the result
+solves  pr = (1-lambda)*1 + lambda * A^T D^{-1} pr  to within eps*deg slack.
+
+PageRank is *naturally unordered* (Dijkstra's don't-care non-determinism):
+relaxing the barrier never produces wrong answers, only a different
+propagation schedule.  The paper shows the async schedule does *less* total
+work because high-residue hubs get re-processed promptly instead of once per
+global sweep — our work counters reproduce that (benchmarks/bench_table4).
+
+GPU->TPU adaptation: ``atomicExch(residue+v, 0)`` = gather residues then
+scatter zeros (the wavefront pops each vertex at most once — duplicates in
+the wavefront are de-duplicated by keeping the first occurrence, which is
+what the atomic exchange guarantees on the GPU); ``atomicAdd`` = scatter-add.
+Algorithm 4's "exclusively reserve Check_Size vertices" rotating re-scan is a
+per-wavefront rotating window driven by a cursor in the state.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core import SchedulerConfig, WorkCounter, expand_merge_path, make_queue
+from ..core import scheduler as sched
+from ..graph.csr import CSRGraph
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class PRState:
+    rank: jax.Array       # f32 [n]
+    residue: jax.Array    # f32 [n]
+    in_queue: jax.Array   # bool [n] — presence bit (see adaptation note)
+    check_cursor: jax.Array  # int32 — Alg 4 rotating re-scan cursor
+    counter: WorkCounter
+
+
+# Adaptation note (recorded in DESIGN.md): Alg 4 tolerates duplicate queue
+# entries because a duplicate pop's atomicExch harvests zero residue (a
+# no-op).  In the deterministic wavefront queue, duplicates instead flood the
+# ring buffer (the checker re-finds hot vertices every rotation), so we
+# de-duplicate at *push* time with a presence bit — the observable schedule
+# (each vertex re-processed while residue > eps) is identical, queue pressure
+# is bounded by n.
+
+
+def _push_wavefront(graph: CSRGraph, damping: float, work_budget: int):
+    """Shared core: harvest residues of popped vertices, push to neighbors."""
+
+    def push(items, valid, state: PRState):
+        n = state.rank.shape[0]
+        # de-duplicate within the wavefront (atomicExch semantics): keep the
+        # first occurrence of each vertex id.
+        safe = jnp.where(valid, items, 0)
+        order = jnp.arange(items.shape[0], dtype=jnp.int32)
+        first_idx = jnp.full((n,), items.shape[0], jnp.int32)
+        first_idx = first_idx.at[safe].min(jnp.where(valid, order, items.shape[0]),
+                                           mode="drop")
+        is_first = valid & (first_idx[safe] == order)
+
+        # rows spilling past the work budget are not harvested; they are
+        # re-queued whole (same discipline as speculative BFS).
+        deg = jnp.where(is_first,
+                        graph.row_ptr[safe + 1] - graph.row_ptr[safe], 0)
+        excl = jnp.cumsum(deg) - deg
+        truncated = is_first & (excl + deg > work_budget)
+        process = is_first & ~truncated
+
+        # harvest: dense mask avoids duplicate-index scatter hazards
+        popped = jnp.zeros((n,), bool).at[
+            jnp.where(process, safe, n)
+        ].set(True, mode="drop")
+        res_lane = jnp.where(process, state.residue[safe], 0.0)
+        rank = state.rank + jnp.where(popped, state.residue, 0.0)
+        residue = jnp.where(popped, 0.0, state.residue)
+        # popped vertices leave the queue; truncated ones stay (re-queued)
+        trunc_mask = jnp.zeros((n,), bool).at[
+            jnp.where(truncated, safe, n)
+        ].set(True, mode="drop")
+        in_queue = jnp.where(popped & ~trunc_mask, False, state.in_queue)
+
+        ex = expand_merge_path(items, process, graph.row_ptr, graph.col_idx,
+                               work_budget)
+        deg_f = jnp.maximum(deg, 1).astype(jnp.float32)
+        contrib = jnp.where(
+            ex.valid, damping * res_lane[ex.owner] / deg_f[ex.owner], 0.0
+        )
+        residue = residue.at[jnp.where(ex.valid, ex.nbr, 0)].add(contrib,
+                                                                 mode="drop")
+        counter = state.counter.add(jnp.sum(process.astype(jnp.int32)))
+        return residue, rank, in_queue, counter, truncated
+
+    return push
+
+
+def pagerank_bsp(
+    graph: CSRGraph,
+    damping: float = 0.85,
+    eps: float = 1e-6,
+    max_iters: int = 1000,
+    trace: list | None = None,
+) -> Tuple[jax.Array, dict]:
+    """Alg 3: process the whole frontier (all residues > eps) per sweep."""
+    n = graph.num_vertices
+    deg = jnp.maximum(graph.degrees(), 1).astype(jnp.float32)
+    edge_src = _edge_sources(graph)  # host-side, hoisted out of the jit
+
+    @jax.jit
+    def sweep(rank, residue):
+        active = residue > eps
+        res = jnp.where(active, residue, 0.0)
+        rank = rank + res
+        residue = jnp.where(active, 0.0, residue)
+        # dense edge-parallel push: for every edge (u -> v) add contribution
+        contrib_per_v = damping * res / deg
+        adds = contrib_per_v[edge_src]
+        residue = residue.at[graph.col_idx].add(adds)
+        return rank, residue, jnp.sum(active.astype(jnp.int32))
+
+    rank = jnp.zeros((n,), jnp.float32)
+    residue = jnp.full((n,), 1.0 - damping, jnp.float32)
+    iters, work = 0, 0
+    while iters < max_iters:
+        if not bool(jnp.any(residue > eps)):
+            break
+        rank, residue, nactive = sweep(rank, residue)
+        work += int(nactive)
+        iters += 1
+        if trace is not None:
+            trace.append(int(nactive))
+    return rank, {"iters": iters, "work": work}
+
+
+_EDGE_SRC_CACHE: dict = {}
+
+
+def _edge_sources(graph: CSRGraph) -> jax.Array:
+    """[m] source vertex of every CSR edge (cached per graph identity)."""
+    key = id(graph.row_ptr)
+    if key not in _EDGE_SRC_CACHE:
+        import numpy as np
+
+        rp = np.asarray(graph.row_ptr)
+        src = np.repeat(np.arange(graph.num_vertices, dtype=np.int32),
+                        np.diff(rp))
+        _EDGE_SRC_CACHE[key] = jnp.asarray(src)
+    return _EDGE_SRC_CACHE[key]
+
+
+def pagerank_async(
+    graph: CSRGraph,
+    cfg: SchedulerConfig,
+    damping: float = 0.85,
+    eps: float = 1e-6,
+    check_size: int = 64,
+    work_budget: int | None = None,
+    queue_capacity: int | None = None,
+    trace: list | None = None,
+) -> Tuple[jax.Array, dict]:
+    """Alg 4: queue-driven asynchronous PageRank on the Atos scheduler."""
+    n = graph.num_vertices
+    max_degree = int(jnp.max(graph.degrees()))
+    if work_budget is None:
+        work_budget = cfg.wavefront * max(
+            8, int(float(jnp.mean(graph.degrees())) * 4)
+        )
+    work_budget = max(work_budget, max_degree)
+    queue_capacity = queue_capacity or max(8 * n, 1024)
+
+    push = _push_wavefront(graph, damping, work_budget)
+    n_check = min(cfg.num_workers * check_size, n)  # distinct ids per window
+
+    def f(items, valid, state: PRState):
+        residue, rank, in_queue, counter, truncated = push(items, valid, state)
+        # rotating residual re-scan (Alg 4 lines 11-14): each wavefront checks
+        # the next n_check vertices and enqueues those above eps that are not
+        # already queued (presence bit — see adaptation note above).
+        check_ids = (state.check_cursor
+                     + jnp.arange(n_check, dtype=jnp.int32)) % n
+        over = (residue[check_ids] > eps) & ~in_queue[check_ids]
+        in_queue = in_queue.at[jnp.where(over, check_ids, n)].set(
+            True, mode="drop")
+        new_state = PRState(rank=rank, residue=residue, in_queue=in_queue,
+                            check_cursor=state.check_cursor + n_check,
+                            counter=counter)
+        out = jnp.concatenate([jnp.where(over, check_ids, 0),
+                               jnp.where(truncated, items, 0)])
+        mask = jnp.concatenate([over, truncated])
+        return out, mask, new_state
+
+    def on_empty(state: PRState):
+        check_ids = (state.check_cursor
+                     + jnp.arange(n_check, dtype=jnp.int32)) % n
+        over = (state.residue[check_ids] > eps) & ~state.in_queue[check_ids]
+        in_queue = state.in_queue.at[jnp.where(over, check_ids, n)].set(
+            True, mode="drop")
+        new_state = dataclasses.replace(
+            state, in_queue=in_queue, check_cursor=state.check_cursor + n_check
+        )
+        pad = jnp.zeros((cfg.wavefront,), jnp.int32)
+        return (jnp.concatenate([jnp.where(over, check_ids, 0), pad]),
+                jnp.concatenate([over, jnp.zeros((cfg.wavefront,), bool)]),
+                new_state)
+
+    def stop(state: PRState):
+        # converged when nothing is above eps anywhere (O(n) reduce per
+        # wavefront — measured as part of the scheduler's fixed cost).
+        return jnp.max(state.residue) <= eps
+
+    n_seed = min(n, queue_capacity // 2)
+    queue = make_queue(queue_capacity, jnp.arange(n_seed, dtype=jnp.int32))
+    state = PRState(
+        rank=jnp.zeros((n,), jnp.float32),
+        residue=jnp.full((n,), 1.0 - damping, jnp.float32),
+        in_queue=jnp.arange(n, dtype=jnp.int32) < n_seed,
+        check_cursor=jnp.int32(0),
+        counter=WorkCounter.zero(),
+    )
+    _, state, stats = sched.run(f, queue, state, cfg, stop=stop,
+                                on_empty=on_empty, trace=trace)
+    info = {
+        "rounds": int(stats.rounds),
+        "work": int(state.counter.work),
+        "dropped": int(stats.dropped),
+        "max_residue": float(jnp.max(state.residue)),
+    }
+    return state.rank, info
+
+
+def pagerank_reference(graph: CSRGraph, damping: float = 0.85,
+                       iters: int = 200) -> jax.Array:
+    """Dense power iteration oracle: pr = (1-d)*1 + d*A^T D^{-1} pr."""
+    n = graph.num_vertices
+    deg = jnp.maximum(graph.degrees(), 1).astype(jnp.float32)
+    edge_src = _edge_sources(graph)
+    pr = jnp.full((n,), 1.0 - damping, jnp.float32)
+    for _ in range(iters):
+        contrib = damping * pr / deg
+        pr = jnp.full((n,), 1.0 - damping, jnp.float32).at[graph.col_idx].add(
+            contrib[edge_src]
+        )
+    return pr

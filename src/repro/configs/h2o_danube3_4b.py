@@ -1,0 +1,7 @@
+"""h2o-danube-3-4b [dense] — llama+mistral mix, SWA [arXiv:2401.16818; unverified]."""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="h2o-danube-3-4b", family="dense", num_layers=24, d_model=3840,
+    num_heads=32, num_kv_heads=8, d_ff=10240, vocab_size=32000,
+    sliding_window=4096)

@@ -1,0 +1,12 @@
+"""Atos core: wavefront task queue, persistent/discrete schedulers, expansion."""
+from .queue import EMPTY, MultiQueue, TaskQueue, make_multiqueue, make_queue
+from .scheduler import RunStats, SchedulerConfig, discrete_run, persistent_run, run
+from .frontier import Expansion, expand_merge_path, expand_per_item
+from .counters import WorkCounter, overwork_ratio
+
+__all__ = [
+    "EMPTY", "MultiQueue", "TaskQueue", "make_multiqueue", "make_queue",
+    "RunStats", "SchedulerConfig", "discrete_run", "persistent_run", "run",
+    "Expansion", "expand_merge_path", "expand_per_item",
+    "WorkCounter", "overwork_ratio",
+]

@@ -1,0 +1,34 @@
+"""Instrumentation for the paper's analysis artifacts.
+
+The paper's quantitative story rests on three measurements:
+  * runtime/speedup          (Table 1)  -> benchmarks/bench_table1.py
+  * workload ratio / overwork (Table 4) -> ``WorkCounter``
+  * throughput vs. time      (Figs 1-3) -> per-round traces (discrete driver)
+
+``WorkCounter`` threads through algorithm state; every processed item bumps
+``work``; the ideal workload (|V| for coloring, |E| for BFS, etc.) is fixed
+per algorithm, giving ``overwork = work / ideal`` — the Table 4 metric.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class WorkCounter:
+    work: jax.Array  # items processed (int32)
+
+    @staticmethod
+    def zero() -> "WorkCounter":
+        return WorkCounter(work=jnp.int32(0))
+
+    def add(self, n) -> "WorkCounter":
+        return WorkCounter(work=self.work + jnp.asarray(n, jnp.int32))
+
+
+def overwork_ratio(counter: WorkCounter, ideal: int) -> float:
+    return float(counter.work) / float(max(ideal, 1))

@@ -1,0 +1,125 @@
+"""Worker-granularity expansion strategies — Atos's task/data-parallel blend.
+
+Atos workers come in two flavours (paper section 3.2/3.3):
+
+  * warp-sized worker, no intra-worker load balancing  -> ``expand_per_item``
+  * CTA-sized worker + load-balancing search [Merrill/Baxter] inside the
+    worker                                             -> ``expand_merge_path``
+
+``expand_per_item`` assigns each popped task (a CSR row) to one lane-group
+and pads the neighbor loop to ``max_degree`` — fast when degree variance is
+low (mesh-like graphs), wasteful when it is high (scale-free graphs),
+*exactly* the warp-worker behaviour measured in the paper.
+
+``expand_merge_path`` flattens the wavefront's total neighbor work with a
+vectorized *load-balancing search*: work item k binary-searches the exclusive
+scan of the popped rows' degrees to find its source row.  Every lane receives
+one unit of work regardless of degree skew — the paper's data-parallel LB,
+retargeted at the 8x128 VPU.  A Pallas TPU kernel with explicit VMEM
+BlockSpec tiling implements the same schedule for the hot path
+(``repro/kernels/frontier_expand``); this module is the jnp reference and the
+portable fallback.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def searchsorted_right(sorted_arr: jax.Array, values: jax.Array) -> jax.Array:
+    """Vectorized upper_bound: index of first element > value.
+
+    jnp.searchsorted is available but we keep an explicit branchless binary
+    search so the Pallas kernel and the reference share the exact schedule.
+    """
+    n = sorted_arr.shape[0]
+    lo = jnp.zeros(values.shape, jnp.int32)
+    hi = jnp.full(values.shape, n, jnp.int32)
+    bits = max(1, (n).bit_length())
+    for _ in range(bits):
+        mid = (lo + hi) // 2
+        go_right = sorted_arr[jnp.clip(mid, 0, n - 1)] <= values
+        lo = jnp.where(go_right & (mid < hi), mid + 1, lo)
+        hi = jnp.where(go_right, hi, jnp.minimum(hi, mid))
+    return lo
+
+
+class Expansion(NamedTuple):
+    """Flattened (source, neighbor) work units for one wavefront."""
+
+    src: jax.Array        # [W] source task per work unit (row id)
+    nbr: jax.Array        # [W] neighbor / column id
+    owner: jax.Array      # [W] index into the popped wavefront of the source
+    valid: jax.Array      # [W] bool
+    total: jax.Array      # scalar int32 — true number of work units
+
+
+def expand_merge_path(
+    items: jax.Array,
+    valid: jax.Array,
+    row_ptr: jax.Array,
+    col_idx: jax.Array,
+    work_budget: int,
+) -> Expansion:
+    """CTA-style expansion: load-balancing search over the wavefront.
+
+    items[i] is a vertex id (or EMPTY).  ``work_budget`` is the static upper
+    bound on sum(degree(items)) processed per wavefront; excess work units are
+    masked out (the caller sizes the budget; tests assert no truncation for
+    the configured fetch sizes).
+    """
+    safe = jnp.where(valid, items, 0)
+    deg = jnp.where(valid, row_ptr[safe + 1] - row_ptr[safe], 0)
+    scan = jnp.cumsum(deg)                       # inclusive scan of degrees
+    total = scan[-1] if scan.shape[0] > 0 else jnp.int32(0)
+
+    k = jnp.arange(work_budget, dtype=jnp.int32)
+    owner = searchsorted_right(scan, k)          # which popped item owns unit k
+    owner = jnp.clip(owner, 0, items.shape[0] - 1)
+    excl = scan - deg                            # exclusive scan
+    rank = k - excl[owner]                       # neighbor index within the row
+    src = safe[owner]
+    in_range = k < total
+    edge = row_ptr[src] + rank
+    nbr = col_idx[jnp.clip(edge, 0, col_idx.shape[0] - 1)]
+    return Expansion(
+        src=jnp.where(in_range, src, 0),
+        nbr=jnp.where(in_range, nbr, 0),
+        owner=jnp.where(in_range, owner, 0),
+        valid=in_range,
+        total=total,
+    )
+
+
+def expand_per_item(
+    items: jax.Array,
+    valid: jax.Array,
+    row_ptr: jax.Array,
+    col_idx: jax.Array,
+    max_degree: int,
+) -> Expansion:
+    """Warp-style expansion: one padded neighbor loop per popped item.
+
+    Produces a [n_items * max_degree] work list; lanes beyond a row's true
+    degree are masked (idle lanes = the warp-worker load imbalance the paper
+    measures on scale-free graphs).
+    """
+    safe = jnp.where(valid, items, 0)
+    deg = jnp.where(valid, row_ptr[safe + 1] - row_ptr[safe], 0)
+    j = jnp.arange(max_degree, dtype=jnp.int32)
+    edge = row_ptr[safe][:, None] + j[None, :]          # [n, max_degree]
+    in_range = j[None, :] < deg[:, None]
+    nbr = col_idx[jnp.clip(edge, 0, col_idx.shape[0] - 1)]
+    src = jnp.broadcast_to(safe[:, None], nbr.shape)
+    owner = jnp.broadcast_to(
+        jnp.arange(items.shape[0], dtype=jnp.int32)[:, None], nbr.shape
+    )
+    return Expansion(
+        src=jnp.where(in_range, src, 0).reshape(-1),
+        nbr=jnp.where(in_range, nbr, 0).reshape(-1),
+        owner=jnp.where(in_range, owner, 0).reshape(-1),
+        valid=in_range.reshape(-1),
+        total=jnp.sum(deg),
+    )

@@ -1,0 +1,163 @@
+"""Persistent and discrete schedulers — Atos's kernel-strategy axis on TPU.
+
+Atos launches workers either as a *persistent* kernel (one launch; workers
+loop, popping from the shared queue until it drains) or as *discrete* kernels
+(one launch per scheduling round).  On TPU the launch boundary is the
+host->device dispatch:
+
+  * ``persistent_run``  — the whole drain loop is a single fused
+    ``jax.lax.while_loop``; zero host round-trips, one XLA executable.  This
+    is the persistent-kernel analogue and removes the "small frontier"
+    fixed cost exactly as in the paper.
+  * ``discrete_run``    — a host-side Python loop around one jitted wavefront
+    step; every round pays a dispatch + a device->host sync on the stop
+    predicate (the analogue of per-kernel launch overhead + the BSP barrier).
+
+Both drivers run the same *wavefront body*: pop ``num_workers x fetch_size``
+tasks, apply the application function f, push the produced tasks.  The
+application function is vectorized over the wavefront — Atos's "worker"
+granularity (warp vs CTA, i.e. per-item vs merge-path expansion) lives inside
+``f`` (see ``core/frontier.py``).
+
+API mirror of Atos's ``launchWarp/launchCTA(ifPersist, numBlock, numThread,
+f1, f2, ...)``: here ``ifPersist`` picks the driver, ``num_workers`` plays
+numBlock, ``fetch_size`` plays FETCH_SIZE, ``f`` plays f1.  ``on_empty``
+(Atos's f2) runs when a pop returns no valid items but the stop condition has
+not fired — useful for PageRank's residual re-scan.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .queue import TaskQueue
+
+# f(items, valid, state) -> (new_items, new_mask, new_state)
+WavefrontFn = Callable[[jax.Array, jax.Array, Any], Tuple[jax.Array, jax.Array, Any]]
+
+
+class RunStats(NamedTuple):
+    rounds: jax.Array          # wavefronts executed
+    items_processed: jax.Array  # total valid items popped (overwork metric)
+    dropped: jax.Array         # queue overflow drops (must be 0 in tests)
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerConfig:
+    """Atos launch configuration (see Listing 3 of the paper)."""
+
+    num_workers: int = 64        # numBlock — parallel workers per wavefront
+    fetch_size: int = 1          # FETCH_SIZE — items each worker pops
+    persistent: bool = True      # ifPersist — kernel strategy
+    max_rounds: int = 1 << 16    # safety bound for while_loop
+
+    @property
+    def wavefront(self) -> int:
+        return self.num_workers * self.fetch_size
+
+
+def _wavefront_step(f: WavefrontFn, on_empty, cfg: SchedulerConfig, carry):
+    queue, state, rounds, processed = carry
+    items, valid, queue = queue.pop(cfg.wavefront)
+    n_valid = jnp.sum(valid.astype(jnp.int32))
+
+    def run_f(args):
+        q, s = args
+        new_items, new_mask, s2 = f(items, valid, s)
+        q2 = q.push(new_items, new_mask)
+        return q2, s2
+
+    def run_empty(args):
+        q, s = args
+        if on_empty is None:
+            return q, s
+        new_items, new_mask, s2 = on_empty(s)
+        return q.push(new_items, new_mask), s2
+
+    queue, state = jax.lax.cond(n_valid > 0, run_f, run_empty, (queue, state))
+    return queue, state, rounds + 1, processed + n_valid
+
+
+def persistent_run(
+    f: WavefrontFn,
+    queue: TaskQueue,
+    state: Any,
+    cfg: SchedulerConfig,
+    stop: Optional[Callable[[Any], jax.Array]] = None,
+    on_empty=None,
+):
+    """Run until the queue drains (or ``stop(state)``), fully on device."""
+
+    def cond(carry):
+        q, s, rounds, _ = carry
+        more = (q.size > 0) & (rounds < cfg.max_rounds)
+        if stop is not None:
+            more &= ~stop(s)
+        if on_empty is not None:
+            # queue may be empty while the stop condition is still false
+            # (e.g. PageRank residual rescan) — keep running on_empty.
+            more = (rounds < cfg.max_rounds)
+            if stop is not None:
+                more &= ~stop(s)
+        return more
+
+    def body(carry):
+        return _wavefront_step(f, on_empty, cfg, carry)
+
+    q, s, rounds, processed = jax.lax.while_loop(
+        cond, body, (queue, state, jnp.int32(0), jnp.int32(0))
+    )
+    return q, s, RunStats(rounds, processed, q.dropped)
+
+
+def discrete_run(
+    f: WavefrontFn,
+    queue: TaskQueue,
+    state: Any,
+    cfg: SchedulerConfig,
+    stop: Optional[Callable[[Any], jax.Array]] = None,
+    on_empty=None,
+    trace: Optional[list] = None,
+):
+    """Host-driven loop: one jitted wavefront per round (discrete kernels).
+
+    ``trace``, if given, collects per-round (queue_size, items_processed)
+    pairs on the host — this powers the throughput-timeline benchmark
+    (paper Figs 1-3) without instrumenting the persistent variant.
+    """
+    step = jax.jit(partial_step(f, on_empty, cfg))
+    rounds = 0
+    processed = jnp.int32(0)
+    carry = (queue, state, jnp.int32(0), jnp.int32(0))
+    while rounds < cfg.max_rounds:
+        q = carry[0]
+        size = int(q.size)  # device->host sync: the discrete-kernel fixed cost
+        s = carry[1]
+        if stop is not None and bool(stop(s)):
+            break
+        if size == 0 and on_empty is None:
+            break
+        carry = step(carry)
+        rounds += 1
+        if trace is not None:
+            trace.append((size, int(carry[3]) - int(processed)))
+        processed = carry[3]
+    q, s, _, processed = carry
+    return q, s, RunStats(jnp.int32(rounds), processed, q.dropped)
+
+
+def partial_step(f, on_empty, cfg):
+    def step(carry):
+        return _wavefront_step(f, on_empty, cfg, carry)
+
+    return step
+
+
+def run(f, queue, state, cfg: SchedulerConfig, stop=None, on_empty=None, trace=None):
+    """Dispatch on ``cfg.persistent`` — the Atos ``ifPersist`` switch."""
+    if cfg.persistent:
+        return persistent_run(f, queue, state, cfg, stop=stop, on_empty=on_empty)
+    return discrete_run(f, queue, state, cfg, stop=stop, on_empty=on_empty, trace=trace)

@@ -1,0 +1,75 @@
+"""Deterministic, sharded, resumable synthetic token pipeline.
+
+Production posture (1000+ nodes):
+  * sharding is by *logical shard id* — ``shard_id = process_index`` by
+    default but decoupled, so a replacement host resumes the failed host's
+    shard (straggler/fault story, DESIGN.md section 6);
+  * the stream is a pure function of (seed, shard, step): resuming from a
+    checkpointed step reproduces the exact batch sequence with no state
+    files;
+  * batches are built host-local ([local_batch, seq]) and assembled into a
+    global array with ``jax.make_array_from_process_local_data`` in the
+    trainer (single-process here: a plain device put with the right
+    sharding).
+
+The synthetic distribution is a deterministic Zipf-over-vocab with a
+shifted-window structure so that next-token prediction has learnable signal
+(the smoke trainer's loss must *drop*, proving the whole path end-to-end).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    num_shards: int = 1
+    seed: int = 0
+
+
+class SyntheticLM:
+    """data[shard].batch(step) -> dict(tokens, labels) of np.int32."""
+
+    def __init__(self, cfg: DataConfig, shard_id: int = 0):
+        assert cfg.global_batch % cfg.num_shards == 0
+        self.cfg = cfg
+        self.shard_id = shard_id
+        self.local_batch = cfg.global_batch // cfg.num_shards
+
+    def batch(self, step: int) -> dict:
+        cfg = self.cfg
+        rng = np.random.default_rng(
+            (cfg.seed * 1_000_003 + self.shard_id) * 1_000_003 + step)
+        # Markov-ish stream over a capped alphabet: next = (3*prev + noise)
+        # mod A with Zipf(2.5) noise.  A << vocab keeps the number of
+        # transitions small, so the smoke trainer's loss visibly drops in
+        # tens of steps (tests assert this end-to-end learning signal).
+        b, t = self.local_batch, cfg.seq_len
+        alphabet = min(64, cfg.vocab_size)
+        noise = rng.zipf(2.5, size=(b, t)).astype(np.int64)
+        toks = np.zeros((b, t + 1), np.int64)
+        toks[:, 0] = rng.integers(0, alphabet, size=b)
+        for i in range(1, t + 1):
+            toks[:, i] = (3 * toks[:, i - 1] + noise[:, i - 1]) % alphabet
+        return {
+            "tokens": toks[:, :-1].astype(np.int32),
+            "labels": toks[:, 1:].astype(np.int32),
+        }
+
+
+def global_batch_spec(cfg: DataConfig):
+    """ShapeDtypeStructs of the global batch (dry-run input stand-ins)."""
+    import jax
+    import jax.numpy as jnp
+
+    return {
+        "tokens": jax.ShapeDtypeStruct((cfg.global_batch, cfg.seq_len),
+                                       jnp.int32),
+        "labels": jax.ShapeDtypeStruct((cfg.global_batch, cfg.seq_len),
+                                       jnp.int32),
+    }

@@ -1,0 +1,83 @@
+"""Fault-tolerance runtime pieces: straggler detection, restart, elasticity.
+
+On a real cluster these hooks sit between the trainer and the scheduler
+(Borg/SLURM/GKE).  Everything here is host-level and hardware-independent,
+so it runs (and is tested) in this container:
+
+  * ``StepMonitor``    — per-step wall-time tracking; flags stragglers when a
+    step exceeds ``k x`` the trailing median (the signal used to trigger
+    preemptive checkpoint + reschedule at scale).
+  * ``run_with_restarts`` — crash-restart harness around a step function:
+    on exception it restores the latest checkpoint and continues; the test
+    suite kills a training run mid-flight and asserts bit-exact recovery.
+  * ``elastic_remesh``  — re-lay-out a checkpointed pytree onto a different
+    mesh (more/fewer pods) via device_put with the new shardings; this is
+    the elastic-scaling path (checkpoints are device-layout-free).
+"""
+from __future__ import annotations
+
+import statistics
+import time
+from typing import Any, Callable, Optional
+
+import jax
+
+
+class StepMonitor:
+    def __init__(self, straggler_factor: float = 3.0, window: int = 50):
+        self.factor = straggler_factor
+        self.window = window
+        self.durations: list[float] = []
+        self.straggler_steps: list[int] = []
+        self._t0: Optional[float] = None
+
+    def start(self):
+        self._t0 = time.perf_counter()
+
+    def stop(self, step: int) -> bool:
+        """Record; returns True if this step was a straggler."""
+        dt = time.perf_counter() - self._t0
+        is_straggler = False
+        recent = self.durations[-self.window:]
+        if len(recent) >= 5:
+            med = statistics.median(recent)
+            if dt > self.factor * med:
+                is_straggler = True
+                self.straggler_steps.append(step)
+        self.durations.append(dt)
+        return is_straggler
+
+
+def run_with_restarts(step_fn: Callable[[int, Any], Any], state: Any,
+                      *, start_step: int, num_steps: int,
+                      ckpt_manager, save_every: int,
+                      restore_fn: Callable[[int], Any],
+                      max_restarts: int = 3):
+    """Drive ``state = step_fn(i, state)``, checkpointing every
+    ``save_every``; on exception restore the latest checkpoint and resume."""
+    restarts = 0
+    i = start_step
+    while i < num_steps:
+        try:
+            state = step_fn(i, state)
+            if (i + 1) % save_every == 0:
+                ckpt_manager.save(i + 1, state, blocking=False)
+            i += 1
+        except Exception:
+            restarts += 1
+            if restarts > max_restarts:
+                raise
+            ckpt_manager.wait()
+            latest = ckpt_manager.latest_step()
+            if latest is None:
+                raise
+            state = restore_fn(latest)
+            i = latest
+    ckpt_manager.wait()
+    return state, {"restarts": restarts}
+
+
+def elastic_remesh(tree: Any, new_shardings: Any) -> Any:
+    """Re-layout a host/device pytree onto new shardings (new mesh)."""
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, s), tree, new_shardings)

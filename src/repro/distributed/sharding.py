@@ -1,0 +1,227 @@
+"""Logical-axis -> mesh resolution + train/serve step builders with pjit.
+
+Resolution rules (DESIGN.md section 6):
+  'fsdp'   -> ('data',) or ('pod', 'data') when the mesh has a pod axis
+  'tp'     -> 'model'        (Megatron-style row/col parallel pairs)
+  'expert' -> 'model'        (EP shares the model axis)
+  'layers' -> None           (scan axis)
+Activations: batch over ('pod','data'); sequence optionally over 'model'
+(SP) for long-context decode.
+
+GQA note: when num_kv_heads < TP degree the KV projections would need a
+sub-divisible shard; we keep KV on 'tp' only when divisible, else replicate
+(the resolver checks divisibility per-leaf against the actual mesh).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as PS
+
+from ..configs.base import ModelConfig, ShapeConfig
+from ..models import transformer as T
+from ..models.params import P, abstract_params, init_params, param_shardings
+from ..optim import adamw, adafactor
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelConfig:
+    """How logical axes map onto the physical mesh (the hillclimb surface)."""
+    fsdp_axis: tuple = ("data",)      # weight-shard axes (ZeRO-3); () = DDP
+    tp_axis: tuple = ("model",)
+    batch_axes: tuple = ("data",)     # activation batch axes (pod added auto)
+    seq_axis: Optional[str] = None    # SP: shard sequence dim of activations
+    kv_seq_axis: Optional[str] = None  # decode: shard the KV cache sequence
+    moe_dispatch_tp: bool = False     # shard expert FFN ff dim over tp too
+
+
+def make_resolver(mesh: Mesh, pc: ParallelConfig):
+    """P(spec) -> NamedSharding, validated against mesh divisibility."""
+    has_pod = "pod" in mesh.axis_names
+
+    def axes_for(logical: Optional[str]):
+        if logical == "fsdp":
+            ax = (("pod",) if has_pod else ()) + tuple(pc.fsdp_axis)
+            return ax if ax else None
+        if logical == "tp":
+            return tuple(pc.tp_axis) or None
+        if logical == "expert":
+            return tuple(pc.tp_axis) or None
+        return None  # 'layers' / None -> replicated
+
+    def mesh_size(ax) -> int:
+        if ax is None:
+            return 1
+        n = 1
+        for a in (ax if isinstance(ax, tuple) else (ax,)):
+            n *= mesh.shape[a]
+        return n
+
+    def resolve(spec: P) -> NamedSharding:
+        parts = []
+        for dim, logical in zip(spec.shape, spec.axes):
+            ax = axes_for(logical)
+            if ax is not None and dim % mesh_size(ax) != 0:
+                ax = None  # not divisible on this mesh: replicate this dim
+            if ax is not None and len(ax) == 1:
+                ax = ax[0]
+            parts.append(ax)
+        return NamedSharding(mesh, PS(*parts))
+
+    return resolve
+
+
+def batch_sharding(mesh: Mesh, pc: ParallelConfig, *, seq_dims=2):
+    has_pod = "pod" in mesh.axis_names
+    batch_ax = (("pod",) if has_pod else ()) + tuple(pc.batch_axes)
+    batch_ax = batch_ax if len(batch_ax) > 1 else batch_ax[0]
+    if seq_dims >= 2 and pc.seq_axis:
+        return NamedSharding(mesh, PS(batch_ax, pc.seq_axis))
+    parts = [batch_ax] + [None] * (seq_dims - 1)
+    return NamedSharding(mesh, PS(*parts))
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, PS())
+
+
+# ------------------------------------------------------------ step builders
+
+
+def abstract_train_state(cfg: ModelConfig, mesh: Mesh, pc: ParallelConfig):
+    """(params, opt_state) as ShapeDtypeStructs with shardings — dry-run."""
+    spec = T.model_spec(cfg)
+    resolve = make_resolver(mesh, pc)
+    dtype = jnp.dtype(cfg.dtype)
+    params = abstract_params(spec, dtype, resolve)
+
+    def f32_like(p):
+        return jax.ShapeDtypeStruct(p.shape, jnp.float32, sharding=p.sharding)
+
+    if cfg.use_adafactor:
+        def vr_like(p):
+            if len(p.shape) >= 2:
+                sh = NamedSharding(mesh, PS(*p.sharding.spec[:-1]))
+                return jax.ShapeDtypeStruct(p.shape[:-1], jnp.float32,
+                                            sharding=sh)
+            return f32_like(p)
+
+        def vc_like(p):
+            if len(p.shape) >= 2:
+                sh = NamedSharding(
+                    mesh, PS(*(p.sharding.spec[:-2] + p.sharding.spec[-1:])))
+                return jax.ShapeDtypeStruct(p.shape[:-2] + p.shape[-1:],
+                                            jnp.float32, sharding=sh)
+            return jax.ShapeDtypeStruct((1,), jnp.float32,
+                                        sharding=replicated(mesh))
+        opt = adafactor.AdafactorState(
+            step=jax.ShapeDtypeStruct((), jnp.int32,
+                                      sharding=replicated(mesh)),
+            vr=jax.tree.map(vr_like, params),
+            vc=jax.tree.map(vc_like, params))
+    else:
+        opt = adamw.AdamWState(
+            step=jax.ShapeDtypeStruct((), jnp.int32,
+                                      sharding=replicated(mesh)),
+            m=jax.tree.map(f32_like, params),
+            v=jax.tree.map(f32_like, params))
+    return params, opt
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg=None, *, attn_impl="xla",
+                    grad_compression: str = "none"):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics).
+
+    ``grad_compression``: none | int8 — int8 quantizes gradients before the
+    data-parallel all-reduce (see distributed/compression.py).
+    """
+    if opt_cfg is None:
+        opt_cfg = (adafactor.AdafactorConfig() if cfg.use_adafactor
+                   else adamw.AdamWConfig())
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: T.loss_fn(p, cfg, batch, attn_impl=attn_impl))(params)
+        if grad_compression == "int8":
+            from .compression import fake_quant_grads
+            grads = fake_quant_grads(grads)
+        if cfg.use_adafactor:
+            params, opt_state, om = adafactor.update(
+                opt_cfg, params, grads, opt_state)
+            om = dict(om)
+        else:
+            params, opt_state, om = adamw.update(
+                opt_cfg, params, grads, opt_state)
+        metrics = {"loss": loss, **om}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_serve_step(cfg: ModelConfig, *, attn_impl="xla"):
+    def serve_step(params, cache, tokens):
+        logits, cache = T.decode_step(params, cfg, cache, tokens)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        return next_tok, cache
+
+    return serve_step
+
+
+def make_prefill_step(cfg: ModelConfig, *, attn_impl="xla"):
+    def prefill_step(params, batch):
+        logits, _ = T.forward(params, cfg, batch, attn_impl=attn_impl)
+        return logits[:, -1, :]
+
+    return prefill_step
+
+
+def cache_shardings(cfg: ModelConfig, mesh: Mesh, pc: ParallelConfig,
+                    cache: Any):
+    """Decode-cache shardings: batch over data axes, heads/d_inner over tp,
+    optionally the KV sequence over ``pc.kv_seq_axis`` (flash-decode style —
+    the weight-stationary serving layout)."""
+    has_pod = "pod" in mesh.axis_names
+    b_ax = (("pod",) if has_pod else ()) + tuple(pc.batch_axes)
+    b_ax = (b_ax if len(b_ax) > 1 else (b_ax[0] if b_ax else None))
+    tp = pc.tp_axis[0] if pc.tp_axis else None
+
+    def sh(x):
+        if not hasattr(x, "ndim") or x.ndim == 0:
+            return replicated(mesh)
+        nb = x.shape[0]
+
+        def div(dim, ax):
+            if ax is None:
+                return None
+            size = 1
+            for a in (ax if isinstance(ax, tuple) else (ax,)):
+                size *= mesh.shape[a]
+            return ax if dim % size == 0 else None
+
+        if x.ndim == 5:   # stacked kv [L, B, S, KVH, hd]
+            return NamedSharding(
+                mesh, PS(None, div(x.shape[1], b_ax),
+                         div(x.shape[2], pc.kv_seq_axis),
+                         div(x.shape[3], tp), None))
+        if x.ndim == 4:
+            ssm_fam = cfg.family in ("ssm", "hybrid")
+            if ssm_fam and x.shape[-1] == cfg.ssm_state:
+                # ssm state [L, B, d_inner, n]
+                return NamedSharding(mesh, PS(None, div(x.shape[1], b_ax),
+                                              div(x.shape[2], tp), None))
+            if ssm_fam and x.shape[-1] == cfg.d_inner:
+                # conv cache [L, B, k-1, d_inner]
+                return NamedSharding(mesh, PS(None, div(x.shape[1], b_ax),
+                                              None, div(x.shape[3], tp)))
+            # encoder cross-kv [B, S_enc, KVH, hd]
+            return NamedSharding(mesh, PS(div(x.shape[0], b_ax), None,
+                                          div(x.shape[2], tp), None))
+        if x.ndim == 3:
+            return NamedSharding(mesh, PS(None, div(x.shape[1], b_ax), None))
+        return replicated(mesh)
+
+    return jax.tree.map(sh, cache)

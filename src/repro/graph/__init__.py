@@ -1,0 +1,5 @@
+from .csr import CSRGraph, from_edges, permute_vertices, degree_stats
+from .generators import rmat, grid2d, erdos
+
+__all__ = ["CSRGraph", "from_edges", "permute_vertices", "degree_stats",
+           "rmat", "grid2d", "erdos"]

@@ -1,0 +1,58 @@
+"""Synthetic graph generators matching the paper's two dataset classes.
+
+The paper evaluates on *scale-free* graphs (soc-LiveJournal, hollywood,
+indochina: low diameter, heavy-tailed degrees) and *mesh-like* graphs
+(road_usa, roadNet-CA: high diameter, degree <= ~12).  Offline we synthesize
+the same two regimes:
+
+  * ``rmat``   — Kronecker/R-MAT scale-free generator (a=0.57 b=c=0.19),
+                 heavy-tailed in/out degrees, diameter O(log n).
+  * ``grid2d`` — 2D lattice with optional diagonal jitter: max degree 4-8,
+                 diameter O(sqrt n) — the road-network stand-in.
+  * ``erdos``  — uniform random for property tests.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .csr import CSRGraph, from_edges
+
+
+def rmat(scale: int, edge_factor: int = 16, seed: int = 0,
+         a: float = 0.57, b: float = 0.19, c: float = 0.19) -> CSRGraph:
+    """R-MAT scale-free graph with 2**scale vertices."""
+    rng = np.random.default_rng(seed)
+    n = 1 << scale
+    m = n * edge_factor
+    src = np.zeros(m, dtype=np.int64)
+    dst = np.zeros(m, dtype=np.int64)
+    for bit in range(scale):
+        r = rng.random(m)
+        # quadrant probabilities a, b, c, d
+        src_bit = (r >= a + b).astype(np.int64)
+        dst_bit = (((r >= a) & (r < a + b)) | (r >= a + b + c)).astype(np.int64)
+        src = (src << 1) | src_bit
+        dst = (dst << 1) | dst_bit
+    return from_edges(n, src, dst, symmetrize=True)
+
+
+def grid2d(rows: int, cols: int, seed: int = 0, extra_frac: float = 0.0) -> CSRGraph:
+    """2D lattice (road-like).  ``extra_frac`` adds random shortcut edges."""
+    n = rows * cols
+    ids = np.arange(n, dtype=np.int64).reshape(rows, cols)
+    right = np.stack([ids[:, :-1].ravel(), ids[:, 1:].ravel()])
+    down = np.stack([ids[:-1, :].ravel(), ids[1:, :].ravel()])
+    edges = np.concatenate([right, down], axis=1)
+    if extra_frac > 0:
+        rng = np.random.default_rng(seed)
+        k = int(extra_frac * edges.shape[1])
+        extra = rng.integers(0, n, size=(2, k))
+        edges = np.concatenate([edges, extra], axis=1)
+    return from_edges(n, edges[0], edges[1], symmetrize=True)
+
+
+def erdos(n: int, m: int, seed: int = 0) -> CSRGraph:
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n, size=m)
+    dst = rng.integers(0, n, size=m)
+    return from_edges(n, src, dst, symmetrize=True)

@@ -1,0 +1,6 @@
+"""Pallas TPU kernels (pl.pallas_call + BlockSpec), validated interpret=True.
+
+frontier_expand -- merge-path load-balancing search (Atos CTA-worker LB)
+queue_compact   -- prefix-sum slot reservation / stream compaction
+flash_attention -- tiled online-softmax attention (LM hot path)
+"""

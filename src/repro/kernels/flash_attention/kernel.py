@@ -1,0 +1,118 @@
+"""Pallas TPU kernel: tiled causal attention with online softmax (flash).
+
+The LM-side compute hot spot.  Grid (bh, q_tile, kv_tile): kv_tile is the
+innermost (sequential) dimension, so the running max / normalizer / weighted
+accumulator live in VMEM scratch across kv steps — the classic flash
+schedule, laid out for the MXU:
+
+  * q/k/v tiles are [TILE, D] with D and TILE multiples of 128/8 so both
+    q @ k^T and p @ v hit the 128x128 systolic array without padding;
+  * the m/l online-softmax carries are [TILE_Q, 1] f32 in VMEM scratch;
+  * causal + sliding-window masking happens on the [TILE_Q, TILE_KV] logits
+    tile; fully-masked kv tiles still run (a `pl.when` skip would be the next
+    optimization on hardware — grid pruning is done by the wrapper instead).
+
+GQA is handled by the BlockSpec index maps: the kv block index is derived
+from the q-head block index (h // group), so KV heads are never materialized
+per-q-head in HBM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_TILE_Q = 128
+DEFAULT_TILE_KV = 128
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, causal: bool, window: int,
+                  tile_q: int, tile_kv: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)          # [TQ, D]
+    k = k_ref[0].astype(jnp.float32)          # [TK, D]
+    v = v_ref[0].astype(jnp.float32)          # [TK, D]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    q_pos = qi * tile_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    k_pos = ki * tile_kv + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = jnp.ones_like(s, dtype=jnp.bool_)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window > 0:
+        mask &= (q_pos - k_pos) < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                        # [TQ, 1]
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)                     # [TQ, TK]
+    correction = jnp.exp(m_prev - m_new)       # [TQ, 1]
+    l_ref[...] = l_ref[...] * correction + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * correction + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ki == pl.num_programs(2) - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)     # rows fully masked -> zeros
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "tile_q", "tile_kv", "interpret"),
+)
+def flash_attention_pallas(
+    q: jax.Array,          # [BH, S_q, D]
+    k: jax.Array,          # [BKV, S_kv, D]
+    v: jax.Array,          # [BKV, S_kv, D]
+    *,
+    causal: bool = True,
+    window: int = 0,       # 0 = unlimited; >0 = sliding window
+    tile_q: int = DEFAULT_TILE_Q,
+    tile_kv: int = DEFAULT_TILE_KV,
+    interpret: bool = True,
+):
+    bh, s_q, d = q.shape
+    bkv, s_kv, _ = k.shape
+    assert bh % bkv == 0, "q heads must be a multiple of kv heads"
+    group = bh // bkv
+    assert s_q % tile_q == 0 and s_kv % tile_kv == 0
+    scale = 1.0 / (d ** 0.5)
+
+    grid = (bh, s_q // tile_q, s_kv // tile_kv)
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        tile_q=tile_q, tile_kv=tile_kv)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, tile_q, d), lambda b, qi, ki: (b, qi, 0)),
+            pl.BlockSpec((1, tile_kv, d), lambda b, qi, ki: (b // group, ki, 0)),
+            pl.BlockSpec((1, tile_kv, d), lambda b, qi, ki: (b // group, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, tile_q, d), lambda b, qi, ki: (b, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s_q, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((tile_q, 1), jnp.float32),
+            pltpu.VMEM((tile_q, 1), jnp.float32),
+            pltpu.VMEM((tile_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,35 @@
+"""jit'd public wrapper around the flash-attention kernel.
+
+Accepts the model-layer layout [B, S, H, D] (+ GQA KV [B, S, KVH, D]) and
+dispatches to the Pallas kernel (TPU target; interpret=True on CPU) or to the
+jnp reference (``impl='xla'``).  The dry-run/roofline path uses 'xla' so XLA
+cost analysis can see the FLOPs (DESIGN.md section 7); 'pallas' is the
+hardware hot path.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_pallas
+from .ref import attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "impl",
+                                             "interpret"))
+def multihead_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                        impl: str = "xla", interpret: bool = True):
+    """q: [B, Sq, H, D], k/v: [B, Skv, KVH, D] -> [B, Sq, H, D]."""
+    b, s_q, h, d = q.shape
+    kvh = k.shape[2]
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, s_q, d)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * kvh, k.shape[1], d)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * kvh, v.shape[1], d)
+    if impl == "pallas":
+        out = flash_attention_pallas(qf, kf, vf, causal=causal, window=window,
+                                     interpret=interpret)
+    else:
+        out = attention_ref(qf, kf, vf, causal=causal, window=window)
+    return out.reshape(b, h, s_q, d).transpose(0, 2, 1, 3)

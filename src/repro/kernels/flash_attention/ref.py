@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for flash attention (materializes the full logits)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q: [BH, Sq, D]; k/v: [BKV, Skv, D] with BH % BKV == 0."""
+    bh, s_q, d = q.shape
+    bkv = k.shape[0]
+    group = bh // bkv
+    k = jnp.repeat(k, group, axis=0)
+    v = jnp.repeat(v, group, axis=0)
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / (d ** 0.5)
+    q_pos = jnp.arange(s_q)[:, None]
+    k_pos = jnp.arange(k.shape[1])[None, :]
+    mask = jnp.ones((s_q, k.shape[1]), bool)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window > 0:
+        mask &= (q_pos - k_pos) < window
+    s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)

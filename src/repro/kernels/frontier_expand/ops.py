@@ -1,0 +1,36 @@
+"""jit'd public wrapper: full CSR wavefront expansion via the LBS kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ...core.frontier import Expansion
+from .kernel import lbs_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("budget", "interpret"))
+def frontier_expand(items, valid, row_ptr, col_idx, budget: int,
+                    interpret: bool = True) -> Expansion:
+    """Drop-in replacement for ``core.frontier.expand_merge_path`` that runs
+    the merge-path search as a Pallas TPU kernel."""
+    safe = jnp.where(valid, items, 0)
+    deg = jnp.where(valid, row_ptr[safe + 1] - row_ptr[safe], 0)
+    scan = jnp.cumsum(deg)
+    total = scan[-1] if scan.shape[0] > 0 else jnp.int32(0)
+
+    owner, rank = lbs_pallas(scan, budget, interpret=interpret)
+    owner = jnp.clip(owner, 0, items.shape[0] - 1)
+    src = safe[owner]
+    k = jnp.arange(budget, dtype=jnp.int32)
+    in_range = k < total
+    edge = row_ptr[src] + rank
+    nbr = col_idx[jnp.clip(edge, 0, col_idx.shape[0] - 1)]
+    return Expansion(
+        src=jnp.where(in_range, src, 0),
+        nbr=jnp.where(in_range, nbr, 0),
+        owner=jnp.where(in_range, owner, 0),
+        valid=in_range,
+        total=total,
+    )

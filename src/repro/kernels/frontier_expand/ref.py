@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the load-balancing-search kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lbs_ref(scan: jax.Array, budget: int):
+    """owner(k) = first j with scan[j] > k; rank(k) = k - scan[owner-1]."""
+    k = jnp.arange(budget, dtype=jnp.int32)
+    owner = jnp.searchsorted(scan, k, side="right").astype(jnp.int32)
+    excl = jnp.where(owner > 0, scan[jnp.maximum(owner - 1, 0)], 0)
+    return owner, k - excl

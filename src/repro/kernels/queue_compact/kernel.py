@@ -1,0 +1,68 @@
+"""Pallas TPU kernel: stream compaction (the queue's push-slot reservation).
+
+Atos pushes with an atomic ticket counter; the TPU-native equivalent is a
+two-phase stream compaction (DESIGN.md section 2):
+
+  phase 1 (this kernel) — per-tile *local* compaction + a per-tile count.
+    Within a tile, the scatter "item i -> slot pos(i)" is expressed as a
+    one-hot [TILE, TILE] mask contraction — scatters become a dense
+    compare + masked reduce that the VPU executes without any dynamic
+    addressing (the TPU answer to CUDA's shared-memory scatter).
+  phase 2 (ops.py, jnp) — a tiny exclusive scan over the per-tile counts
+    stitches tiles into the final contiguous output.
+
+The sequential TPU grid plays the role of the GPU's atomic ticket: tile t's
+global offset is fully determined by tiles 0..t-1, no contention possible.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE = 256
+
+
+def _compact_kernel(items_ref, mask_ref, out_ref, cnt_ref):
+    """items/mask: [1, TILE] -> out: [1, TILE] locally compacted, cnt: [1, 1]."""
+    items = items_ref[...].reshape(TILE)
+    mask = mask_ref[...].reshape(TILE).astype(jnp.int32)
+    pos = jnp.cumsum(mask) - mask                       # exclusive scan
+    j = jax.lax.broadcasted_iota(jnp.int32, (TILE, TILE), 1)
+    # onehot[i, j] = item i lands in slot j
+    onehot = (pos.reshape(TILE, 1) == j) & (mask.reshape(TILE, 1) > 0)
+    compacted = jnp.sum(jnp.where(onehot, items.reshape(TILE, 1), 0), axis=0)
+    out_ref[...] = compacted.reshape(1, TILE)
+    cnt_ref[...] = jnp.sum(mask).reshape(1, 1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def compact_tiles_pallas(items: jax.Array, mask: jax.Array,
+                         interpret: bool = True):
+    """[N] items + [N] mask -> ([n_tiles, TILE] local, [n_tiles] counts)."""
+    n = items.shape[0]
+    n_pad = -(-n // TILE) * TILE
+    items_p = jnp.zeros((1, n_pad), jnp.int32).at[0, :n].set(items)
+    mask_p = jnp.zeros((1, n_pad), jnp.int32).at[0, :n].set(
+        mask.astype(jnp.int32))
+    grid = (n_pad // TILE,)
+    local, counts = pl.pallas_call(
+        _compact_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, TILE), lambda t: (0, t)),
+            pl.BlockSpec((1, TILE), lambda t: (0, t)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, TILE), lambda t: (0, t)),
+            pl.BlockSpec((1, 1), lambda t: (0, t)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, n_pad), jnp.int32),
+            jax.ShapeDtypeStruct((1, n_pad // TILE), jnp.int32),
+        ],
+        interpret=interpret,
+    )(items_p, mask_p)
+    return local.reshape(-1, TILE), counts.reshape(-1)

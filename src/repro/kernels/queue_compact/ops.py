@@ -1,0 +1,26 @@
+"""jit'd public wrapper: global stream compaction via the Pallas tile kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import TILE, compact_tiles_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def compact(items: jax.Array, mask: jax.Array, interpret: bool = True):
+    """([N], [N]bool) -> ([N] compacted-then-zeros, count) — kernel-backed."""
+    n = items.shape[0]
+    local, counts = compact_tiles_pallas(items, mask, interpret=interpret)
+    n_tiles = local.shape[0]
+    tile_offs = jnp.cumsum(counts) - counts            # phase 2: global stitch
+    # element (t, j) for j < counts[t] lands at tile_offs[t] + j
+    j = jnp.arange(TILE, dtype=jnp.int32)
+    dst = tile_offs[:, None] + j[None, :]
+    live = j[None, :] < counts[:, None]
+    out = jnp.zeros((n_tiles * TILE,), jnp.int32).at[
+        jnp.where(live, dst, n_tiles * TILE)
+    ].set(jnp.where(live, local, 0), mode="drop")
+    return out[:n], jnp.sum(counts)

@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for stream compaction."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def compact_ref(items: jax.Array, mask: jax.Array):
+    """Stable compaction: ([N], [N]bool) -> ([N] compacted then zeros, count)."""
+    n = items.shape[0]
+    mask_i = mask.astype(jnp.int32)
+    pos = jnp.cumsum(mask_i) - mask_i
+    out = jnp.zeros((n,), jnp.int32).at[jnp.where(mask, pos, n)].set(
+        jnp.where(mask, items, 0), mode="drop")
+    return out, jnp.sum(mask_i)

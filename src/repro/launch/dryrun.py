@@ -1,0 +1,220 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# NOTE: the two lines above MUST run before any other import (jax locks the
+# device count on first init).  Do not move them.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell:
+  * jit the train/prefill/serve step with the production shardings,
+    ``.lower(**input_specs)`` and ``.compile()`` — success proves the
+    distribution config is coherent (no sharding mismatch / unsupported
+    collective / compile-time OOM);
+  * record ``memory_analysis()`` + ``cost_analysis()`` + parsed collective
+    bytes, compose scan-body probes (see probes.py), and emit one JSON per
+    cell for EXPERIMENTS.md and the roofline benchmark.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen1.5-110b \
+      --shape train_4k [--multi-pod] [--out experiments/dryrun]
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import SHAPES, supports_shape
+from ..configs.registry import ARCH_IDS, get_config
+from ..distributed import sharding as SH
+from . import probes as PR
+from . import roofline as RL
+from .mesh import make_production_mesh
+from .specs import input_specs
+
+
+def _step_fn(cfg, shape, attn_impl="xla"):
+    if shape.kind == "train":
+        return SH.make_train_step(cfg, attn_impl=attn_impl)
+    if shape.kind == "prefill":
+        return SH.make_prefill_step(cfg, attn_impl=attn_impl)
+    serve = SH.make_serve_step(cfg, attn_impl=attn_impl)
+    return lambda params, cache, tokens: serve(params, cache, tokens)
+
+
+def _lower_full(cfg, shape, mesh, pc, attn_impl="xla"):
+    specs = input_specs(cfg, shape, mesh, pc)
+    params, opt = SH.abstract_train_state(cfg, mesh, pc)
+    fn = _step_fn(cfg, shape, attn_impl)
+    with mesh:
+        if shape.kind == "train":
+            lowered = jax.jit(fn).lower(params, opt, specs)
+        elif shape.kind == "prefill":
+            lowered = jax.jit(fn).lower(params, specs)
+        else:
+            lowered = jax.jit(fn).lower(params, specs["cache"],
+                                        specs["tokens"])
+        compiled = lowered.compile()
+    return lowered, compiled
+
+
+def _analyze(cfg, shape, mesh, pc, compiled, attn_impl="xla"):
+    chips = mesh.devices.size
+    total = RL.cost_terms(compiled)
+    probe_detail = []
+    for probe in PR.make_probes(cfg, shape, mesh, pc, attn_impl=attn_impl):
+        with mesh:
+            pc_compiled = jax.jit(probe.fn).lower(*probe.args).compile()
+        terms = RL.cost_terms(pc_compiled)
+        extra = terms.scaled(probe.trips - probe.counted)
+        total = total + extra
+        probe_detail.append({
+            "name": probe.name, "trips": probe.trips,
+            "counted": probe.counted,
+            "flops_per_body": terms.flops,
+            "bytes_per_body": terms.bytes,
+            "coll_bytes_per_body": terms.coll_bytes,
+        })
+    ssm_f, ssm_b = PR.ssm_analytic_correction(cfg, shape)
+    total = total + RL.CostTerms(ssm_f / chips, ssm_b / chips, 0.0, {})
+    roof = RL.make_roofline(total, chips,
+                            RL.model_flops_estimate(cfg, shape))
+
+    mem = {}
+    try:
+        ma = compiled.memory_analysis()
+        for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                     "temp_size_in_bytes", "generated_code_size_in_bytes",
+                     "alias_size_in_bytes"):
+            v = getattr(ma, attr, None)
+            if v is not None:
+                mem[attr] = int(v)
+    except Exception as e:  # CPU backend may not implement it
+        mem["error"] = str(e)
+    return total, roof, mem, probe_detail
+
+
+def state_bytes_per_device(cfg, mesh, pc) -> float:
+    """Analytic params+optimizer bytes per chip from the shardings."""
+    params, opt = SH.abstract_train_state(cfg, mesh, pc)
+    n_dev = mesh.devices.size
+
+    def bytes_of(t):
+        total = 0
+        for leaf in jax.tree.leaves(t):
+            total += leaf.size * leaf.dtype.itemsize
+        return total
+
+    return (bytes_of(params) + bytes_of(opt)) / n_dev
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             pc: SH.ParallelConfig | None = None, out_dir: str | None = None,
+             tag: str = "baseline", attn_impl: str = "xla",
+             cfg_overrides: dict | None = None) -> dict:
+    cfg = get_config(arch)
+    if cfg_overrides:
+        cfg = dataclasses.replace(cfg, **cfg_overrides)
+    shape = SHAPES[shape_name]
+    if not supports_shape(cfg, shape):
+        return {"arch": arch, "shape": shape_name, "skipped": True,
+                "reason": "full-attention arch; long_500k undefined "
+                          "(DESIGN.md section 5)"}
+    pc = pc or SH.ParallelConfig()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    lowered, compiled = _lower_full(cfg, shape, mesh, pc, attn_impl)
+    compile_s = time.time() - t0
+    total, roof, mem, probe_detail = _analyze(cfg, shape, mesh, pc, compiled,
+                                              attn_impl)
+    rec_chips = int(mesh.devices.size)
+    rec = {
+        "arch": arch, "shape": shape_name, "tag": tag,
+        "attn_impl": attn_impl,
+        "cfg_overrides": cfg_overrides or {},
+        "mesh": "x".join(map(str, mesh.devices.shape)),
+        "multi_pod": multi_pod,
+        "chips": int(mesh.devices.size),
+        "compile_s": round(compile_s, 1),
+        "parallel": dataclasses.asdict(pc),
+        "hlo_flops": total.flops,
+        "hlo_bytes": total.bytes,
+        "convert_bytes": total.conv_bytes,
+        # CPU backend upcasts bf16 dot operands to f32 (no native bf16
+        # matmul); the TPU MXU reads bf16 directly, so at least the convert
+        # writes vanish on hardware (conservative 1x subtraction — the f32
+        # re-reads inside fusions are partially counted already):
+        "t_memory_tpu_adj_s": max(total.bytes - total.conv_bytes, 0.0)
+        / RL.HBM_BW,
+        "collective_bytes": total.coll_bytes,
+        "collective_by_kind": total.coll_by_kind,
+        "t_compute_s": roof.t_compute,
+        "t_memory_s": roof.t_memory,
+        "t_collective_s": roof.t_collective,
+        "dominant": roof.dominant,
+        "model_flops": roof.model_flops,
+        "usefulness": roof.usefulness,
+        "roofline_fraction": roof.roofline_fraction,
+        "roofline_fraction_tpu_adj": (
+            roof.model_flops / (rec_chips * RL.PEAK_FLOPS)
+            / max(roof.t_compute,
+                  max(total.bytes - total.conv_bytes, 0.0) / RL.HBM_BW,
+                  roof.t_collective)
+            if max(roof.t_compute, roof.t_collective) > 0 or total.bytes
+            else 0.0),
+        "state_bytes_per_device": state_bytes_per_device(cfg, mesh, pc),
+        "memory_analysis": mem,
+        "probes": probe_detail,
+    }
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        pod = "pod2" if multi_pod else "pod1"
+        path = os.path.join(out_dir, f"{arch}__{shape_name}__{pod}__{tag}.json")
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--tag", default="baseline")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for a in ARCH_IDS:
+            for s in SHAPES:
+                cells.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    for arch, shape in cells:
+        try:
+            rec = run_cell(arch, shape, args.multi_pod, out_dir=args.out,
+                           tag=args.tag)
+            if rec.get("skipped"):
+                print(f"SKIP {arch} {shape}: {rec['reason']}", flush=True)
+                continue
+            print(f"OK   {arch:22s} {shape:12s} mesh={rec['mesh']} "
+                  f"compile={rec['compile_s']}s dominant={rec['dominant']} "
+                  f"tC={rec['t_compute_s']:.3e} tM={rec['t_memory_s']:.3e} "
+                  f"tN={rec['t_collective_s']:.3e} "
+                  f"frac={rec['roofline_fraction']:.3f}", flush=True)
+        except Exception:
+            print(f"FAIL {arch} {shape}", flush=True)
+            traceback.print_exc()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Tiny HLO profiler: attribute cost-analysis bytes to op kinds.
+
+The dry-run has no wall-clock profile; this is the "profile" the perf loop
+iterates on (DESIGN.md section 7): group every HLO op's result bytes by
+opcode and by source op_name metadata, descending.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*"
+    r"((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?))\s+"
+    r"([\w\-]+)\(")
+_SHAPE_RE = re.compile(r"\b(f64|f32|f16|bf16|s64|u64|s32|u32|s16|u16|s8|u8|"
+                       r"pred)\[([0-9,]*)\]")
+_META_RE = re.compile(r'op_name="([^"]+)"')
+_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+          "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+          "pred": 1}
+
+
+def _shape_bytes(txt: str) -> int:
+    return sum(int(_prod(dims)) * _BYTES[d]
+               for d, dims in _SHAPE_RE.findall(txt))
+
+
+def _prod(dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+def bytes_by(hlo_text: str, key: str = "opcode", top: int = 20):
+    """key: 'opcode' or 'opname' (jax-level op metadata)."""
+    acc = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        b = _shape_bytes(m.group(1))
+        if key == "opcode":
+            acc[m.group(2)] += b
+        else:
+            meta = _META_RE.search(line)
+            name = meta.group(1) if meta else "<none>"
+            # strip indices for grouping
+            name = re.sub(r"[0-9]+", "#", name)[:90]
+            acc[name] += b
+    return sorted(acc.items(), key=lambda kv: -kv[1])[:top]
+
+
+def report(compiled, top: int = 15):
+    txt = compiled.as_text()
+    print("--- bytes by opcode")
+    for k, v in bytes_by(txt, "opcode", top):
+        print(f"  {v / 1e9:10.1f} GB  {k}")
+    print("--- bytes by op_name")
+    for k, v in bytes_by(txt, "opname", top):
+        print(f"  {v / 1e9:10.1f} GB  {k}")

@@ -1,0 +1,216 @@
+"""Scan-body probes for roofline composition.
+
+XLA cost analysis counts a ``lax.scan`` body once, so the dry-run compiles
+each scanned layer body *separately* (same shardings as inside the step) and
+the analyzer composes:  total = full_step + sum_probes (trips - counted) x
+probe  (+ the analytic SSM time-recurrence correction).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as PS
+
+from ..configs.base import ModelConfig, ShapeConfig
+from ..distributed import sharding as SH
+from ..models import transformer as T
+from ..models.params import abstract_params
+
+
+@dataclasses.dataclass
+class Probe:
+    name: str
+    fn: Callable            # jit-able
+    args: tuple             # ShapeDtypeStructs
+    trips: int              # scan length in the real model
+    counted: int            # how many bodies the full artifact already counts
+
+
+def _x_spec(cfg, mesh, pc, batch: int, t: int):
+    from .specs import _batch_axes, _fit
+    b_ax = _batch_axes(mesh, pc)
+    return jax.ShapeDtypeStruct(
+        (batch, t, cfg.d_model), jnp.dtype(cfg.dtype),
+        sharding=NamedSharding(mesh, PS(_fit(mesh, batch, b_ax),
+                                        _fit(mesh, t, pc.seq_axis), None)))
+
+
+def _block_params_spec(cfg, mesh, pc, kind: str):
+    resolve = SH.make_resolver(mesh, pc)
+    return abstract_params(T.block_spec(cfg, kind), jnp.dtype(cfg.dtype),
+                           resolve)
+
+
+def _train_probe_fn(cfg, kind: str, enc_kv=None, attn_impl="xla"):
+    def apply(p, x, *rest):
+        if kind == "moe":
+            y, _, _ = T._apply_moe_block(p, cfg, x, attn_impl=attn_impl)
+        elif kind == "mamba":
+            y, _ = T._apply_mamba_block(p, cfg, x)
+        elif kind == "encdec_dec":
+            y, _ = T._apply_xattn_block(p, cfg, x, rest[0])
+        else:
+            y, _ = T._apply_dense_block(p, cfg, x, attn_impl=attn_impl)
+        return jnp.sum(jnp.square(y.astype(jnp.float32)))
+
+    def fwd_bwd(p, x, *rest):
+        body = T._remat(cfg, lambda p, x: apply(p, x, *rest))
+        _, grads = jax.value_and_grad(body, argnums=(0, 1))(p, x)
+        return grads
+
+    return fwd_bwd
+
+
+def _fwd_probe_fn(cfg, kind: str, attn_impl="xla"):
+    def apply(p, x, *rest):
+        if kind == "moe":
+            y, _, _ = T._apply_moe_block(p, cfg, x, attn_impl=attn_impl)
+        elif kind == "mamba":
+            y, _ = T._apply_mamba_block(p, cfg, x)
+        elif kind == "encdec_dec":
+            y, _ = T._apply_xattn_block(p, cfg, x, rest[0])
+        else:
+            y, _ = T._apply_dense_block(p, cfg, x, attn_impl=attn_impl)
+        return y
+
+    return apply
+
+
+def _decode_probe_fn(cfg, kind: str):
+    def apply(p, x, kv_or_ssm, clen, *rest):
+        if kind == "moe":
+            y, _, _ = T._apply_moe_block(p, cfg, x, kv_cache=kv_or_ssm,
+                                         cache_len=clen)
+        elif kind == "mamba":
+            y, _ = T._apply_mamba_block(p, cfg, x, cache=kv_or_ssm)
+        elif kind == "encdec_dec":
+            y, _ = T._apply_xattn_block(p, cfg, x, rest[0],
+                                        kv_cache=kv_or_ssm, cache_len=clen)
+        else:
+            y, _ = T._apply_dense_block(p, cfg, x, kv_cache=kv_or_ssm,
+                                        cache_len=clen)
+        return y
+
+    return apply
+
+
+def make_probes(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                pc: SH.ParallelConfig, attn_impl: str = "xla") -> List[Probe]:
+    """Probes matching the scan structure of the step for this (cfg, shape)."""
+    from .specs import _batch_axes, input_specs
+
+    B = shape.global_batch
+    fam = cfg.family
+    probes: List[Probe] = []
+    b_ax = _batch_axes(mesh, pc)
+    kvh, hd = cfg.num_kv_heads, cfg.hd
+
+    def enc_kv_spec(s_len):
+        from .specs import _fit
+        sh = NamedSharding(mesh, PS(_fit(mesh, B, b_ax), None, None, None))
+        return (jax.ShapeDtypeStruct((B, s_len, kvh, hd),
+                                     jnp.dtype(cfg.dtype), sharding=sh),) * 2
+
+    if shape.kind in ("train", "prefill"):
+        t = shape.seq_len
+        if fam == "vlm":
+            t = max(shape.seq_len - cfg.frontend_len, 128) + cfg.frontend_len
+        x = _x_spec(cfg, mesh, pc, B, t)
+        mk = ((lambda c, k, enc_kv=None: _train_probe_fn(c, k, attn_impl=attn_impl))
+              if shape.kind == "train" else
+              (lambda c, k, enc_kv=None: _fwd_probe_fn(c, k, attn_impl=attn_impl)))
+        if fam in ("dense", "vlm"):
+            p = _block_params_spec(cfg, mesh, pc, "dense")
+            probes.append(Probe("layer", mk(cfg, "dense"), (p, x),
+                                cfg.num_layers, 1))
+        elif fam == "moe":
+            p = _block_params_spec(cfg, mesh, pc, "moe")
+            probes.append(Probe("layer", mk(cfg, "moe"), (p, x),
+                                cfg.num_layers, 1))
+        elif fam == "ssm":
+            p = _block_params_spec(cfg, mesh, pc, "mamba")
+            probes.append(Probe("layer", mk(cfg, "mamba"), (p, x),
+                                cfg.num_layers, 1))
+        elif fam == "hybrid":
+            every = cfg.attn_every or cfg.num_layers
+            g = cfg.num_layers // every
+            p = _block_params_spec(cfg, mesh, pc, "mamba")
+            probes.append(Probe("mamba_layer", mk(cfg, "mamba"), (p, x),
+                                cfg.num_layers, g))
+        elif fam == "encdec":
+            pe = _block_params_spec(cfg, mesh, pc, "dense")
+            xe = _x_spec(cfg, mesh, pc, B, cfg.frontend_len)
+            probes.append(Probe("enc_layer", mk(cfg, "dense"), (pe, xe),
+                                cfg.encoder_layers, 1))
+            pd = _block_params_spec(cfg, mesh, pc, "encdec_dec")
+            ekv = enc_kv_spec(cfg.frontend_len)
+            dec_fn = (_train_probe_fn(cfg, "encdec_dec")
+                      if shape.kind == "train"
+                      else _fwd_probe_fn(cfg, "encdec_dec"))
+            probes.append(Probe("dec_layer", dec_fn, (pd, x, ekv),
+                                cfg.num_layers, 1))
+        return probes
+
+    # ---- decode probes
+    specs = input_specs(cfg, shape, mesh, pc)
+    cache = specs["cache"]
+    x = _x_spec(cfg, mesh, pc, B, 1)
+    clen = jax.ShapeDtypeStruct((B,), jnp.int32,
+                                sharding=SH.replicated(mesh))
+    if fam in ("dense", "vlm", "moe"):
+        kind = "moe" if fam == "moe" else "dense"
+        p = _block_params_spec(cfg, mesh, pc, kind)
+        kv = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape[1:], s.dtype,
+                                           sharding=_drop_lead(s.sharding)),
+            cache.kv)
+        probes.append(Probe("layer", _decode_probe_fn(cfg, kind),
+                            (p, x, kv, clen), cfg.num_layers, 1))
+    elif fam == "ssm":
+        p = _block_params_spec(cfg, mesh, pc, "mamba")
+        ssm = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape[1:], s.dtype,
+                                           sharding=_drop_lead(s.sharding)),
+            cache.ssm)
+        probes.append(Probe("layer", _decode_probe_fn(cfg, "mamba"),
+                            (p, x, ssm, clen), cfg.num_layers, 1))
+    elif fam == "hybrid":
+        every = cfg.attn_every or cfg.num_layers
+        g = cfg.num_layers // every
+        p = _block_params_spec(cfg, mesh, pc, "mamba")
+        ssm = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape[1:], s.dtype,
+                                           sharding=_drop_lead(s.sharding)),
+            cache.ssm)
+        probes.append(Probe("mamba_layer", _decode_probe_fn(cfg, "mamba"),
+                            (p, x, ssm, clen), cfg.num_layers, g))
+    elif fam == "encdec":
+        p = _block_params_spec(cfg, mesh, pc, "encdec_dec")
+        kv = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape[1:], s.dtype,
+                                           sharding=_drop_lead(s.sharding)),
+            cache.kv)
+        probes.append(Probe("layer", _decode_probe_fn(cfg, "encdec_dec"),
+                            (p, x, kv, clen, cache.enc),
+                            cfg.num_layers, 1))
+    return probes
+
+
+def _drop_lead(sharding):
+    return NamedSharding(sharding.mesh, PS(*sharding.spec[1:]))
+
+
+def ssm_analytic_correction(cfg: ModelConfig, shape: ShapeConfig):
+    """FLOPs/bytes the inner time-scan hides from cost analysis."""
+    if cfg.family not in ("ssm", "hybrid") or shape.kind == "decode":
+        return 0.0, 0.0
+    t = shape.seq_len
+    b = shape.global_batch
+    step_flops = 8.0 * b * cfg.d_inner * cfg.ssm_state
+    step_bytes = 8.0 * b * cfg.d_inner * cfg.ssm_state  # h read+write f32
+    mult = 3.0 if shape.kind == "train" else 1.0        # fwd+bwd recompute
+    missing = (t - 1) * cfg.num_layers * mult
+    return step_flops * missing, step_bytes * missing

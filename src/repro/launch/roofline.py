@@ -1,0 +1,182 @@
+"""Roofline extraction from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), hardware = TPU v5e:
+
+    T_compute    = HLO_FLOPs / (chips * 197e12)        [bf16 MXU peak]
+    T_memory     = HLO_bytes / (chips * 819e9)         [HBM]
+    T_collective = collective_bytes / (chips * 45e9)   [ICI per link]
+
+XLA's cost analysis counts ``lax.scan`` bodies ONCE (verified empirically),
+so totals are *composed*: the full step artifact plus (trip_count - 1) x the
+separately-compiled scan-body probe for every scanned layer stack
+(DESIGN.md section 7).  The SSM time-recurrence contributes an analytic
+correction (its scan body is elementwise; projections dominate).
+
+Collective bytes are parsed from the compiled HLO text — operand bytes of
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # bytes/s / chip
+ICI_BW = 45e9            # bytes/s / link (~50 GB/s nominal)
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_COLLECTIVE_RE = re.compile(
+    r"=\s+(\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_SHAPE_RE = re.compile(r"\b(f64|f32|f16|bf16|f8e4m3fn|f8e5m2|s64|u64|s32|u32|"
+                       r"s16|u16|s8|u8|pred)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> dict:
+    """Sum *result* bytes per collective kind (per device).
+
+    HLO lines read ``%op = f32[SHAPE]{layout} all-gather(%operand), ...`` —
+    operands carry no type in optimized HLO text, so we take the result
+    shape.  For all-reduce / all-to-all / collective-permute the result
+    equals the operand; for all-gather the result is the fully gathered
+    buffer (~= bytes received per device on a ring); for reduce-scatter it
+    under-counts by the shard factor (noted in EXPERIMENTS.md — RS traffic
+    in our steps is a small share).  ``-done`` ops are skipped.
+    """
+    out: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        if "-done(" in line:
+            continue
+        m = _COLLECTIVE_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(2).lower()
+        bytes_ = sum(_shape_bytes(d, s)
+                     for d, s in _SHAPE_RE.findall(m.group(1)))
+        out[kind] = out.get(kind, 0) + bytes_
+    return out
+
+
+_CONVERT_RE = re.compile(
+    r"=\s+([a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s+convert\(")
+
+
+def convert_bytes_from_hlo(hlo_text: str) -> int:
+    """Result bytes of ``convert`` ops — on the CPU backend every bf16 dot
+    upcasts its operands to f32 (no native bf16 matmul), traffic that does
+    NOT exist on the TPU MXU.  Recorded so EXPERIMENTS.md can report a
+    TPU-adjusted memory term alongside the raw one."""
+    total = 0
+    for line in hlo_text.splitlines():
+        m = _CONVERT_RE.search(line)
+        if m:
+            total += sum(_shape_bytes(d, s)
+                         for d, s in _SHAPE_RE.findall(m.group(1)))
+    return total
+
+
+@dataclasses.dataclass
+class CostTerms:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_by_kind: dict = dataclasses.field(default_factory=dict)
+    conv_bytes: float = 0.0
+
+    def scaled(self, k: float) -> "CostTerms":
+        return CostTerms(self.flops * k, self.bytes * k, self.coll_bytes * k,
+                         {kk: v * k for kk, v in self.coll_by_kind.items()},
+                         self.conv_bytes * k)
+
+    def __add__(self, o: "CostTerms") -> "CostTerms":
+        kinds = dict(self.coll_by_kind)
+        for k, v in o.coll_by_kind.items():
+            kinds[k] = kinds.get(k, 0) + v
+        return CostTerms(self.flops + o.flops, self.bytes + o.bytes,
+                         self.coll_bytes + o.coll_bytes, kinds,
+                         self.conv_bytes + o.conv_bytes)
+
+
+def cost_terms(compiled) -> CostTerms:
+    """NOTE: XLA analyzes the *partitioned* module — all values returned here
+    are PER-DEVICE (verified against analytic counts in EXPERIMENTS.md)."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):  # older jax returns [dict]
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0))
+    bytes_ = float(ca.get("bytes accessed", 0.0))
+    text = compiled.as_text()
+    coll = collective_bytes_from_hlo(text)
+    return CostTerms(flops, bytes_, sum(coll.values()), coll,
+                     float(convert_bytes_from_hlo(text)))
+
+
+@dataclasses.dataclass
+class Roofline:
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    model_flops: float
+    hlo_flops: float
+    chips: int
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def usefulness(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs, both per-device."""
+        per_dev = self.model_flops / self.chips
+        return per_dev / self.hlo_flops if self.hlo_flops else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of peak sustained if the dominant term is the wall:
+        useful compute time / max(terms)."""
+        t_useful = self.model_flops / (self.chips * PEAK_FLOPS)
+        wall = max(self.t_compute, self.t_memory, self.t_collective)
+        return t_useful / wall if wall else 0.0
+
+
+def make_roofline(total: CostTerms, chips: int, model_flops: float) -> Roofline:
+    """``total`` is per-device (see cost_terms), so terms divide by ONE
+    chip's peak — the global formula HLO_FLOPs_global/(chips*peak) is
+    identical since HLO_FLOPs_global = chips * per-device."""
+    return Roofline(
+        t_compute=total.flops / PEAK_FLOPS,
+        t_memory=total.bytes / HBM_BW,
+        t_collective=total.coll_bytes / ICI_BW,
+        model_flops=model_flops,
+        hlo_flops=total.flops,
+        chips=chips,
+    )
+
+
+def model_flops_estimate(cfg, shape) -> float:
+    """MODEL_FLOPS = 6*N*D (train) / 2*N*D (prefill/decode), N = active."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * shape.global_batch  # decode: one token/seq

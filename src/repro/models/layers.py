@@ -1,0 +1,315 @@
+"""Transformer building blocks: norms, RoPE, GQA attention (bias/SWA), MLP.
+
+All functions are pure; params are dicts produced from the spec trees in this
+module.  Attention dispatches between the XLA einsum path (dry-run/roofline —
+XLA cost analysis sees the FLOPs) and the Pallas flash kernel (TPU hot path,
+validated in interpret mode).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .params import P
+
+# ----------------------------------------------------------------- norms
+
+
+def norm_spec(cfg: ModelConfig):
+    if cfg.norm == "layernorm":
+        return {"scale": P((cfg.d_model,), (None,), "ones"),
+                "bias": P((cfg.d_model,), (None,), "zeros")}
+    return {"scale": P((cfg.d_model,), (None,), "ones")}
+
+
+def apply_norm(params, x, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if "bias" in params:  # layernorm
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        return (y * params["scale"] + params["bias"]).astype(x.dtype)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) * params["scale"]).astype(x.dtype)
+
+
+# ------------------------------------------------------------------ rope
+
+
+def rope_freqs(cfg: ModelConfig, positions: jax.Array) -> tuple:
+    """positions [*, T] -> (sin, cos) each [*, T, hd/2] f32."""
+    hd = cfg.hd
+    half = hd // 2
+    inv = 1.0 / (cfg.rope_theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rope(x: jax.Array, sin: jax.Array, cos: jax.Array) -> jax.Array:
+    """x [B, T, H, hd]; sin/cos [B, T, hd/2] (broadcast over heads)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    s, c = sin[..., None, :], cos[..., None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s],
+                           axis=-1).astype(x.dtype)
+
+
+# ------------------------------------------------------------- attention
+
+
+def attention_spec(cfg: ModelConfig):
+    d, hd = cfg.d_model, cfg.hd
+    h = _eff_heads(cfg)
+    spec = {
+        "wq": P((d, h * hd), ("fsdp", "tp")),
+        "wk": P((d, cfg.num_kv_heads * hd), ("fsdp", "tp")),
+        "wv": P((d, cfg.num_kv_heads * hd), ("fsdp", "tp")),
+        "wo": P((h * hd, d), ("tp", "fsdp")),
+    }
+    if cfg.qkv_bias:
+        spec["bq"] = P((h * hd,), ("tp",), "zeros")
+        spec["bk"] = P((cfg.num_kv_heads * hd,), ("tp",), "zeros")
+        spec["bv"] = P((cfg.num_kv_heads * hd,), ("tp",), "zeros")
+    return spec
+
+
+def _eff_heads(cfg: ModelConfig) -> int:
+    """TP-alignment hillclimb (section Perf): when num_heads % tp != 0, the
+    flat->heads reshape forces GSPMD to repartition activations every layer.
+    ``pad_heads_to`` widens the q projection to an aligned head count (the
+    extra heads' wo rows contribute like ordinary heads of a slightly wider
+    perf-variant; the assigned geometry stays 56q/8kv semantically)."""
+    return cfg.pad_heads_to or cfg.num_heads
+
+
+def _project_qkv(params, cfg: ModelConfig, x):
+    b, t, _ = x.shape
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if "bq" in params:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    q = q.reshape(b, t, _eff_heads(cfg), cfg.hd)
+    k = k.reshape(b, t, cfg.num_kv_heads, cfg.hd)
+    v = v.reshape(b, t, cfg.num_kv_heads, cfg.hd)
+    return q, k, v
+
+
+def _sdpa_xla(q, k, v, *, causal: bool, window: int,
+              q_offset: int | jax.Array = 0):
+    """Einsum attention (GQA-aware). q [B,Tq,H,hd]; k/v [B,Tk,KVH,hd].
+
+    ``q_offset``: absolute position of q[0] (decode: Tk-1 or cache length).
+    """
+    b, tq, h, hd = q.shape
+    tk, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, tq, kvh, g, hd)
+    s = jnp.einsum("btkgd,bskd->bktgs", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) / (hd ** 0.5)
+    q_pos = q_offset + jnp.arange(tq)[:, None]
+    k_pos = jnp.arange(tk)[None, :]
+    mask = jnp.ones((tq, tk), bool)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window > 0:
+        mask &= (q_pos - k_pos) < window
+    s = jnp.where(mask[None, None, :, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bktgs,bskd->btkgd", p, v.astype(jnp.float32))
+    return o.reshape(b, tq, h, hd).astype(q.dtype)
+
+
+def _sdpa_blocked(q, k, v, *, causal: bool, window: int, block: int = 0):
+    """Hillclimbed attention (section Perf): block-tiled with
+
+      * causal / sliding-window BLOCK SKIPPING — fully-masked (qb, kb) block
+        pairs are never emitted (~2x fewer logit bytes+flops for causal;
+        ~tk/window for SWA at long context);
+      * bf16 logits and probabilities (f32 running max/sum) — halves the
+        dominant softmax traffic;
+      * dots via ``preferred_element_type=f32`` — no materialized f32
+        upcasts of q/k/v.
+
+    Blocks are a static python loop (not a scan) so XLA cost analysis sees
+    every byte honestly (scan bodies are counted once — DESIGN section 7).
+    """
+    b, tq, h, hd = q.shape
+    tk, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    if block <= 0:
+        block = max(1024, tq // 8)
+    block = min(block, tq, tk)
+    nq, nk = -(-tq // block), -(-tk // block)
+    scale = 1.0 / (hd ** 0.5)
+    qg = q.reshape(b, tq, kvh, g, hd)
+
+    out = []
+    for qi in range(nq):
+        q_blk = qg[:, qi * block:(qi + 1) * block]
+        qb = q_blk.shape[1]
+        m_run = jnp.full((b, kvh, qb, g), -jnp.inf, jnp.float32)
+        l_run = jnp.zeros((b, kvh, qb, g), jnp.float32)
+        acc = jnp.zeros((b, kvh, qb, g, hd), jnp.float32)
+        q_lo, q_hi = qi * block, qi * block + qb - 1
+        for ki in range(nk):
+            k_lo, k_hi = ki * block, min((ki + 1) * block, tk) - 1
+            if causal and k_lo > q_hi:
+                continue  # block fully in the future
+            if window > 0 and (q_lo - k_hi) >= window:
+                continue  # block fully outside the window
+            k_blk = k[:, k_lo:k_hi + 1]
+            v_blk = v[:, k_lo:k_hi + 1]
+            s = jax.lax.dot_general(
+                q_blk, k_blk, (((4,), (3,)), ((0, 2), (0, 2))),
+                preferred_element_type=jnp.float32) * scale
+            # s: [b, kvh, qb, g, kb]
+            q_pos = q_lo + jnp.arange(qb)[:, None]
+            k_pos = k_lo + jnp.arange(k_blk.shape[1])[None, :]
+            mask = jnp.ones((qb, k_blk.shape[1]), bool)
+            if causal:
+                mask &= q_pos >= k_pos
+            if window > 0:
+                mask &= (q_pos - k_pos) < window
+            s = jnp.where(mask[None, None, :, None, :], s, -1e30)
+            m_blk = jnp.max(s, axis=-1)
+            m_new = jnp.maximum(m_run, m_blk)
+            p = jnp.exp(s - m_new[..., None]).astype(jnp.bfloat16)
+            corr = jnp.exp(m_run - m_new)
+            l_run = l_run * corr + jnp.sum(p, axis=-1, dtype=jnp.float32)
+            pv = jax.lax.dot_general(
+                p, v_blk, (((4,), (1,)), ((0, 1), (0, 2))),
+                preferred_element_type=jnp.float32)
+            acc = acc * corr[..., None] + pv
+            m_run = m_new
+        o = acc / jnp.maximum(l_run, 1e-30)[..., None]
+        out.append(o.transpose(0, 2, 1, 3, 4).reshape(b, qb, h, hd))
+    return jnp.concatenate(out, axis=1).astype(q.dtype)
+
+
+def apply_attention(params, cfg: ModelConfig, x, *, positions=None,
+                    attn_impl: str = "xla", kv_cache=None, cache_len=None):
+    """Full attention sub-layer.
+
+    Training/prefill: kv_cache=None -> self-attention over x.
+    Decode: kv_cache=(k, v) [B, S, KVH, hd] ring buffers + cache_len scalar;
+            x is the single new token's hidden state [B, 1, d].
+    Returns (out, new_kv_cache).
+    """
+    b, t, _ = x.shape
+    if positions is None:
+        if kv_cache is not None:
+            # cache_len is PER-ROW [B] — continuous batching mixes depths
+            positions = cache_len[:, None].astype(jnp.int32)
+        else:
+            positions = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32), (b, t))
+    q, k, v = _project_qkv(params, cfg, x)
+    sin, cos = rope_freqs(cfg, positions)
+    q = apply_rope(q, sin, cos)
+    k = apply_rope(k, sin, cos)
+
+    if kv_cache is not None:
+        ck, cv = kv_cache
+        s_max = ck.shape[1]
+        if cfg.sliding_window > 0 and s_max <= cfg.sliding_window:
+            slot = cache_len % s_max          # ring buffer for SWA
+        else:
+            slot = jnp.minimum(cache_len, s_max - 1)
+        rows = jnp.arange(b)
+        ck = ck.at[rows, slot].set(k[:, 0])
+        cv = cv.at[rows, slot].set(v[:, 0])
+        # mask out unwritten cache tail via window/causal logic
+        o = _sdpa_decode(q, ck, cv, cache_len, cfg.sliding_window)
+        out = o.reshape(b, t, -1) @ params["wo"]
+        return out, (ck, cv)
+
+    if attn_impl == "pallas":
+        from ..kernels.flash_attention.ops import multihead_attention
+        o = multihead_attention(q, k, v, causal=True,
+                                window=cfg.sliding_window, impl="pallas")
+    elif attn_impl == "blocked":
+        o = _sdpa_blocked(q, k, v, causal=True, window=cfg.sliding_window,
+                          block=cfg.attn_block)
+    else:
+        o = _sdpa_xla(q, k, v, causal=True, window=cfg.sliding_window)
+    out = o.reshape(b, t, -1) @ params["wo"]
+    return out, None
+
+
+def _sdpa_decode(q, ck, cv, cache_len, window: int):
+    """One-token attention over the cache. q [B,1,H,hd], cache [B,S,KVH,hd],
+    cache_len [B] (per-row depth)."""
+    b, _, h, hd = q.shape
+    s, kvh = ck.shape[1], ck.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, kvh, g, hd)
+    # dots read the bf16 cache directly with f32 accumulation — materialized
+    # f32 upcasts of the whole cache were the decode memory hot spot
+    # (section Perf, hillclimb 3)
+    logits = jax.lax.dot_general(
+        qg, ck, (((3,), (3,)), ((0, 1), (0, 2))),
+        preferred_element_type=jnp.float32) / (hd ** 0.5)  # [b, kvh, g, s]
+    k_pos = jnp.arange(s)[None, None, None, :]
+    lens = cache_len[:, None, None, None]
+    valid = k_pos <= lens
+    if window > 0 and s <= window:
+        # ring buffer: every slot is live once the cache has wrapped
+        valid = valid | (lens >= s)
+    logits = jnp.where(valid, logits, -1e30)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    p = jnp.exp(logits - m).astype(ck.dtype)      # bf16 probabilities
+    l = jnp.sum(p, axis=-1, keepdims=True, dtype=jnp.float32)
+    o = jax.lax.dot_general(
+        p, cv, (((3,), (1,)), ((0, 1), (0, 2))),
+        preferred_element_type=jnp.float32)       # [b, kvh, g, hd]
+    o = o / jnp.maximum(l, 1e-30)
+    return o.reshape(b, 1, h, hd).astype(q.dtype)
+
+
+# ------------------------------------------------------------------- mlp
+
+
+def mlp_spec(cfg: ModelConfig, d_ff: int | None = None):
+    d, ff = cfg.d_model, d_ff or cfg.d_ff
+    if cfg.act == "swiglu":
+        return {
+            "wi": P((d, ff), ("fsdp", "tp")),
+            "wg": P((d, ff), ("fsdp", "tp")),
+            "wo": P((ff, d), ("tp", "fsdp")),
+        }
+    return {
+        "wi": P((d, ff), ("fsdp", "tp")),
+        "wo": P((ff, d), ("tp", "fsdp")),
+    }
+
+
+def apply_mlp(params, cfg: ModelConfig, x):
+    if "wg" in params:
+        h = jax.nn.silu(x @ params["wg"]) * (x @ params["wi"])
+    else:
+        h = jax.nn.gelu(x @ params["wi"])
+    return h @ params["wo"]
+
+
+# ------------------------------------------------------------- embeddings
+
+
+def embedding_spec(cfg: ModelConfig):
+    spec = {"tok": P((cfg.vocab_size, cfg.d_model), ("tp", "fsdp"), "small_normal",
+                     scale=1.0)}
+    if not cfg.tie_embeddings:
+        spec["head"] = P((cfg.d_model, cfg.vocab_size), ("fsdp", "tp"))
+    return spec
+
+
+def embed_tokens(params, tokens):
+    return params["tok"][tokens]
+
+
+def lm_logits(params, cfg: ModelConfig, h):
+    if cfg.tie_embeddings:
+        return h @ params["tok"].T
+    return h @ params["head"]

@@ -1,0 +1,106 @@
+"""Mixture-of-Experts layer with Atos-style capacity dispatch.
+
+Token->expert routing is a dynamic irregular scatter — the same pattern as
+the paper's task queue.  Slot reservation inside each expert's capacity
+buffer uses the *prefix-sum reservation* primitive from ``core/queue.py``
+(DESIGN.md section 3): for expert e, the k-th routed token (in wavefront
+order) takes slot k; tokens past capacity are dropped exactly like Atos
+drops on a full queue (and counted, so tests can assert the capacity factor
+is adequate).
+
+Sharding: experts are laid out on the 'expert' logical axis (-> mesh
+'model'), so dispatch/return lower to all-to-alls on the model axis — the
+EP pattern.  The expert FFN itself is a batched einsum over [E, cap, d].
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .params import P
+
+
+def moe_spec(cfg: ModelConfig):
+    d, ff, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    return {
+        "router": P((d, e), (None, None)),
+        "wi": P((e, d, ff), ("expert", "fsdp", None)),
+        "wg": P((e, d, ff), ("expert", "fsdp", None)),
+        "wo": P((e, ff, d), ("expert", None, "fsdp")),
+    }
+
+
+def apply_moe(params, cfg: ModelConfig, x, *, capacity: int | None = None):
+    """x [B, T, d] -> ([B, T, d], aux) with top-k routing + capacity drop.
+
+    Returns (out, metrics) where metrics carries load-balance aux loss and
+    drop counts.
+    """
+    b, t, d = x.shape
+    n_tok = b * t
+    e, k = cfg.num_experts, cfg.num_experts_per_tok
+    if capacity is None:
+        cf = cfg.moe_cap_factor_override or cfg.capacity_factor
+        capacity = int(cf * n_tok * k / e)
+        capacity = max(8, -(-capacity // 8) * 8)
+
+    def ep(buf, spec_tail):
+        """EP hillclimb: pin expert-major buffers to the expert mesh axis so
+        GSPMD routes dispatch/return as all-to-alls instead of replicating
+        the capacity buffers (section Perf, kimi-k2)."""
+        if not cfg.moe_ep_axis:
+            return buf
+        from jax.sharding import PartitionSpec as _PS
+        return jax.lax.with_sharding_constraint(
+            buf, _PS(cfg.moe_ep_axis, *spec_tail))
+
+    xf = x.reshape(n_tok, d)
+    logits = (xf.astype(jnp.float32) @ params["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                     # [N, E]
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)               # [N, k]
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # ---- Atos prefix-sum slot reservation, sort-based so memory stays
+    # O(N*k) (a dense [N*k, E] cumsum would be terabytes at kimi-k2 scale):
+    # sort assignments by expert; a token's slot is its index within its
+    # expert's run, recovered with a segmented iota.
+    flat_expert = gate_idx.reshape(-1)                          # [N*k]
+    nk = flat_expert.shape[0]
+    order = jnp.argsort(flat_expert, stable=True)
+    sorted_e = flat_expert[order]
+    idx = jnp.arange(nk, dtype=jnp.int32)
+    is_start = jnp.concatenate([jnp.ones((1,), bool),
+                                sorted_e[1:] != sorted_e[:-1]])
+    group_start = jax.lax.associative_scan(
+        jnp.maximum, jnp.where(is_start, idx, 0))
+    slot_sorted = idx - group_start
+    slot = jnp.zeros((nk,), jnp.int32).at[order].set(slot_sorted)
+    keep = slot < capacity
+    dropped = jnp.sum((~keep).astype(jnp.int32))
+
+    # dispatch: scatter tokens into [E, cap, d]
+    tok_idx = jnp.repeat(jnp.arange(n_tok, dtype=jnp.int32), k)
+    dst = jnp.where(keep, flat_expert * capacity + slot, e * capacity)
+    buf = jnp.zeros((e * capacity, d), xf.dtype).at[dst].add(
+        jnp.where(keep[:, None], xf[tok_idx], 0), mode="drop")
+    buf = ep(buf.reshape(e, capacity, d), (None, None))
+
+    # expert FFN (swiglu), batched over experts
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, params["wg"])) * \
+        jnp.einsum("ecd,edf->ecf", buf, params["wi"])
+    h = ep(h, (None, None))
+    y = ep(jnp.einsum("ecf,efd->ecd", h, params["wo"]), (None, None))
+
+    # return: gather each assignment's expert output, weight by gate
+    y_flat = y.reshape(e * capacity, d)
+    per_assign = jnp.where(keep[:, None],
+                           y_flat[jnp.where(keep, dst, 0)], 0.0)
+    out = jnp.zeros((n_tok, d), xf.dtype).at[tok_idx].add(
+        per_assign * gate_vals.reshape(-1)[:, None].astype(xf.dtype))
+
+    # load-balance aux (Switch-style; bincount instead of a dense one-hot)
+    frac_tokens = jnp.zeros((e,), jnp.float32).at[flat_expert].add(1.0) / nk
+    frac_probs = jnp.mean(probs, axis=0)
+    aux = e * jnp.sum(frac_tokens * frac_probs)
+    return out.reshape(b, t, d), {"aux_loss": aux, "dropped": dropped}

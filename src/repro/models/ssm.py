@@ -1,0 +1,120 @@
+"""Selective state-space blocks: Mamba1 (falcon-mamba) and Mamba2 (zamba2).
+
+Time mixing runs as a ``lax.scan`` over time with a [B, d_inner, n] carry
+(TPU-friendly: constant VMEM working set per step, activations shard over
+batch x model so the saved-residual footprint is per-device small; see
+DESIGN.md).  Decode is the single recurrence step with (conv_state, ssm_state)
+caches.
+
+Roofline note: the scan body's FLOPs are counted once by XLA cost analysis;
+the roofline analyzer adds the analytic ``T x`` correction for the recurrence
+(which is <1% of the block's FLOPs — the projections dominate).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .params import P
+
+
+class SSMCache(NamedTuple):
+    conv: jax.Array   # [B, conv_k - 1, d_inner]
+    state: jax.Array  # [B, d_inner, n]
+
+
+def mamba_spec(cfg: ModelConfig):
+    d, di, n, k, r = (cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_conv,
+                      cfg.dt_rank)
+    return {
+        "in_proj": P((d, 2 * di), ("fsdp", "tp")),
+        "conv_w": P((k, di), (None, "tp")),
+        "conv_b": P((di,), ("tp",), "zeros"),
+        "x_proj": P((di, r + 2 * n), ("tp", None)),
+        "dt_proj": P((r, di), (None, "tp")),
+        "dt_bias": P((di,), ("tp",), "ones"),
+        "a_log": P((di, n), ("tp", None), "ones"),
+        "d_skip": P((di,), ("tp",), "ones"),
+        "out_proj": P((di, d), ("tp", "fsdp")),
+    }
+
+
+def _ssm_params(params, cfg: ModelConfig, xz):
+    """Shared pre-scan computation. xz [B, T, di] (post conv+silu)."""
+    n, r = cfg.ssm_state, cfg.dt_rank
+    proj = xz @ params["x_proj"]                      # [B, T, r + 2n]
+    dt_r, b_mat, c_mat = jnp.split(proj, [r, r + n], axis=-1)
+    dt = jax.nn.softplus(dt_r @ params["dt_proj"] + params["dt_bias"])
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))  # [di, n]
+    return dt, b_mat, c_mat, a
+
+
+def _causal_conv(params, x, cache=None):
+    """Depthwise causal conv1d. x [B, T, di] -> [B, T, di]."""
+    k = params["conv_w"].shape[0]
+    if cache is not None:
+        ctx = jnp.concatenate([cache, x], axis=1)     # [B, k-1+T, di]
+    else:
+        ctx = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(ctx[:, i:i + x.shape[1], :] * params["conv_w"][i]
+              for i in range(k))
+    new_cache = ctx[:, -(k - 1):, :] if k > 1 else None
+    return out + params["conv_b"], new_cache
+
+
+def apply_mamba(params, cfg: ModelConfig, x, *, cache: SSMCache | None = None):
+    """x [B, T, d] -> ([B, T, d], new_cache).  T=1 decode when cache given."""
+    b, t, _ = x.shape
+    di, n = cfg.d_inner, cfg.ssm_state
+    xz = x @ params["in_proj"]                        # [B, T, 2di]
+    xs, z = jnp.split(xz, 2, axis=-1)
+    conv_cache = cache.conv if cache is not None else None
+    xs, new_conv = _causal_conv(params, xs, conv_cache)
+    xs = jax.nn.silu(xs)
+    dt, b_mat, c_mat, a = _ssm_params(params, cfg, xs)
+
+    h0 = (cache.state if cache is not None
+          else jnp.zeros((b, di, n), jnp.float32))
+
+    if t == 1:  # decode fast path: one recurrence step, no scan
+        h, y = _ssm_step(h0, (xs[:, 0], dt[:, 0], b_mat[:, 0], c_mat[:, 0]), a)
+        y = y[:, None, :]
+        h_last = h
+    else:
+        def step(h, inp):
+            h, y = _ssm_step(h, inp, a)
+            return h, y
+
+        h_last, ys = jax.lax.scan(
+            step, h0,
+            (xs.transpose(1, 0, 2), dt.transpose(1, 0, 2),
+             b_mat.transpose(1, 0, 2), c_mat.transpose(1, 0, 2)))
+        y = ys.transpose(1, 0, 2)                     # [B, T, di]
+
+    y = y + xs * params["d_skip"]
+    y = y * jax.nn.silu(z)
+    out = y.astype(x.dtype) @ params["out_proj"]
+    new_cache = SSMCache(conv=new_conv, state=h_last)
+    return out, new_cache
+
+
+def _ssm_step(h, inp, a):
+    """h [B, di, n]; inp = (x, dt, b, c) at one time step."""
+    x_t, dt_t, b_t, c_t = inp                         # [B,di],[B,di],[B,n],[B,n]
+    dt_f = dt_t.astype(jnp.float32)
+    da = jnp.exp(dt_f[..., None] * a[None])           # [B, di, n]
+    dbx = (dt_f * x_t.astype(jnp.float32))[..., None] * \
+        b_t.astype(jnp.float32)[:, None, :]           # [B, di, n]
+    h = da * h + dbx
+    y = jnp.einsum("bdn,bn->bd", h, c_t.astype(jnp.float32))
+    return h, y.astype(x_t.dtype)
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype) -> SSMCache:
+    return SSMCache(
+        conv=jnp.zeros((batch, cfg.ssm_conv - 1, cfg.d_inner), dtype),
+        state=jnp.zeros((batch, cfg.d_inner, cfg.ssm_state), jnp.float32),
+    )

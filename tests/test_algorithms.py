@@ -1,0 +1,124 @@
+"""Case-study correctness + the paper's quantitative claims at test scale."""
+import jax.numpy as jnp
+import networkx as nx
+import numpy as np
+import pytest
+
+from repro.algorithms.bfs import bfs_bsp, bfs_speculative
+from repro.algorithms.coloring import coloring_async, coloring_bsp, \
+    validate_coloring
+from repro.algorithms.pagerank import pagerank_async, pagerank_bsp, \
+    pagerank_reference
+from repro.core import SchedulerConfig
+from repro.graph import grid2d, permute_vertices, rmat
+
+
+def _nx_dists(g, source):
+    G = nx.Graph()
+    G.add_nodes_from(range(g.num_vertices))
+    rp, ci = np.asarray(g.row_ptr), np.asarray(g.col_idx)
+    for v in range(g.num_vertices):
+        for e in range(rp[v], rp[v + 1]):
+            G.add_edge(v, int(ci[e]))
+    ref = np.full(g.num_vertices, 0x7FFFFFFF, np.int64)
+    for k, d in nx.single_source_shortest_path_length(G, source).items():
+        ref[k] = d
+    return ref
+
+
+GRAPHS = {
+    "scale_free": rmat(8, 8, seed=1),
+    "mesh_like": grid2d(20, 20),
+}
+
+
+@pytest.mark.parametrize("gname", list(GRAPHS))
+def test_bfs_bsp_correct(gname):
+    g = GRAPHS[gname]
+    dist, info = bfs_bsp(g, 0)
+    np.testing.assert_array_equal(np.asarray(dist, np.int64), _nx_dists(g, 0))
+    assert info["work"] > 0
+
+
+@pytest.mark.parametrize("gname", list(GRAPHS))
+@pytest.mark.parametrize("strategy", ["merge_path", "per_item"])
+@pytest.mark.parametrize("persistent", [True, False])
+def test_bfs_speculative_correct(gname, strategy, persistent):
+    g = GRAPHS[gname]
+    cfg = SchedulerConfig(num_workers=8, fetch_size=4, persistent=persistent,
+                          max_rounds=100000)
+    dist, info = bfs_speculative(g, 0, cfg, strategy=strategy)
+    np.testing.assert_array_equal(np.asarray(dist, np.int64), _nx_dists(g, 0))
+    assert info["dropped"] == 0
+    # overwork is bounded (paper: small constant factor over n)
+    reached = int((_nx_dists(g, 0) < 0x7FFFFFFF).sum())
+    assert info["work"] >= reached - 1
+    assert info["work"] <= 4 * reached
+
+
+def test_bfs_small_budget_still_correct():
+    g = GRAPHS["scale_free"]
+    cfg = SchedulerConfig(num_workers=4, fetch_size=2, max_rounds=100000)
+    dist, info = bfs_speculative(g, 0, cfg, strategy="merge_path",
+                                 work_budget=8)  # heavy truncation
+    np.testing.assert_array_equal(np.asarray(dist, np.int64), _nx_dists(g, 0))
+
+
+@pytest.mark.parametrize("gname", list(GRAPHS))
+def test_pagerank_matches_power_iteration(gname):
+    g = GRAPHS[gname]
+    ref = pagerank_reference(g, iters=300)
+    r_bsp, _ = pagerank_bsp(g, eps=1e-7)
+    cfg = SchedulerConfig(num_workers=8, fetch_size=4, max_rounds=100000)
+    r_async, info = pagerank_async(g, cfg, eps=1e-7)
+    assert float(jnp.max(jnp.abs(r_bsp - ref))) < 1e-3
+    assert float(jnp.max(jnp.abs(r_async - ref))) < 1e-3
+    assert info["max_residue"] <= 1e-7
+
+
+def test_pagerank_async_does_less_work_on_scale_free():
+    """Paper Table 4: async PageRank workload ratio < 1 vs BSP."""
+    g = GRAPHS["scale_free"]
+    _, info_bsp = pagerank_bsp(g, eps=1e-6)
+    cfg = SchedulerConfig(num_workers=8, fetch_size=4, max_rounds=100000)
+    _, info_async = pagerank_async(g, cfg, eps=1e-6)
+    assert info_async["work"] < info_bsp["work"]
+
+
+@pytest.mark.parametrize("gname", list(GRAPHS))
+def test_coloring_bsp_valid(gname):
+    g = GRAPHS[gname]
+    colors, info = coloring_bsp(g)
+    assert validate_coloring(g, colors)
+    assert int(jnp.max(colors)) + 1 <= int(jnp.max(g.degrees())) + 1
+
+
+@pytest.mark.parametrize("gname", list(GRAPHS))
+@pytest.mark.parametrize("persistent", [True, False])
+def test_coloring_async_valid(gname, persistent):
+    g = GRAPHS[gname]
+    cfg = SchedulerConfig(num_workers=8, fetch_size=4, persistent=persistent,
+                          max_rounds=100000)
+    colors, info = coloring_async(g, cfg)
+    assert validate_coloring(g, colors)
+    assert info["dropped"] == 0
+
+
+def test_coloring_async_less_overwork_than_bsp():
+    """Paper section 6.4: relaxed coloring reduces overwork vs BSP."""
+    g = GRAPHS["scale_free"]
+    _, bsp = coloring_bsp(g)
+    cfg = SchedulerConfig(num_workers=8, fetch_size=4, max_rounds=100000)
+    _, asy = coloring_async(g, cfg)
+    assert asy["work"] < bsp["work"]
+
+
+def test_coloring_permutation_reduces_overwork():
+    """Paper section 6.4: random ID permutation cuts conflicts sharply."""
+    g = grid2d(24, 24)
+    perm = np.random.default_rng(0).permutation(g.num_vertices).astype(np.int32)
+    gp = permute_vertices(g, perm)
+    cfg = SchedulerConfig(num_workers=16, fetch_size=8, max_rounds=100000)
+    _, sorted_info = coloring_async(g, cfg)
+    _, permuted_info = coloring_async(gp, cfg)
+    assert permuted_info["work"] < sorted_info["work"]

@@ -1,0 +1,72 @@
+"""Data pipeline determinism + continuous-batching engine correctness."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import smoke_config
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.models import transformer as T
+from repro.models.params import init_params
+from repro.serving.engine import (ContinuousBatchingEngine, Request,
+                                  decode_single)
+
+KEY = jax.random.PRNGKey(1)
+
+
+def test_data_deterministic_and_resumable():
+    cfg = DataConfig(vocab_size=100, seq_len=16, global_batch=4)
+    a = SyntheticLM(cfg).batch(7)
+    b = SyntheticLM(cfg).batch(7)  # fresh pipeline, same step
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = SyntheticLM(cfg).batch(8)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+
+
+def test_data_labels_shifted():
+    cfg = DataConfig(vocab_size=100, seq_len=16, global_batch=2)
+    b = SyntheticLM(cfg).batch(0)
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+def test_data_shards_disjoint():
+    cfg = DataConfig(vocab_size=1000, seq_len=32, global_batch=8,
+                     num_shards=4)
+    batches = [SyntheticLM(cfg, shard_id=s).batch(0) for s in range(4)]
+    assert all(b["tokens"].shape == (2, 32) for b in batches)
+    flat = [tuple(b["tokens"].ravel()) for b in batches]
+    assert len(set(flat)) == 4  # different streams per shard
+
+
+@pytest.mark.parametrize("arch", ["stablelm-1.6b", "olmoe-1b-7b",
+                                  "falcon-mamba-7b", "zamba2-1.2b",
+                                  "seamless-m4t-medium"])
+def test_engine_matches_single_decode(arch):
+    cfg = smoke_config(arch)
+    params = init_params(T.model_spec(cfg), KEY, jnp.float32)
+    reqs = [Request(uid=i, prompt=[(7 * i + 3) % cfg.vocab_size,
+                                   (11 * i + 5) % cfg.vocab_size],
+                    max_new_tokens=2 + (i % 3)) for i in range(4)]
+    eng = ContinuousBatchingEngine(cfg, params, num_slots=2, max_len=32)
+    res = eng.run(reqs)
+    for r in reqs:
+        ref = decode_single(cfg, params, r.prompt, r.max_new_tokens, 32)
+        assert res["outputs"][r.uid] == ref, r.uid
+
+
+def test_continuous_beats_bsp_occupancy():
+    """The Atos scheduler admits into freed slots -> higher occupancy and
+    fewer wavefronts than the barrier baseline (small-frontier claim)."""
+    cfg = smoke_config("stablelm-1.6b")
+    params = init_params(T.model_spec(cfg), KEY, jnp.float32)
+    # skewed lengths -> convoy effect under BSP
+    reqs = [Request(uid=i, prompt=[i + 1], max_new_tokens=(8 if i % 4 == 0
+                                                           else 2))
+            for i in range(8)]
+    stats = {}
+    for mode in ["continuous", "bsp"]:
+        eng = ContinuousBatchingEngine(cfg, params, num_slots=4,
+                                       max_len=32, mode=mode)
+        stats[mode] = eng.run(reqs)["stats"]
+    assert stats["continuous"].wavefronts < stats["bsp"].wavefronts
+    assert stats["continuous"].mean_occupancy > stats["bsp"].mean_occupancy

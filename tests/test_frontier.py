@@ -1,0 +1,65 @@
+"""Expansion strategies: merge-path LBS vs per-item produce the same work."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import expand_merge_path, expand_per_item
+from repro.graph import erdos, rmat
+
+
+def _edge_set(ex):
+    return sorted(
+        (int(s), int(n))
+        for s, n, v in zip(np.asarray(ex.src), np.asarray(ex.nbr),
+                           np.asarray(ex.valid)) if v)
+
+
+@pytest.mark.parametrize("gen,seed", [(rmat, 0), (erdos, 1)])
+def test_strategies_agree(gen, seed):
+    g = rmat(6, 4, seed=seed) if gen is rmat else erdos(64, 256, seed=seed)
+    items = jnp.array([0, 5, 9, 13, 21, 33], dtype=jnp.int32)
+    valid = jnp.array([True, True, False, True, True, True])
+    max_deg = int(jnp.max(g.degrees()))
+    ex_mp = expand_merge_path(items, valid, g.row_ptr, g.col_idx,
+                              work_budget=6 * max_deg)
+    ex_pi = expand_per_item(items, valid, g.row_ptr, g.col_idx,
+                            max_degree=max_deg)
+    assert _edge_set(ex_mp) == _edge_set(ex_pi)
+    assert int(ex_mp.total) == int(ex_pi.total)
+
+
+def test_merge_path_truncates_at_budget():
+    g = rmat(6, 4, seed=0)
+    items = jnp.arange(16, dtype=jnp.int32)
+    valid = jnp.ones(16, bool)
+    ex = expand_merge_path(items, valid, g.row_ptr, g.col_idx, work_budget=8)
+    assert int(jnp.sum(ex.valid.astype(jnp.int32))) == min(8, int(ex.total))
+
+
+def test_owner_maps_back_to_wavefront_index():
+    g = erdos(32, 128, seed=3)
+    items = jnp.array([3, 7, 11], dtype=jnp.int32)
+    valid = jnp.ones(3, bool)
+    ex = expand_merge_path(items, valid, g.row_ptr, g.col_idx, 64)
+    src = np.asarray(ex.src)[np.asarray(ex.valid)]
+    owner = np.asarray(ex.owner)[np.asarray(ex.valid)]
+    assert (src == np.asarray(items)[owner]).all()
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.integers(0, 20), min_size=1, max_size=16))
+def test_lbs_owner_rank_invariants(degs):
+    """LBS over an arbitrary degree vector: every work unit maps to the row
+    that owns it, with in-row rank < degree."""
+    scan = jnp.cumsum(jnp.asarray(degs, dtype=jnp.int32))
+    total = int(scan[-1])
+    from repro.kernels.frontier_expand.ref import lbs_ref
+    owner, rank = lbs_ref(scan, max(total, 1))
+    owner, rank = np.asarray(owner)[:total], np.asarray(rank)[:total]
+    excl = np.concatenate([[0], np.asarray(scan)[:-1]])
+    for k in range(total):
+        o = owner[k]
+        assert degs[o] > 0
+        assert 0 <= rank[k] < degs[o]
+        assert excl[o] + rank[k] == k

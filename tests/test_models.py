@@ -1,0 +1,128 @@
+"""Per-arch smoke tests: reduced config, one forward/train step, shapes, no
+NaNs (the FULL configs are exercised via the dry-run only)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import SHAPES, supports_shape
+from repro.configs.registry import ARCH_IDS, get_config, smoke_config
+from repro.models import transformer as T
+from repro.models.params import count_params, init_params
+
+KEY = jax.random.PRNGKey(0)
+B, TXT = 2, 16
+
+
+def _batch(cfg):
+    batch = {
+        "tokens": jax.random.randint(KEY, (B, TXT), 0, cfg.vocab_size),
+        "labels": jax.random.randint(KEY, (B, TXT), 0, cfg.vocab_size),
+    }
+    if cfg.family == "vlm":
+        batch["patch_emb"] = jax.random.normal(
+            KEY, (B, cfg.frontend_len, cfg.d_model))
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(
+            KEY, (B, cfg.frontend_len, cfg.d_model))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_and_grad(arch):
+    cfg = smoke_config(arch)
+    params = init_params(T.model_spec(cfg), KEY, jnp.float32)
+    batch = _batch(cfg)
+    logits, aux = T.forward(params, cfg, batch)
+    assert logits.shape == (B, TXT, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    loss, grads = jax.value_and_grad(
+        lambda p: T.loss_fn(p, cfg, batch))(params)
+    assert bool(jnp.isfinite(loss))
+    for leaf in jax.tree.leaves(grads):
+        assert bool(jnp.all(jnp.isfinite(leaf)))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_decode_steps(arch):
+    cfg = smoke_config(arch)
+    params = init_params(T.model_spec(cfg), KEY, jnp.float32)
+    cache = T.init_cache(cfg, B, 32, jnp.float32)
+    tok = jax.random.randint(KEY, (B, 1), 0, cfg.vocab_size)
+    for _ in range(3):
+        logits, cache = T.decode_step(params, cfg, cache, tok)
+        assert logits.shape == (B, cfg.vocab_size)
+        assert bool(jnp.all(jnp.isfinite(logits)))
+        tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+    assert int(cache.length[0]) == 3
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_param_counts(arch):
+    """The spec tree must agree with the analytic weight-matrix estimate to
+    <0.1% (validates every config against its published size)."""
+    cfg = get_config(arch)
+    exact = cfg.param_count()
+    assert exact == count_params(T.model_spec(cfg))
+    approx = cfg._analytic_param_count()
+    assert abs(exact - approx) / exact < 1e-3
+
+
+def test_assigned_shape_skips():
+    """long_500k runs only for sub-quadratic archs (DESIGN section 5)."""
+    long = SHAPES["long_500k"]
+    runs = {a for a in ARCH_IDS if supports_shape(get_config(a), long)}
+    assert runs == {"zamba2-1.2b", "falcon-mamba-7b", "h2o-danube-3-4b"}
+
+
+def test_prefill_decode_consistency_ssm():
+    """Mamba: forward over T tokens == T sequential decode steps."""
+    cfg = smoke_config("falcon-mamba-7b")
+    params = init_params(T.model_spec(cfg), KEY, jnp.float32)
+    toks = jax.random.randint(KEY, (1, 8), 0, cfg.vocab_size)
+    logits_fwd, _ = T.forward(params, cfg, {"tokens": toks})
+    cache = T.init_cache(cfg, 1, 16, jnp.float32)
+    for i in range(8):
+        logits_dec, cache = T.decode_step(params, cfg, cache, toks[:, i:i + 1])
+    np.testing.assert_allclose(np.asarray(logits_fwd[0, -1]),
+                               np.asarray(logits_dec[0]), atol=1e-4)
+
+
+def test_prefill_decode_consistency_dense():
+    cfg = smoke_config("minitron-4b")
+    params = init_params(T.model_spec(cfg), KEY, jnp.float32)
+    toks = jax.random.randint(KEY, (1, 8), 0, cfg.vocab_size)
+    logits_fwd, _ = T.forward(params, cfg, {"tokens": toks})
+    cache = T.init_cache(cfg, 1, 16, jnp.float32)
+    for i in range(8):
+        logits_dec, cache = T.decode_step(params, cfg, cache, toks[:, i:i + 1])
+    np.testing.assert_allclose(np.asarray(logits_fwd[0, -1]),
+                               np.asarray(logits_dec[0]), atol=1e-4)
+
+
+def test_swa_matches_full_attention_within_window():
+    """Sliding-window == full attention while T <= window."""
+    import dataclasses
+    cfg = smoke_config("h2o-danube-3-4b")
+    cfg_full = dataclasses.replace(cfg, sliding_window=0)
+    params = init_params(T.model_spec(cfg), KEY, jnp.float32)
+    toks = jax.random.randint(KEY, (1, 8), 0, cfg.vocab_size)  # 8 < 32 window
+    a, _ = T.forward(params, cfg, {"tokens": toks})
+    b, _ = T.forward(params, cfg_full, {"tokens": toks})
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def test_moe_capacity_drops_counted():
+    import dataclasses
+    from repro.models.moe import apply_moe
+    from repro.models.params import init_params as ip
+    from repro.models import transformer as TT
+
+    cfg = smoke_config("olmoe-1b-7b")
+    spec = TT.block_spec(cfg, "moe")["moe"]
+    params = ip(spec, KEY, jnp.float32)
+    x = jax.random.normal(KEY, (2, 16, cfg.d_model))
+    _, m_tight = apply_moe(params, cfg, x, capacity=1)
+    _, m_ample = apply_moe(params, cfg, x, capacity=2 * 16 * 2)
+    assert int(m_tight["dropped"]) > 0
+    assert int(m_ample["dropped"]) == 0

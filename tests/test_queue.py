@@ -1,0 +1,98 @@
+"""Property tests for the wavefront TaskQueue (hypothesis) + unit tests."""
+import collections
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import EMPTY, make_multiqueue, make_queue
+
+
+def test_basic_roundtrip():
+    q = make_queue(16, jnp.array([1, 2, 3]))
+    items, valid, q = q.pop(2)
+    assert list(np.asarray(items)) == [1, 2]
+    assert list(np.asarray(valid)) == [True, True]
+    assert int(q.size) == 1
+
+
+def test_pop_pads_with_empty():
+    q = make_queue(8, jnp.array([7]))
+    items, valid, q = q.pop(4)
+    assert list(np.asarray(valid)) == [True, False, False, False]
+    assert int(items[1]) == int(EMPTY)
+    assert int(q.size) == 0
+
+
+def test_masked_push_compacts():
+    q = make_queue(8)
+    q = q.push(jnp.array([10, 11, 12, 13]), jnp.array([True, False, True, False]))
+    items, valid, q = q.pop(4)
+    assert list(np.asarray(items))[:2] == [10, 12]
+    assert list(np.asarray(valid)) == [True, True, False, False]
+
+
+def test_overflow_drops_and_counts():
+    q = make_queue(4, jnp.array([1, 2, 3]))
+    q = q.push_dense(jnp.array([4, 5, 6]))
+    assert int(q.size) == 4
+    assert int(q.dropped) == 2
+
+
+def test_wraparound():
+    q = make_queue(4)
+    seen = []
+    q = q.push_dense(jnp.array([0, 1]))
+    for i in range(10):
+        items, valid, q = q.pop(1)
+        assert bool(valid[0])
+        seen.append(int(items[0]))
+        q = q.push(jnp.array([100 + i]), jnp.array([True]))
+    assert seen[:2] == [0, 1]
+    assert int(q.size) == 2
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.lists(st.tuples(st.sampled_from(["push", "pop"]),
+                          st.integers(0, 7)), max_size=40))
+def test_matches_deque_model(ops):
+    """The queue must behave exactly like a FIFO deque with drop-on-full."""
+    cap = 8
+    q = make_queue(cap)
+    model = collections.deque()
+    counter = 0
+    for kind, n in ops:
+        if kind == "push":
+            vals = list(range(counter, counter + n))
+            counter += n
+            q = q.push_dense(jnp.asarray(vals, dtype=jnp.int32)) if n else q
+            for v in vals:
+                if len(model) < cap:
+                    model.append(v)
+        else:
+            if n == 0:
+                continue
+            items, valid, q = q.pop(n)
+            got = [int(x) for x, v in zip(np.asarray(items), np.asarray(valid))
+                   if v]
+            want = [model.popleft() for _ in range(min(n, len(model)))]
+            assert got == want
+        assert int(q.size) == len(model)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(1, 4), st.lists(st.integers(0, 100), min_size=0,
+                                   max_size=30))
+def test_multiqueue_conserves_items(num_lanes, values):
+    mq = make_multiqueue(64, num_lanes)
+    for i, v in enumerate(values):
+        mq = mq.push(i % num_lanes, jnp.array([v]), jnp.array([True]))
+    assert int(mq.size) == len(values)
+    got = []
+    for _ in range(len(values)):
+        items, valid, mq = mq.pop(1)
+        if bool(valid[0]):
+            got.append(int(items[0]))
+    assert sorted(got) == sorted(values)
+    assert int(mq.size) == 0

@@ -1,0 +1,69 @@
+"""Scheduler semantics: persistent == discrete; knobs behave as documented."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import SchedulerConfig, discrete_run, make_queue, persistent_run
+
+
+def countdown(items, valid, state):
+    new = items - 1
+    mask = valid & (new > 0)
+    return new, mask, state + jnp.sum(valid.astype(jnp.int32))
+
+
+@pytest.mark.parametrize("workers,fetch", [(1, 1), (2, 2), (8, 4)])
+def test_persistent_equals_discrete(workers, fetch):
+    seeds = jnp.array([5, 3, 1, 7, 2])
+    cfg = SchedulerConfig(num_workers=workers, fetch_size=fetch,
+                          max_rounds=1000)
+    q1, s1, st1 = persistent_run(countdown, make_queue(256, seeds),
+                                 jnp.int32(0), cfg)
+    q2, s2, st2 = discrete_run(countdown, make_queue(256, seeds),
+                               jnp.int32(0), cfg)
+    assert int(s1) == int(s2) == int(jnp.sum(seeds))  # total work
+    assert int(st1.rounds) == int(st2.rounds)
+    assert int(st1.dropped) == int(st2.dropped) == 0
+
+
+def test_wavefront_width_reduces_rounds():
+    seeds = jnp.arange(1, 20, dtype=jnp.int32)
+    small = SchedulerConfig(num_workers=1, fetch_size=1, max_rounds=10000)
+    large = SchedulerConfig(num_workers=16, fetch_size=4, max_rounds=10000)
+    _, _, st_small = persistent_run(countdown, make_queue(1024, seeds),
+                                    jnp.int32(0), small)
+    _, _, st_large = persistent_run(countdown, make_queue(1024, seeds),
+                                    jnp.int32(0), large)
+    assert int(st_large.rounds) < int(st_small.rounds)
+
+
+def test_stop_condition():
+    cfg = SchedulerConfig(num_workers=2, fetch_size=1, max_rounds=1000)
+    _, s, st = persistent_run(
+        countdown, make_queue(64, jnp.array([100, 100])), jnp.int32(0), cfg,
+        stop=lambda s: s >= 10)
+    assert int(s) >= 10 and int(st.rounds) < 100
+
+
+def test_on_empty_runs_until_stop():
+    cfg = SchedulerConfig(num_workers=1, fetch_size=1, max_rounds=1000)
+
+    def f(items, valid, state):
+        return items, jnp.zeros_like(valid), state
+
+    def on_empty(state):
+        return (jnp.zeros((1,), jnp.int32), jnp.zeros((1,), bool), state + 1)
+
+    _, s, st = persistent_run(f, make_queue(8), jnp.int32(0), cfg,
+                              stop=lambda s: s >= 5, on_empty=on_empty)
+    assert int(s) == 5
+
+
+def test_max_rounds_bounds_runaway():
+    def forever(items, valid, state):
+        return items, valid, state  # re-push everything
+
+    cfg = SchedulerConfig(num_workers=1, fetch_size=1, max_rounds=17)
+    _, _, st = persistent_run(forever, make_queue(8, jnp.array([1])),
+                              jnp.int32(0), cfg)
+    assert int(st.rounds) == 17
