@@ -1,7 +1,10 @@
-"""Shared benchmark utilities: timed runs + CSV emission."""
+"""Shared benchmark utilities: timed runs + CSV/JSON emission."""
 from __future__ import annotations
 
+import json
+import statistics
 import time
+from pathlib import Path
 from typing import Callable
 
 import jax
@@ -22,3 +25,25 @@ def timeit(fn: Callable, *, warmup: int = 1, iters: int = 3) -> float:
 
 def row(name: str, us_per_call: float, derived: str = ""):
     print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def timeit_host(fn: Callable, *, warmup: int = 1, iters: int = 3):
+    """Like ``timeit`` but for host-driven loops whose return value matters:
+    returns (median wall seconds, last result)."""
+    result = None
+    for _ in range(warmup):
+        result = fn()
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        result = fn()
+        times.append(time.perf_counter() - t0)
+    return statistics.median(times), result
+
+
+def emit_json(path: str | Path, payload: dict) -> Path:
+    """Write a benchmark result document; returns the path written."""
+    path = Path(path)
+    path.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
+    print(f"wrote {path}")
+    return path

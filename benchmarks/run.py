@@ -1,7 +1,7 @@
 """Benchmark entry point — one section per paper table/figure.
 
 ``PYTHONPATH=src python -m benchmarks.run [section ...]``
-Sections: table1 table4 figs serving kernels roofline (default: all).
+Sections: table1 table4 figs serving server kernels roofline (default: all).
 Prints ``name,us_per_call,derived`` CSV.
 """
 from __future__ import annotations
@@ -10,14 +10,15 @@ import sys
 
 
 def main() -> None:
-    from . import (bench_figs, bench_kernels, bench_roofline, bench_serving,
-                   bench_table1, bench_table4)
+    from . import (bench_figs, bench_kernels, bench_roofline, bench_server,
+                   bench_serving, bench_table1, bench_table4)
 
     sections = {
         "table1": bench_table1.run,
         "table4": bench_table4.run,
         "figs": bench_figs.run,
         "serving": bench_serving.run,
+        "server": bench_server.run,
         "kernels": bench_kernels.run,
         "roofline": bench_roofline.run,
     }

@@ -26,6 +26,7 @@ from ..core import (SchedulerConfig, WorkCounter, expand_merge_path,
                     expand_per_item, make_queue)
 from ..core import scheduler as sched
 from ..graph.csr import CSRGraph
+from .common import default_work_budget
 
 INF = jnp.int32(0x7FFFFFFF)
 
@@ -81,8 +82,24 @@ def bfs_bsp(graph: CSRGraph, source: int, max_levels: int | None = None):
 
 
 # ------------------------------------------------------------- speculative
-def _make_wavefront_fn(graph: CSRGraph, strategy: str, work_budget: int,
-                       max_degree: int):
+def init_state(graph: CSRGraph, source: int) -> BFSState:
+    """Job-parameterized initial state: dist=INF except the source."""
+    n = graph.num_vertices
+    return BFSState(
+        dist=jnp.full((n,), INF, jnp.int32).at[source].set(0),
+        counter=WorkCounter.zero(),
+    )
+
+
+def make_wavefront_fn(graph: CSRGraph, strategy: str, work_budget: int,
+                      max_degree: int):
+    """Reusable speculative-BFS wavefront body.
+
+    Closed over the graph only — the returned ``f(items, valid, state)`` is a
+    pure :data:`~repro.core.scheduler.WavefrontFn`, so it can drive a
+    single-tenant run (``bfs_speculative``) or serve as one tenant's
+    expansion logic inside the multi-job task server (``repro.server``).
+    """
     def f(items, valid, state: BFSState):
         if strategy == "merge_path":      # CTA worker: task+data-parallel LB
             ex = expand_merge_path(items, valid, graph.row_ptr, graph.col_idx,
@@ -143,21 +160,12 @@ def bfs_speculative(
     """
     n = graph.num_vertices
     max_degree = int(jnp.max(graph.degrees()))
-    if work_budget is None:
-        # LBS budget per wavefront; truncated rows are re-queued, so this is
-        # a throughput knob, not a correctness one.
-        work_budget = cfg.wavefront * max(
-            8, int(float(jnp.mean(graph.degrees())) * 4)
-        )
-    # progress guarantee: the first popped item must always expand fully
-    work_budget = max(work_budget, max_degree)
+    work_budget = default_work_budget(graph, cfg.wavefront, work_budget,
+                                      max_degree=max_degree)
     queue_capacity = queue_capacity or max(4 * n, 1024)
     queue = make_queue(queue_capacity, jnp.array([source], dtype=jnp.int32))
-    state = BFSState(
-        dist=jnp.full((n,), INF, jnp.int32).at[source].set(0),
-        counter=WorkCounter.zero(),
-    )
-    f = _make_wavefront_fn(graph, strategy, work_budget, max_degree)
+    state = init_state(graph, source)
+    f = make_wavefront_fn(graph, strategy, work_budget, max_degree)
     _, state, stats = sched.run(f, queue, state, cfg, trace=trace)
     info = {
         "rounds": int(stats.rounds),

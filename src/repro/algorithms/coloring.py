@@ -120,21 +120,25 @@ def coloring_bsp(
     return colors, {"iters": iters, "work": work}
 
 
-def coloring_async(
-    graph: CSRGraph,
-    cfg: SchedulerConfig,
-    queue_capacity: int | None = None,
-    trace: list | None = None,
-) -> Tuple[jax.Array, dict]:
-    """Alg 6: fused assign/detect uberkernel on the Atos queue.
+def init_state(graph: CSRGraph) -> Tuple["ColorState", jax.Array]:
+    """Job-parameterized initial state + seed tasks (an assign per vertex)."""
+    n = graph.num_vertices
+    state = ColorState(colors=jnp.full((n,), -1, jnp.int32),
+                       counter=WorkCounter.zero())
+    return state, jnp.arange(1, n + 1, dtype=jnp.int32)
+
+
+def make_wavefront_fn(graph: CSRGraph):
+    """Reusable fused assign/detect uberkernel body (Alg 6).
 
     Task encoding: +(v+1) = assign color to v; -(v+1) = detect conflict at v.
-    A wavefront mixes both kinds (and multiple speculation depths).
+    A wavefront mixes both kinds (and multiple speculation depths).  The
+    returned ``f`` is a pure WavefrontFn shared by the single-tenant driver
+    (``coloring_async``) and the task server.
     """
     n = graph.num_vertices
     max_degree = int(jnp.max(graph.degrees()))
     max_colors = max_degree + 1
-    queue_capacity = queue_capacity or max(4 * n, 1024)
 
     def f(items, valid, state: ColorState):
         is_assign = valid & (items > 0)
@@ -165,9 +169,21 @@ def coloring_async(
         counter = state.counter.add(jnp.sum(is_assign.astype(jnp.int32)))
         return out, mask, ColorState(colors=colors, counter=counter)
 
-    queue = make_queue(queue_capacity, jnp.arange(1, n + 1, dtype=jnp.int32))
-    state = ColorState(colors=jnp.full((n,), -1, jnp.int32),
-                       counter=WorkCounter.zero())
+    return f
+
+
+def coloring_async(
+    graph: CSRGraph,
+    cfg: SchedulerConfig,
+    queue_capacity: int | None = None,
+    trace: list | None = None,
+) -> Tuple[jax.Array, dict]:
+    """Alg 6: fused assign/detect uberkernel on the Atos queue."""
+    n = graph.num_vertices
+    queue_capacity = queue_capacity or max(4 * n, 1024)
+    f = make_wavefront_fn(graph)
+    state, seeds = init_state(graph)
+    queue = make_queue(queue_capacity, seeds)
     _, state, stats = sched.run(f, queue, state, cfg, trace=trace)
     info = {
         "rounds": int(stats.rounds),

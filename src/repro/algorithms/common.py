@@ -1,0 +1,26 @@
+"""Budget helpers shared by the queue-driven algorithm drivers."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..graph.csr import CSRGraph
+
+
+def default_work_budget(graph: CSRGraph, wavefront: int,
+                        work_budget: int | None = None,
+                        max_degree: int | None = None) -> int:
+    """LBS (merge-path) work budget per wavefront.
+
+    Truncated rows are re-queued, so this is a throughput knob, not a
+    correctness one — except that the first popped item must always expand
+    fully (progress guarantee), hence the ``max_degree`` floor.  Pass
+    ``max_degree`` if the caller already computed it (saves a device
+    reduction).
+    """
+    if max_degree is None:
+        max_degree = int(jnp.max(graph.degrees()))
+    if work_budget is None:
+        work_budget = wavefront * max(
+            8, int(float(jnp.mean(graph.degrees())) * 4)
+        )
+    return max(work_budget, max_degree)

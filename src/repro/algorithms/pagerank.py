@@ -29,6 +29,7 @@ import jax.numpy as jnp
 from ..core import SchedulerConfig, WorkCounter, expand_merge_path, make_queue
 from ..core import scheduler as sched
 from ..graph.csr import CSRGraph
+from .common import default_work_budget
 
 
 @jax.tree_util.register_dataclass
@@ -153,28 +154,45 @@ def _edge_sources(graph: CSRGraph) -> jax.Array:
     return _EDGE_SRC_CACHE[key]
 
 
-def pagerank_async(
+def init_state(graph: CSRGraph, damping: float = 0.85,
+               seed_count: int | None = None) -> Tuple[PRState, jax.Array]:
+    """Job-parameterized initial state + the seed tasks that prime the queue.
+
+    Every vertex starts with residue ``1 - damping``; the first ``seed_count``
+    vertices (default: all) are pre-enqueued, the rest are found by the
+    rotating re-scan.
+    """
+    n = graph.num_vertices
+    n_seed = n if seed_count is None else min(n, seed_count)
+    state = PRState(
+        rank=jnp.zeros((n,), jnp.float32),
+        residue=jnp.full((n,), 1.0 - damping, jnp.float32),
+        in_queue=jnp.arange(n, dtype=jnp.int32) < n_seed,
+        check_cursor=jnp.int32(0),
+        counter=WorkCounter.zero(),
+    )
+    return state, jnp.arange(n_seed, dtype=jnp.int32)
+
+
+def make_wavefront_fns(
     graph: CSRGraph,
-    cfg: SchedulerConfig,
+    wavefront: int,
+    n_check: int,
     damping: float = 0.85,
     eps: float = 1e-6,
-    check_size: int = 64,
     work_budget: int | None = None,
-    queue_capacity: int | None = None,
-    trace: list | None = None,
-) -> Tuple[jax.Array, dict]:
-    """Alg 4: queue-driven asynchronous PageRank on the Atos scheduler."""
-    n = graph.num_vertices
-    max_degree = int(jnp.max(graph.degrees()))
-    if work_budget is None:
-        work_budget = cfg.wavefront * max(
-            8, int(float(jnp.mean(graph.degrees())) * 4)
-        )
-    work_budget = max(work_budget, max_degree)
-    queue_capacity = queue_capacity or max(8 * n, 1024)
+):
+    """Reusable async-PageRank wavefront bodies: ``(f, on_empty, stop)``.
 
+    ``wavefront`` sizes ``on_empty``'s padding (it must emit a full-width
+    wavefront), ``n_check`` is the rotating re-scan window.  All three
+    returned callables are pure and job-parameterized, shared by the
+    single-tenant driver (``pagerank_async``) and the task server.
+    """
+    n = graph.num_vertices
+    work_budget = default_work_budget(graph, wavefront, work_budget)
     push = _push_wavefront(graph, damping, work_budget)
-    n_check = min(cfg.num_workers * check_size, n)  # distinct ids per window
+    n_check = min(n_check, n)
 
     def f(items, valid, state: PRState):
         residue, rank, in_queue, counter, truncated = push(items, valid, state)
@@ -203,9 +221,9 @@ def pagerank_async(
         new_state = dataclasses.replace(
             state, in_queue=in_queue, check_cursor=state.check_cursor + n_check
         )
-        pad = jnp.zeros((cfg.wavefront,), jnp.int32)
+        pad = jnp.zeros((wavefront,), jnp.int32)
         return (jnp.concatenate([jnp.where(over, check_ids, 0), pad]),
-                jnp.concatenate([over, jnp.zeros((cfg.wavefront,), bool)]),
+                jnp.concatenate([over, jnp.zeros((wavefront,), bool)]),
                 new_state)
 
     def stop(state: PRState):
@@ -213,15 +231,29 @@ def pagerank_async(
         # wavefront — measured as part of the scheduler's fixed cost).
         return jnp.max(state.residue) <= eps
 
-    n_seed = min(n, queue_capacity // 2)
-    queue = make_queue(queue_capacity, jnp.arange(n_seed, dtype=jnp.int32))
-    state = PRState(
-        rank=jnp.zeros((n,), jnp.float32),
-        residue=jnp.full((n,), 1.0 - damping, jnp.float32),
-        in_queue=jnp.arange(n, dtype=jnp.int32) < n_seed,
-        check_cursor=jnp.int32(0),
-        counter=WorkCounter.zero(),
+    return f, on_empty, stop
+
+
+def pagerank_async(
+    graph: CSRGraph,
+    cfg: SchedulerConfig,
+    damping: float = 0.85,
+    eps: float = 1e-6,
+    check_size: int = 64,
+    work_budget: int | None = None,
+    queue_capacity: int | None = None,
+    trace: list | None = None,
+) -> Tuple[jax.Array, dict]:
+    """Alg 4: queue-driven asynchronous PageRank on the Atos scheduler."""
+    n = graph.num_vertices
+    queue_capacity = queue_capacity or max(8 * n, 1024)
+    f, on_empty, stop = make_wavefront_fns(
+        graph, cfg.wavefront, n_check=cfg.num_workers * check_size,
+        damping=damping, eps=eps, work_budget=work_budget,
     )
+    state, seeds = init_state(graph, damping,
+                              seed_count=min(n, queue_capacity // 2))
+    queue = make_queue(queue_capacity, seeds)
     _, state, stats = sched.run(f, queue, state, cfg, stop=stop,
                                 on_empty=on_empty, trace=trace)
     info = {

@@ -32,3 +32,59 @@ class WorkCounter:
 
 def overwork_ratio(counter: WorkCounter, ideal: int) -> float:
     return float(counter.work) / float(max(ideal, 1))
+
+
+@dataclasses.dataclass
+class JobTelemetry:
+    """Per-tenant metering for the multi-job task server (host-side).
+
+    Layered on ``WorkCounter``: ``work`` is the job's counter value at
+    completion, ``ideal_work`` the algorithm's minimum (|V| for our three
+    workloads), so ``overwork`` is the Table 4 metric per tenant.  Rounds are
+    *server* scheduling rounds, so ``latency_rounds`` is queueing delay plus
+    service time — the serving-system view of the paper's round counts.
+    """
+
+    job_id: int
+    algorithm: str
+    graph: str
+    wavefront: int                 # server W — denominator for occupancy
+    ideal_work: int
+    submitted_round: int = 0
+    admitted_round: int = -1       # -1 while waiting for a lane
+    completed_round: int = -1
+    rounds_active: int = 0         # rounds with quota > 0 or an on_empty step
+    items_processed: int = 0       # valid tasks popped for this job
+    work: int = 0                  # WorkCounter at completion
+    dropped: int = 0               # lane overflow drops attributed to the job
+    backpressure_events: int = 0   # rounds the lane was drain-boosted
+    routing_mismatches: int = 0    # packed job_id != lane owner (must be 0)
+
+    @property
+    def latency_rounds(self) -> int:
+        if self.completed_round < 0:
+            return -1
+        return self.completed_round - self.submitted_round
+
+    @property
+    def queue_delay_rounds(self) -> int:
+        if self.admitted_round < 0:
+            return -1
+        return self.admitted_round - self.submitted_round
+
+    @property
+    def occupancy(self) -> float:
+        """Mean fraction of the wavefront this job filled while active."""
+        denom = self.rounds_active * self.wavefront
+        return self.items_processed / denom if denom else 0.0
+
+    @property
+    def overwork(self) -> float:
+        return self.work / max(self.ideal_work, 1)
+
+    def as_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d.update(latency_rounds=self.latency_rounds,
+                 queue_delay_rounds=self.queue_delay_rounds,
+                 occupancy=self.occupancy, overwork=self.overwork)
+        return d

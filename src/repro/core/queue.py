@@ -63,7 +63,19 @@ class TaskQueue:
         Returns ``(items[n], valid[n], queue')``.  Missing items are EMPTY
         with ``valid=False``.  ``n`` is a static wavefront width.
         """
-        k = jnp.minimum(jnp.int32(n), self.size)
+        return self.pop_upto(n, n)
+
+    def pop_upto(self, n: int, quota) -> Tuple[jax.Array, jax.Array, "TaskQueue"]:
+        """Pop up to ``min(quota, n)`` items into an ``n``-wide wavefront.
+
+        ``n`` is the static buffer width (compiled shape); ``quota`` may be a
+        traced scalar — the dynamic share a fairness policy granted this
+        queue for the round (see server/policies.py).  Lanes beyond the quota
+        are EMPTY/invalid, so the same compiled step serves every quota.
+        """
+        k = jnp.minimum(jnp.minimum(jnp.int32(n), self.size),
+                        jnp.asarray(quota, jnp.int32))
+        k = jnp.maximum(k, 0)
         idx = (self.head + jnp.arange(n, dtype=jnp.int32)) % self.capacity
         items = self.buf[idx]
         valid = jnp.arange(n, dtype=jnp.int32) < k
@@ -136,27 +148,59 @@ class MultiQueue:
     def empty(self) -> jax.Array:
         return self.size == 0
 
+    # -------------------------------------------------------- lane plumbing
+    def lane(self, lane_id) -> TaskQueue:
+        """View of a single lane as a standalone ``TaskQueue``."""
+        return jax.tree.map(lambda x: x[lane_id], self.lanes)
+
+    def with_lane(self, lane_id, lane: TaskQueue) -> "MultiQueue":
+        """Write a (possibly updated) lane back into the stack."""
+        lanes = jax.tree.map(
+            lambda full, new: full.at[lane_id].set(new), self.lanes, lane
+        )
+        return dataclasses.replace(self, lanes=lanes)
+
+    def reset_lane(self, lane_id) -> "MultiQueue":
+        """Recycle a lane for a new tenant: empty buffer, zeroed cursors."""
+        cap = self.lanes.buf.shape[1]
+        fresh = TaskQueue(
+            buf=jnp.full((cap,), EMPTY, dtype=jnp.int32),
+            head=jnp.int32(0), tail=jnp.int32(0), dropped=jnp.int32(0),
+        )
+        return self.with_lane(lane_id, fresh)
+
+    def lane_sizes(self) -> jax.Array:
+        return self.lanes.tail - self.lanes.head
+
+    def lane_dropped(self) -> jax.Array:
+        return self.lanes.dropped
+
+    # ----------------------------------------------------------------- api
     def pop(self, n: int) -> Tuple[jax.Array, jax.Array, "MultiQueue"]:
-        """Pop up to ``n`` items from the next non-empty lane (round robin)."""
-        sizes = self.lanes.tail - self.lanes.head
+        """Pop up to ``n`` items from the next non-empty lane (round robin).
+
+        The cursor is stored modulo ``num_lanes`` so it cannot overflow
+        int32 over long runs (it previously grew without bound).
+        """
+        sizes = self.lane_sizes()
         order = (self.rr + jnp.arange(self.num_lanes, dtype=jnp.int32)) % self.num_lanes
         nonempty = sizes[order] > 0
         pick = order[jnp.argmax(nonempty)]  # first non-empty in rr order
 
-        lane = jax.tree.map(lambda x: x[pick], self.lanes)
-        items, valid, lane2 = lane.pop(n)
-        lanes = jax.tree.map(
-            lambda full, new: full.at[pick].set(new), self.lanes, lane2
+        items, valid, lane2 = self.lane(pick).pop(n)
+        return items, valid, dataclasses.replace(
+            self.with_lane(pick, lane2), rr=(pick + 1) % self.num_lanes
         )
-        return items, valid, MultiQueue(lanes=lanes, rr=pick + 1)
+
+    def pop_lane(self, lane_id, n: int, quota=None):
+        """Pop up to ``min(quota, n)`` items from one named lane."""
+        items, valid, lane2 = self.lane(lane_id).pop_upto(
+            n, n if quota is None else quota
+        )
+        return items, valid, self.with_lane(lane_id, lane2)
 
     def push(self, lane_id, items: jax.Array, mask: jax.Array) -> "MultiQueue":
-        lane = jax.tree.map(lambda x: x[lane_id], self.lanes)
-        lane2 = lane.push(items, mask)
-        lanes = jax.tree.map(
-            lambda full, new: full.at[lane_id].set(new), self.lanes, lane2
-        )
-        return dataclasses.replace(self, lanes=lanes)
+        return self.with_lane(lane_id, self.lane(lane_id).push(items, mask))
 
 
 def make_multiqueue(capacity: int, num_lanes: int) -> MultiQueue:

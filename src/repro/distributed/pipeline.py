@@ -40,8 +40,10 @@ def pipeline_apply(stage_fn: Callable, stage_params, x_micro, *, mesh: Mesh,
         p = jax.tree.map(lambda a: a[0], params_local)
         s = jax.lax.axis_index(axis)
         # the carry is stage-varying (each stage holds a different
-        # activation); mark the initial zeros accordingly
-        zero_act = jax.lax.pvary(jnp.zeros_like(x_all[0]), (axis,))
+        # activation); mark the initial zeros accordingly.  jax < 0.5 has no
+        # pvary (no varying-manual-axes tracking) and needs no annotation.
+        pvary = getattr(jax.lax, "pvary", lambda v, _axes: v)
+        zero_act = pvary(jnp.zeros_like(x_all[0]), (axis,))
 
         def tick(carry, t):
             act_in = carry

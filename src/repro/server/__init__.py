@@ -1,0 +1,24 @@
+"""Atos-as-a-service: multi-tenant graph task server (DESIGN.md section 8).
+
+One resident scheduler, per-job MultiQueue lanes, packed (job_id, payload)
+tasks, pluggable fairness policies, backpressure/admission control, and a
+SchedulerConfig autotuner implementing the paper's selection guidelines.
+"""
+from .autotune import Autotuner, DEFAULT_CANDIDATES, graph_class
+from .encoding import (MAX_JOBS, PAYLOAD_BITS, pack, unpack_job,
+                       unpack_natural, unzigzag, zigzag)
+from .engine import (Job, ServerResult, ServerStats, TaskServer,
+                     serve_sequential)
+from .jobs import ALGORITHMS, JobRegistry, JobSpec, Program
+from .policies import (FairnessPolicy, LongestQueueFirst, RoundRobin,
+                       WeightedShare, make_policy)
+
+__all__ = [
+    "Autotuner", "DEFAULT_CANDIDATES", "graph_class",
+    "MAX_JOBS", "PAYLOAD_BITS", "pack", "unpack_job", "unpack_natural",
+    "unzigzag", "zigzag",
+    "Job", "ServerResult", "ServerStats", "TaskServer", "serve_sequential",
+    "ALGORITHMS", "JobRegistry", "JobSpec", "Program",
+    "FairnessPolicy", "LongestQueueFirst", "RoundRobin", "WeightedShare",
+    "make_policy",
+]

@@ -1,0 +1,219 @@
+"""Scheduler configuration autotuner — the paper's selection guidelines, live.
+
+Atos section 7 distills when each launch configuration wins: persistent
+kernels when frontiers are small (launch fixed cost dominates), discrete
+when rounds are few and fat; more workers / larger FETCH_SIZE for
+heavy-tailed frontiers, narrow wavefronts for meshes.  Instead of shipping
+those guidelines as prose, the autotuner *measures* a small candidate grid
+over ``SchedulerConfig = (persistent, num_workers, fetch_size)`` on a
+calibration workload and caches the winner per ``(algorithm, graph_class)``
+(DESIGN.md section 8).
+
+Graph class is the paper's two-regime split: ``scale_free`` (heavy-tailed
+degrees, low diameter) vs ``mesh`` (bounded degree, high diameter), decided
+from degree statistics so one tuned decision covers every graph of the same
+shape.  The default config is always in the candidate set, so the chosen
+config is never slower than the default *on the calibration measurements*.
+Decisions are cached to JSON (survives processes) and logged.
+"""
+from __future__ import annotations
+
+import json
+import logging
+import statistics
+import time
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.scheduler import SchedulerConfig
+from ..graph.csr import CSRGraph
+
+log = logging.getLogger("repro.server.autotune")
+
+#: curated grid: both kernel strategies, narrow->wide wavefronts.  The plain
+#: ``SchedulerConfig()`` default is first — it must always be measured.
+DEFAULT_CANDIDATES: Tuple[SchedulerConfig, ...] = (
+    SchedulerConfig(),                                       # the default
+    SchedulerConfig(num_workers=16, fetch_size=1),
+    SchedulerConfig(num_workers=64, fetch_size=4),
+    SchedulerConfig(num_workers=256, fetch_size=1),
+    SchedulerConfig(num_workers=16, fetch_size=1, persistent=False),
+    SchedulerConfig(num_workers=64, fetch_size=1, persistent=False),
+)
+
+
+def graph_class(graph: CSRGraph) -> str:
+    """Two-regime split from degree statistics (paper's dataset taxonomy)."""
+    deg = graph.degrees()
+    max_deg = float(jnp.max(deg))
+    avg_deg = float(jnp.mean(deg))
+    return "scale_free" if max_deg >= 4.0 * avg_deg + 8.0 else "mesh"
+
+
+def _config_key(cfg: SchedulerConfig) -> str:
+    kind = "persistent" if cfg.persistent else "discrete"
+    return f"{kind}|workers={cfg.num_workers}|fetch={cfg.fetch_size}"
+
+
+def _config_dict(cfg: SchedulerConfig) -> dict:
+    return {"num_workers": cfg.num_workers, "fetch_size": cfg.fetch_size,
+            "persistent": cfg.persistent}
+
+
+def _config_from_dict(d: dict) -> SchedulerConfig:
+    return SchedulerConfig(num_workers=int(d["num_workers"]),
+                           fetch_size=int(d["fetch_size"]),
+                           persistent=bool(d["persistent"]))
+
+
+def _default_runner(algorithm: str, graph: CSRGraph,
+                    cfg: SchedulerConfig) -> None:
+    """One complete calibration run (result discarded; wall time is the
+    signal).  Imported lazily to keep autotune importable standalone."""
+    from ..algorithms import bfs, coloring, pagerank
+
+    if algorithm == "bfs":
+        dist, _ = bfs.bfs_speculative(graph, 0, cfg)
+        jax.block_until_ready(dist)
+    elif algorithm == "pagerank":
+        rank, _ = pagerank.pagerank_async(graph, cfg, eps=1e-4)
+        jax.block_until_ready(rank)
+    elif algorithm == "coloring":
+        colors, _ = coloring.coloring_async(graph, cfg)
+        jax.block_until_ready(colors)
+    else:
+        raise ValueError(f"unknown algorithm {algorithm!r}")
+
+
+class Autotuner:
+    """Measure-once, reuse-everywhere config selection.
+
+    ``tune`` returns the winning :class:`SchedulerConfig` for one
+    ``(algorithm, graph_class)``; ``recommend_for_mix`` aggregates the cached
+    trials across a job mix and picks the config minimizing total
+    calibration wall time — the server's single shared launch configuration.
+    """
+
+    def __init__(
+        self,
+        cache_path: Optional[str | Path] = None,
+        candidates: Sequence[SchedulerConfig] = DEFAULT_CANDIDATES,
+        warmup: int = 1,
+        iters: int = 2,
+        runner=_default_runner,
+    ) -> None:
+        self.cache_path = Path(cache_path) if cache_path else None
+        self.candidates = list(candidates)
+        if not any(c == SchedulerConfig() for c in self.candidates):
+            # the acceptance bar is "no worse than default": always measure it
+            self.candidates.insert(0, SchedulerConfig())
+        self.warmup = warmup
+        self.iters = iters
+        self.runner = runner
+        self._cache: Dict[str, dict] = {}
+        if self.cache_path and self.cache_path.exists():
+            self._cache = json.loads(self.cache_path.read_text())
+            log.info("autotune cache loaded: %d entries from %s",
+                     len(self._cache), self.cache_path)
+
+    # ------------------------------------------------------------- plumbing
+    def _save(self) -> None:
+        if self.cache_path:
+            self.cache_path.parent.mkdir(parents=True, exist_ok=True)
+            self.cache_path.write_text(json.dumps(self._cache, indent=2,
+                                                  sort_keys=True))
+
+    def _measure(self, algorithm: str, graph: CSRGraph,
+                 cfg: SchedulerConfig) -> float:
+        for _ in range(self.warmup):
+            self.runner(algorithm, graph, cfg)
+        walls = []
+        for _ in range(self.iters):
+            t0 = time.perf_counter()
+            self.runner(algorithm, graph, cfg)
+            walls.append(time.perf_counter() - t0)
+        return statistics.median(walls)
+
+    @staticmethod
+    def cache_key(algorithm: str, graph: CSRGraph) -> str:
+        return f"{algorithm}|{graph_class(graph)}"
+
+    # ------------------------------------------------------------------ api
+    def tune(self, algorithm: str, graph: CSRGraph) -> SchedulerConfig:
+        """Winning config for (algorithm, class-of-graph); cached."""
+        key = self.cache_key(algorithm, graph)
+        if key in self._cache:
+            entry = self._cache[key]
+            log.info("autotune cache hit %s -> %s", key, entry["chosen"])
+            return _config_from_dict(entry["config"])
+
+        trials: Dict[str, float] = {}
+        for cfg in self.candidates:
+            wall = self._measure(algorithm, graph, cfg)
+            trials[_config_key(cfg)] = wall
+            log.info("autotune %s: %s -> %.4fs", key, _config_key(cfg), wall)
+        best = min(self.candidates, key=lambda c: trials[_config_key(c)])
+        entry = {
+            "chosen": _config_key(best),
+            "config": _config_dict(best),
+            "trials": trials,
+            "default_wall": trials[_config_key(SchedulerConfig())],
+            "calibration_graph": {"n": graph.num_vertices,
+                                  "m": graph.num_edges},
+        }
+        self._cache[key] = entry
+        self._save()
+        log.info(
+            "autotune decision %s: chose %s (%.4fs) vs default %s (%.4fs)",
+            key, entry["chosen"], trials[entry["chosen"]],
+            _config_key(SchedulerConfig()), entry["default_wall"])
+        return best
+
+    def recommend_for_mix(
+        self, pairs: Iterable[Tuple[str, CSRGraph]]
+    ) -> SchedulerConfig:
+        """One shared config for a mixed job batch: tune each distinct
+        (algorithm, graph-class), then pick the candidate whose *summed*
+        calibration wall across the mix is smallest."""
+        distinct: Dict[str, CSRGraph] = {}
+        for algorithm, graph in pairs:
+            distinct.setdefault(self.cache_key(algorithm, graph),
+                                graph)
+        entries: List[dict] = []
+        for key, graph in distinct.items():
+            algorithm = key.split("|", 1)[0]
+            self.tune(algorithm, graph)  # fills the cache
+            entries.append(self._cache[key])
+        if not entries:
+            return SchedulerConfig()
+        # only candidates measured for every workload are comparable
+        shared = set(entries[0]["trials"])
+        for e in entries[1:]:
+            shared &= set(e["trials"])
+        if not shared:
+            # cache entries from runs with disjoint candidate lists: no
+            # cross-workload comparison possible — fall back to the most
+            # commonly chosen per-workload winner instead of crashing.
+            chosen = [e["chosen"] for e in entries]
+            best_key = max(chosen, key=chosen.count)
+            log.warning(
+                "autotune mix: cached trials share no candidates; falling "
+                "back to majority per-workload winner %s", best_key)
+            return _parse_config_key(best_key)
+        totals = {ck: sum(e["trials"][ck] for e in entries) for ck in shared}
+        best_key = min(totals, key=totals.get)
+        log.info("autotune mix recommendation: %s (total %.4fs)",
+                 best_key, totals[best_key])
+        return _parse_config_key(best_key)
+
+
+def _parse_config_key(key: str) -> SchedulerConfig:
+    kind, workers, fetch = key.split("|")
+    return SchedulerConfig(
+        num_workers=int(workers.split("=")[1]),
+        fetch_size=int(fetch.split("=")[1]),
+        persistent=(kind == "persistent"),
+    )

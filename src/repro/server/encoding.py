@@ -1,0 +1,66 @@
+"""Packed ``(job_id, payload)`` task encoding for the multi-tenant server.
+
+Atos tags tasks inside one int by sign (graph coloring's +v+1 / -(v+1)) or by
+payload bits.  The task server generalizes the trick: every task carried by a
+``MultiQueue`` lane is a single **positive** int32
+
+    packed = (job_id << PAYLOAD_BITS) | zigzag(natural_task)
+
+so a task is self-identifying even when wavefronts from different tenants
+mix.  The *natural* task is whatever the algorithm's wavefront body consumes
+(a vertex id for BFS/PageRank, a signed ±(v+1) for coloring); zigzag folds
+the sign into the low bit so negatives survive the bitfield (DESIGN.md
+section 8).
+
+Layout (int32, sign bit always 0):
+    bit 31    : 0                     (keeps packed tasks orderable/positive)
+    bits 24-30: job_id                (MAX_JOBS = 128 concurrent tenants)
+    bits 0-23 : zigzag(natural task)  (graphs up to ~8.3M vertices)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+PAYLOAD_BITS = 24
+PAYLOAD_MASK = (1 << PAYLOAD_BITS) - 1
+MAX_JOBS = 1 << (31 - PAYLOAD_BITS)          # 128
+MAX_NATURAL = (1 << (PAYLOAD_BITS - 1)) - 1  # |natural| bound after zigzag
+
+
+def zigzag(t: jax.Array) -> jax.Array:
+    """Map signed int32 to unsigned-style: 0,-1,1,-2,2 -> 0,1,2,3,4."""
+    t = jnp.asarray(t, jnp.int32)
+    return (t << 1) ^ (t >> 31)  # arithmetic shift propagates the sign
+
+
+def unzigzag(z: jax.Array) -> jax.Array:
+    z = jnp.asarray(z, jnp.int32)
+    return (z >> 1) ^ -(z & 1)
+
+
+def pack(job_id, natural: jax.Array) -> jax.Array:
+    """Pack natural tasks for ``job_id``.  Vectorized; ``job_id`` may be a
+    scalar (the usual case: a whole wavefront belongs to one lane/tenant)."""
+    job = jnp.asarray(job_id, jnp.int32)
+    return (job << PAYLOAD_BITS) | (zigzag(natural) & PAYLOAD_MASK)
+
+
+def unpack_job(packed: jax.Array) -> jax.Array:
+    return (jnp.asarray(packed, jnp.int32) >> PAYLOAD_BITS) & (MAX_JOBS - 1)
+
+
+def unpack_natural(packed: jax.Array) -> jax.Array:
+    return unzigzag(jnp.asarray(packed, jnp.int32) & PAYLOAD_MASK)
+
+
+def check_job_fits(job_id: int, num_vertices: int) -> None:
+    """Host-side admission validation: the encoding must be lossless."""
+    if not (0 <= job_id < MAX_JOBS):
+        raise ValueError(f"job_id {job_id} out of range [0, {MAX_JOBS})")
+    # coloring's natural tasks reach ±(n+1); BFS/PageRank stay in [0, n)
+    if num_vertices + 1 > MAX_NATURAL:
+        raise ValueError(
+            f"graph too large for {PAYLOAD_BITS}-bit payload: "
+            f"n={num_vertices} > {MAX_NATURAL - 1}"
+        )

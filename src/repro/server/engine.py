@@ -1,0 +1,406 @@
+"""The multi-tenant task server: one resident scheduler, many graph jobs.
+
+Atos's final analysis derives per-workload launch configurations; its
+``num_queues`` lanes let one queue serve heterogeneous task streams.  This
+module turns both into a serving system (DESIGN.md section 8):
+
+  * every admitted job owns one **lane** of a shared :class:`MultiQueue`;
+    its tasks are packed ``(job_id, payload)`` int32s (``server/encoding``);
+  * each scheduling round a **fairness policy** splits the wavefront budget
+    ``W = num_workers x fetch_size`` into per-lane quotas, and the server
+    drives every granted lane through its job's wavefront body — a *fused
+    wavefront*: one scheduler round advances many tenants, so the
+    small-frontier rounds that underfill a single-tenant wavefront instead
+    overlap across jobs and the batch finishes in fewer total rounds;
+  * **backpressure**: a lane whose ``dropped`` counter grew last round is
+    drain-boosted (served first) and new admissions are deferred until the
+    overflow clears;
+  * **admission control**: at most one job per lane; excess jobs wait in a
+    FIFO and are admitted as lanes free up.
+
+The loop is host-driven — the discrete-kernel regime — because tenants have
+heterogeneous graph shapes and therefore distinct XLA executables; the
+per-round host sync is exactly the discrete launch overhead the paper
+measures, and the autotuner (``server/autotune``) still picks persistent
+configs for the single-tenant calibration runs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+import time
+from collections import deque
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.counters import JobTelemetry
+from ..core.queue import MultiQueue, make_multiqueue
+from ..core.scheduler import SchedulerConfig
+from .encoding import MAX_JOBS, pack, unpack_job, unpack_natural
+from .jobs import JobRegistry, JobSpec, Program
+from .policies import FairnessPolicy, make_policy
+
+log = logging.getLogger("repro.server")
+
+
+@dataclasses.dataclass
+class Job:
+    """Runtime record of one submitted job."""
+
+    job_id: int
+    program: Optional[Program]     # built at admission (config-specialized)
+    weight: float
+    spec: Optional[JobSpec] = None
+    status: str = "pending"        # pending -> active -> done
+    lane: int = -1
+    state: Any = None
+    counters: Any = None           # device int32[2]: (items, mismatches)
+    stopped: bool = False
+    telemetry: Optional[JobTelemetry] = None
+    result: Optional[np.ndarray] = None
+
+
+@dataclasses.dataclass
+class ServerStats:
+    rounds: int = 0
+    wall_seconds: float = 0.0
+    items_processed: int = 0
+    backpressure_events: int = 0
+    deferred_admissions: int = 0
+    wavefront: int = 0
+
+    @property
+    def occupancy(self) -> float:
+        denom = self.rounds * self.wavefront
+        return self.items_processed / denom if denom else 0.0
+
+
+@dataclasses.dataclass
+class ServerResult:
+    results: Dict[int, np.ndarray]
+    telemetry: Dict[int, JobTelemetry]
+    stats: ServerStats
+
+
+class TaskServer:
+    """Multi-tenant graph-analytics server over one shared MultiQueue."""
+
+    def __init__(
+        self,
+        registry: JobRegistry,
+        num_lanes: int = 8,
+        config: Optional[SchedulerConfig] = None,
+        policy: str | FairnessPolicy = "weighted",
+        lane_capacity: Optional[int] = None,
+        autotuner=None,
+        max_rounds: int = 1 << 17,
+        strict_drops: bool = True,
+    ) -> None:
+        self.registry = registry
+        self.num_lanes = num_lanes
+        self._config = config
+        self.policy = (policy if isinstance(policy, FairnessPolicy)
+                       else make_policy(policy))
+        self._lane_capacity = lane_capacity
+        self.autotuner = autotuner
+        self.max_rounds = max_rounds
+        # a dropped task is work lost forever: for the graph algorithms that
+        # silently corrupts the answer (an unreached BFS vertex stays INF),
+        # so by default any overflow fails the run loudly.  Opt out only for
+        # workloads that tolerate loss (see tests' synthetic flood program).
+        self.strict_drops = strict_drops
+        self._jobs: List[Job] = []
+
+    # ------------------------------------------------------------ submission
+    def _next_job_id(self) -> int:
+        # job ids are baked into the packed-task bitfield and never
+        # recycled, so one server instance serves at most MAX_JOBS jobs
+        # over its lifetime; fail at submit time, not mid-run.
+        job_id = len(self._jobs)
+        if job_id >= MAX_JOBS:
+            raise ValueError(
+                f"job id space exhausted: one TaskServer serves at most "
+                f"{MAX_JOBS} jobs over its lifetime (encoding.PAYLOAD_BITS "
+                f"bitfield); create a new server for the next batch")
+        return job_id
+
+    def submit(self, spec: JobSpec) -> int:
+        """Queue a job for admission; returns its job_id."""
+        job_id = self._next_job_id()
+        self._jobs.append(Job(job_id=job_id, program=None,
+                              weight=spec.weight, spec=spec))
+        return job_id
+
+    def submit_program(self, program: Program, weight: float = 1.0) -> int:
+        """Escape hatch for synthetic/custom programs (tests, experiments).
+
+        The program must already match the server's wavefront width.
+        """
+        job_id = self._next_job_id()
+        self._jobs.append(Job(job_id=job_id, program=program, weight=weight))
+        return job_id
+
+    # ------------------------------------------------------------- plumbing
+    def _resolve_config(self) -> SchedulerConfig:
+        if self._config is not None:
+            return self._config
+        if self.autotuner is not None:
+            pairs = [(j.spec.algorithm, self.registry.graph(j.spec.graph))
+                     for j in self._jobs if j.spec is not None]
+            if pairs:
+                cfg = self.autotuner.recommend_for_mix(pairs)
+                log.info("autotuned server config: %s", cfg)
+                return cfg
+        return SchedulerConfig()
+
+    def _resolve_lane_capacity(self) -> int:
+        if self._lane_capacity is not None:
+            return self._lane_capacity
+        biggest = 1024
+        for j in self._jobs:
+            if j.spec is not None:
+                n = self.registry.graph(j.spec.graph).num_vertices
+                biggest = max(biggest, 8 * n)
+        return biggest
+
+    def _step_for(self, f, stop, W: int):
+        """One compiled scheduler step per distinct wavefront body.
+
+        ``quota`` and ``job_id`` are traced scalars, so every tenant sharing
+        a kernel bundle shares this executable.  Telemetry (items popped,
+        routing mismatches) accumulates in a device-side ``counters`` array
+        and the convergence predicate is evaluated in-step, so the host loop
+        syncs one boolean per stop-ful job per round and nothing else.
+
+        Steps are cached on the registry (whose kernel bundles own the
+        closures), so a fused server and the sequential baseline over the
+        same registry share executables, and the cache dies with the
+        registry instead of pinning every served graph process-wide.
+        """
+        cache = self.registry.step_cache
+        key = (f, stop, W)  # function objects as keys: no id-reuse after GC
+        if key not in cache:
+            @jax.jit
+            def step(mq, lane_id, state, counters, quota, job_id):
+                # lane extraction/writeback is traced: one dispatch per
+                # scheduler step instead of a shower of eager slice ops.
+                packed, valid, mq = mq.pop_lane(lane_id, W, quota)
+                natural = jnp.where(valid, unpack_natural(packed), 0)
+                mismatch = jnp.sum(
+                    (valid & (unpack_job(packed) != job_id)).astype(jnp.int32))
+                out, mask, state = f(natural, valid, state)
+                mq = mq.push(lane_id, pack(job_id, out), mask)
+                n_valid = jnp.sum(valid.astype(jnp.int32))
+                counters = counters + jnp.stack([n_valid, mismatch])
+                stopped = (jnp.bool_(False) if stop is None
+                           else stop(state))
+                return mq, state, counters, stopped
+
+            cache[key] = step
+        return cache[key]
+
+    def _empty_step_for(self, on_empty, stop):
+        cache = self.registry.empty_step_cache
+        key = (on_empty, stop)
+        if key not in cache:
+            @jax.jit
+            def step(mq, lane_id, state, job_id):
+                out, mask, state = on_empty(state)
+                mq = mq.push(lane_id, pack(job_id, out), mask)
+                stopped = (jnp.bool_(False) if stop is None
+                           else stop(state))
+                return mq, state, stopped
+
+            cache[key] = step
+        return cache[key]
+
+    def _admit(self, job: Job, mq: MultiQueue, lane: int, cfg: SchedulerConfig,
+               lane_capacity: int, rounds: int) -> MultiQueue:
+        if job.program is None:
+            job.program = self.registry.build(
+                job.spec, job.job_id, cfg.wavefront, cfg.num_workers,
+                lane_capacity)
+        prog = job.program
+        job.state, seeds = prog.init()
+        job.counters = jnp.zeros((2,), jnp.int32)
+        job.stopped = False
+        job.lane = lane
+        job.status = "active"
+        if job.telemetry is None:  # submit-time round was 0 for batch mode
+            job.telemetry = JobTelemetry(
+                job_id=job.job_id, algorithm=prog.algorithm,
+                graph=prog.graph_name, wavefront=cfg.wavefront,
+                ideal_work=prog.ideal_work)
+        job.telemetry.admitted_round = rounds
+        mq = mq.reset_lane(lane)
+        seeds = jnp.asarray(seeds, jnp.int32)
+        mq = mq.push(lane, pack(job.job_id, seeds),
+                     jnp.ones(seeds.shape, bool))
+        log.info("admit job %d (%s on %s) -> lane %d at round %d",
+                 job.job_id, prog.algorithm, prog.graph_name, lane, rounds)
+        return mq
+
+    def _finalize(self, job: Job, mq: MultiQueue, rounds: int) -> MultiQueue:
+        prog = job.program
+        job.result = np.asarray(prog.result(job.state))
+        items, mismatches = (int(x) for x in np.asarray(job.counters))
+        job.telemetry.items_processed = items
+        job.telemetry.routing_mismatches = mismatches
+        job.telemetry.work = int(prog.work(job.state))
+        job.telemetry.completed_round = rounds
+        job.telemetry.dropped += int(mq.lane(job.lane).dropped)
+        if self.strict_drops and job.telemetry.dropped > 0:
+            raise RuntimeError(
+                f"job {job.job_id} ({prog.algorithm} on {prog.graph_name}) "
+                f"dropped {job.telemetry.dropped} tasks to lane overflow — "
+                f"its result would be silently wrong.  Raise lane_capacity "
+                f"(or pass strict_drops=False for loss-tolerant workloads).")
+        job.status = "done"
+        mq = mq.reset_lane(job.lane)
+        log.info("job %d done at round %d (work=%d, occupancy=%.3f)",
+                 job.job_id, rounds, job.telemetry.work,
+                 job.telemetry.occupancy)
+        job.lane = -1
+        return mq
+
+    # ------------------------------------------------------------------ run
+    def run(self) -> ServerResult:
+        """Drain every submitted job; returns per-job results + telemetry."""
+        cfg = self._resolve_config()
+        W = cfg.wavefront
+        lane_capacity = self._resolve_lane_capacity()
+        mq = make_multiqueue(lane_capacity, self.num_lanes)
+        stats = ServerStats(wavefront=W)
+        pending = deque(j for j in self._jobs if j.status == "pending")
+        lane_owner: Dict[int, Job] = {}
+        free_lanes = deque(range(self.num_lanes))
+        prev_dropped = np.zeros(self.num_lanes, dtype=np.int64)
+        backpressured = False
+        t0 = time.perf_counter()
+        rounds = 0
+
+        while (pending or lane_owner) and rounds < self.max_rounds:
+            # -- one snapshot per round drives completion, backpressure
+            # detection, and quota allocation (two scalars-vectors synced;
+            # everything else stays on device until a job finalizes).
+            sizes = np.asarray(mq.lane_sizes(), dtype=np.int64)
+            dropped_now = np.asarray(mq.lane_dropped(), dtype=np.int64)
+
+            # -- completion: convergence predicate wins (its flag was
+            # computed inside last round's step); otherwise a drained lane
+            # means the job is finished.
+            for lane, job in list(lane_owner.items()):
+                done = (job.stopped if job.program.stop is not None
+                        else sizes[lane] == 0)
+                if done:
+                    mq = self._finalize(job, mq, rounds)
+                    del lane_owner[lane]
+                    free_lanes.append(lane)
+                    prev_dropped[lane] = dropped_now[lane] = 0
+                    sizes[lane] = 0
+
+            # -- admission control: drops observed last round defer new
+            # tenants (the queue is telling us it is over-committed), unless
+            # the server is idle and would otherwise deadlock the FIFO.
+            if pending and (not backpressured or not lane_owner):
+                while pending and free_lanes:
+                    lane = free_lanes.popleft()
+                    job = pending.popleft()
+                    mq = self._admit(job, mq, lane, cfg, lane_capacity,
+                                     rounds)
+                    lane_owner[lane] = job
+                    sizes[lane] = int(mq.lane(lane).size)  # seeded just now
+            elif pending and backpressured:
+                stats.deferred_admissions += 1
+            if not lane_owner:
+                break  # everything drained and nothing left to admit
+
+            boosted = np.zeros(self.num_lanes, dtype=bool)
+            weights = np.zeros(self.num_lanes)
+            for lane, job in lane_owner.items():
+                weights[lane] = job.weight
+                if dropped_now[lane] > prev_dropped[lane]:
+                    boosted[lane] = True
+                    job.telemetry.backpressure_events += 1
+                    stats.backpressure_events += 1
+            backpressured = bool(boosted.any())
+            prev_dropped = dropped_now
+
+            quotas = self.policy.allocate(sizes, weights, boosted, W)
+
+            # -- fused wavefront: every granted lane advances this round
+            for lane, job in lane_owner.items():
+                prog = job.program
+                quota = int(quotas[lane])
+                if quota > 0:
+                    step = self._step_for(prog.wavefront_fn, prog.stop, W)
+                    mq, job.state, job.counters, stopped = step(
+                        mq, lane, job.state, job.counters, quota,
+                        job.job_id)
+                    job.telemetry.rounds_active += 1
+                elif sizes[lane] == 0 and prog.on_empty is not None \
+                        and not job.stopped:
+                    estep = self._empty_step_for(prog.on_empty, prog.stop)
+                    mq, job.state, stopped = estep(
+                        mq, lane, job.state, job.job_id)
+                    job.telemetry.rounds_active += 1
+                else:
+                    continue
+                if prog.stop is not None:
+                    job.stopped = bool(stopped)
+
+            rounds += 1
+
+        if pending or lane_owner:
+            unfinished = [j.job_id for j in self._jobs if j.status != "done"]
+            raise RuntimeError(
+                f"server hit max_rounds={self.max_rounds} with unfinished "
+                f"jobs {unfinished}")
+
+        stats.rounds = rounds
+        stats.wall_seconds = time.perf_counter() - t0
+        stats.items_processed = sum(
+            j.telemetry.items_processed for j in self._jobs)
+        return ServerResult(
+            results={j.job_id: j.result for j in self._jobs},
+            telemetry={j.job_id: j.telemetry for j in self._jobs},
+            stats=stats,
+        )
+
+
+def serve_sequential(
+    registry: JobRegistry,
+    specs: List[JobSpec],
+    config: Optional[SchedulerConfig] = None,
+    lane_capacity: Optional[int] = None,
+    max_rounds: int = 1 << 17,
+) -> ServerResult:
+    """Baseline: each job runs alone (single lane, full wavefront).
+
+    Total rounds are the sum over jobs — what a tenant-at-a-time deployment
+    pays.  Job ids match submission order so results are comparable 1:1 with
+    a fused :class:`TaskServer` run over the same specs.
+    """
+    results: Dict[int, np.ndarray] = {}
+    telemetry: Dict[int, JobTelemetry] = {}
+    stats = ServerStats()
+    t0 = time.perf_counter()
+    for i, spec in enumerate(specs):
+        server = TaskServer(registry, num_lanes=1, config=config,
+                            policy="weighted", lane_capacity=lane_capacity,
+                            max_rounds=max_rounds)
+        server.submit(spec)
+        out = server.run()
+        results[i] = out.results[0]
+        tel = out.telemetry[0]
+        tel.job_id = i
+        telemetry[i] = tel
+        stats.rounds += out.stats.rounds
+        stats.items_processed += out.stats.items_processed
+        stats.backpressure_events += out.stats.backpressure_events
+        stats.wavefront = out.stats.wavefront
+    stats.wall_seconds = time.perf_counter() - t0
+    return ServerResult(results=results, telemetry=telemetry, stats=stats)

@@ -1,0 +1,182 @@
+"""Job abstraction: what a tenant submits and how it runs on the server.
+
+A **JobSpec** is the wire-level request ("run PageRank on graph 'web' with
+damping 0.85, weight 2.0").  The **JobRegistry** owns the named graphs and
+compiles a spec into a **Program** — the job-parameterized bundle of pure
+callables the scheduler drives:
+
+    init()                -> (state, seed natural tasks)
+    wavefront_fn(i, v, s) -> (out, mask, s')     # the algorithm's expansion
+    on_empty(s)           -> optional refill step (PageRank's re-scan)
+    stop(s)               -> optional convergence predicate
+    result(s)             -> the job's answer (dist / rank / colors)
+
+Programs are exactly the reusable wavefront components the algorithms
+export (``bfs.make_wavefront_fn`` etc.) — the server adds no algorithmic
+logic of its own, it only routes, packs, and meters (DESIGN.md section 8).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..algorithms import bfs as _bfs
+from ..algorithms import coloring as _coloring
+from ..algorithms import pagerank as _pagerank
+from ..algorithms.common import default_work_budget
+from ..graph.csr import CSRGraph
+from .encoding import check_job_fits
+
+ALGORITHMS = ("bfs", "pagerank", "coloring")
+
+
+@dataclasses.dataclass(frozen=True)
+class JobSpec:
+    """A tenant's request.  ``weight`` feeds the weighted fairness policy."""
+
+    algorithm: str                 # one of ALGORITHMS
+    graph: str                     # name registered with the JobRegistry
+    params: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    weight: float = 1.0
+
+    def __post_init__(self):
+        if self.algorithm not in ALGORITHMS:
+            raise ValueError(f"unknown algorithm {self.algorithm!r}; "
+                             f"expected one of {ALGORITHMS}")
+        if self.weight <= 0:
+            raise ValueError("job weight must be positive")
+
+
+@dataclasses.dataclass(frozen=True)
+class Program:
+    """Compiled form of a JobSpec: pure callables the scheduler drives."""
+
+    algorithm: str
+    graph_name: str
+    graph: CSRGraph
+    init: Callable[[], Tuple[Any, jax.Array]]
+    wavefront_fn: Callable
+    result: Callable[[Any], jax.Array]
+    work: Callable[[Any], jax.Array]
+    ideal_work: int
+    on_empty: Optional[Callable] = None
+    stop: Optional[Callable] = None
+
+
+# init-only params: they shape a job's initial state but NOT its wavefront
+# kernel, so jobs differing only in these share one compiled kernel bundle.
+_INIT_ONLY = {"bfs": ("source",), "pagerank": (), "coloring": ()}
+
+
+def _kernel_bundle(spec: JobSpec, graph: CSRGraph, wavefront: int,
+                   num_workers: int) -> Dict[str, Any]:
+    """Build the cacheable (init-independent) callables for one spec."""
+    n = graph.num_vertices
+    p = {k: v for k, v in spec.params.items()
+         if k not in _INIT_ONLY[spec.algorithm]}
+    if spec.algorithm == "bfs":
+        strategy = p.pop("strategy", "merge_path")
+        max_degree = int(jnp.max(graph.degrees()))
+        work_budget = default_work_budget(
+            graph, wavefront, p.pop("work_budget", None),
+            max_degree=max_degree)
+        _reject_unknown(p)
+        f = _bfs.make_wavefront_fn(graph, strategy, work_budget, max_degree)
+        return dict(f=f, on_empty=None, stop=None,
+                    result=lambda s: s.dist, ideal=n)
+    if spec.algorithm == "pagerank":
+        damping = float(p.pop("damping", 0.85))
+        eps = float(p.pop("eps", 1e-6))
+        check_size = int(p.pop("check_size", 64))
+        work_budget = p.pop("work_budget", None)
+        _reject_unknown(p)
+        f, on_empty, stop = _pagerank.make_wavefront_fns(
+            graph, wavefront, n_check=num_workers * check_size,
+            damping=damping, eps=eps, work_budget=work_budget,
+        )
+        return dict(f=f, on_empty=on_empty, stop=stop,
+                    result=lambda s: s.rank, ideal=n)
+    # coloring
+    _reject_unknown(p)
+    f = _coloring.make_wavefront_fn(graph)
+    return dict(f=f, on_empty=None, stop=None,
+                result=lambda s: s.colors, ideal=n)
+
+
+def _make_init(spec: JobSpec, graph: CSRGraph, lane_capacity: int):
+    """Per-job initial (state, seed tasks) — never cached."""
+    if spec.algorithm == "bfs":
+        source = int(spec.params.get("source", 0))
+        return lambda: (_bfs.init_state(graph, source),
+                        jnp.array([source], jnp.int32))
+    if spec.algorithm == "pagerank":
+        damping = float(spec.params.get("damping", 0.85))
+        seed_count = min(graph.num_vertices, max(1, lane_capacity // 2))
+        return lambda: _pagerank.init_state(graph, damping, seed_count)
+    return lambda: _coloring.init_state(graph)
+
+
+def _reject_unknown(params: Dict[str, Any]) -> None:
+    if params:
+        raise ValueError(f"unknown job params: {sorted(params)}")
+
+
+class JobRegistry:
+    """Named graphs + spec->Program compilation (with a kernel cache).
+
+    Jobs that agree on (algorithm, graph, kernel params, server config)
+    share one kernel bundle — and therefore, downstream, one XLA
+    compilation of the scheduler step — even when init-only params like the
+    BFS source differ.  This is the multi-tenant analogue of Atos reusing a
+    loaded kernel across launches.
+    """
+
+    def __init__(self) -> None:
+        self._graphs: Dict[str, CSRGraph] = {}
+        self._kernels: Dict[tuple, Dict[str, Any]] = {}
+        # compiled scheduler steps (filled by engine.TaskServer): scoped
+        # here so every server over this registry shares executables, and
+        # the cache's lifetime is the graphs' lifetime, not the process's
+        self.step_cache: Dict[tuple, Any] = {}
+        self.empty_step_cache: Dict[tuple, Any] = {}
+
+    def register_graph(self, name: str, graph: CSRGraph) -> None:
+        if name in self._graphs:
+            raise ValueError(f"graph {name!r} already registered")
+        self._graphs[name] = graph
+
+    def graph(self, name: str) -> CSRGraph:
+        if name not in self._graphs:
+            raise KeyError(
+                f"graph {name!r} not registered "
+                f"(have: {sorted(self._graphs)})")
+        return self._graphs[name]
+
+    @property
+    def graph_names(self):
+        return sorted(self._graphs)
+
+    def build(self, spec: JobSpec, job_id: int, wavefront: int,
+              num_workers: int, lane_capacity: int) -> Program:
+        graph = self.graph(spec.graph)
+        check_job_fits(job_id, graph.num_vertices)
+        kernel_params = tuple(sorted(
+            (k, v) for k, v in spec.params.items()
+            if k not in _INIT_ONLY[spec.algorithm]))
+        key = (spec.algorithm, spec.graph, kernel_params,
+               wavefront, num_workers)
+        if key not in self._kernels:
+            self._kernels[key] = _kernel_bundle(
+                spec, graph, wavefront, num_workers)
+        k = self._kernels[key]
+        return Program(
+            algorithm=spec.algorithm, graph_name=spec.graph, graph=graph,
+            init=_make_init(spec, graph, lane_capacity),
+            wavefront_fn=k["f"], on_empty=k["on_empty"], stop=k["stop"],
+            result=k["result"],
+            work=lambda s: s.counter.work,
+            ideal_work=k["ideal"],
+        )

@@ -1,0 +1,101 @@
+"""Unit tests for MultiQueue lanes — fairness, drop accounting, cursors.
+
+These run without hypothesis (the property-test variants live in
+tests/test_queue.py and are skipped when hypothesis is absent); MultiQueue is
+the backbone of the multi-tenant task server, so its semantics are pinned
+down here with plain unit tests.
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import EMPTY, make_multiqueue, make_queue
+
+
+def test_rr_cursor_stays_bounded():
+    """The round-robin cursor must be stored modulo num_lanes."""
+    mq = make_multiqueue(8, 3)
+    for i in range(50):
+        mq = mq.push(i % 3, jnp.array([i]), jnp.array([True]))
+        _, _, mq = mq.pop(1)
+        assert 0 <= int(mq.rr) < mq.num_lanes
+    assert int(mq.size) == 0
+
+
+def test_rr_cycles_fairly_across_nonempty_lanes():
+    """With every lane populated, successive pops visit lanes round-robin."""
+    num_lanes = 4
+    mq = make_multiqueue(16, num_lanes)
+    for lane in range(num_lanes):
+        mq = mq.push(lane, jnp.array([100 * lane, 100 * lane + 1]),
+                     jnp.array([True, True]))
+    visited = []
+    for _ in range(2 * num_lanes):
+        items, valid, mq = mq.pop(1)
+        assert bool(valid[0])
+        visited.append(int(items[0]) // 100)
+    # each lane served exactly twice, in rotating order
+    assert visited[:num_lanes] == list(range(num_lanes))
+    assert visited[num_lanes:] == list(range(num_lanes))
+
+
+def test_rr_skips_empty_lanes():
+    mq = make_multiqueue(8, 3)
+    mq = mq.push(1, jnp.array([7]), jnp.array([True]))
+    items, valid, mq = mq.pop(2)
+    assert bool(valid[0]) and int(items[0]) == 7
+    assert not bool(valid[1])
+    # all lanes empty: pop returns nothing valid and leaves size at 0
+    items, valid, mq = mq.pop(2)
+    assert not bool(valid.any())
+    assert int(mq.size) == 0
+
+
+def test_per_lane_drop_accounting():
+    """Overflowing one lane must not disturb another lane's counters."""
+    mq = make_multiqueue(4, 2)
+    mq = mq.push(0, jnp.arange(6, dtype=jnp.int32),
+                 jnp.ones((6,), bool))  # 2 dropped in lane 0
+    mq = mq.push(1, jnp.arange(3, dtype=jnp.int32), jnp.ones((3,), bool))
+    dropped = np.asarray(mq.lane_dropped())
+    assert list(dropped) == [2, 0]
+    sizes = np.asarray(mq.lane_sizes())
+    assert list(sizes) == [4, 3]
+
+
+def test_pop_lane_respects_quota():
+    mq = make_multiqueue(16, 2)
+    mq = mq.push(0, jnp.arange(10, dtype=jnp.int32), jnp.ones((10,), bool))
+    items, valid, mq = mq.pop_lane(0, 8, quota=3)
+    assert int(jnp.sum(valid.astype(jnp.int32))) == 3
+    assert list(np.asarray(items[:3])) == [0, 1, 2]
+    assert int(items[3]) == int(EMPTY)
+    assert int(mq.lane(0).size) == 7
+    assert int(mq.lane(1).size) == 0
+
+
+def test_reset_lane_recycles_for_new_tenant():
+    mq = make_multiqueue(4, 2)
+    mq = mq.push(0, jnp.arange(6, dtype=jnp.int32), jnp.ones((6,), bool))
+    assert int(mq.lane(0).dropped) == 2
+    mq = mq.reset_lane(0)
+    assert int(mq.lane(0).size) == 0
+    assert int(mq.lane(0).dropped) == 0
+    # lane is immediately reusable
+    mq = mq.push(0, jnp.array([42]), jnp.array([True]))
+    items, valid, mq = mq.pop_lane(0, 1)
+    assert bool(valid[0]) and int(items[0]) == 42
+
+
+def test_taskqueue_pop_upto_quota_clamps():
+    q = make_queue(16, jnp.arange(5, dtype=jnp.int32))
+    items, valid, q = q.pop_upto(4, 2)
+    assert list(np.asarray(valid)) == [True, True, False, False]
+    assert int(q.size) == 3
+    # quota larger than size: bounded by size
+    items, valid, q = q.pop_upto(4, 99)
+    assert int(jnp.sum(valid.astype(jnp.int32))) == 3
+    # negative quota is treated as zero
+    q = make_queue(8, jnp.array([1]))
+    items, valid, q = q.pop_upto(2, -1)
+    assert not bool(valid.any())
+    assert int(q.size) == 1

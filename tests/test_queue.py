@@ -4,6 +4,8 @@ import collections
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import EMPTY, make_multiqueue, make_queue
@@ -96,3 +98,46 @@ def test_multiqueue_conserves_items(num_lanes, values):
             got.append(int(items[0]))
     assert sorted(got) == sorted(values)
     assert int(mq.size) == 0
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(2, 4), st.integers(1, 8), st.integers(1, 40))
+def test_multiqueue_round_robin_fairness(num_lanes, per_lane, pops):
+    """While every lane is non-empty, pops rotate lanes; over any window the
+    per-lane service counts differ by at most one (Atos's num_queues
+    fairness).  The rr cursor always stays in [0, num_lanes)."""
+    mq = make_multiqueue(32, num_lanes)
+    for lane in range(num_lanes):
+        vals = jnp.arange(per_lane, dtype=jnp.int32) + 1000 * lane
+        mq = mq.push(lane, vals, jnp.ones((per_lane,), bool))
+    served = [0] * num_lanes
+    for _ in range(min(pops, num_lanes * per_lane)):
+        items, valid, mq = mq.pop(1)
+        assert bool(valid[0])
+        served[int(items[0]) // 1000] += 1
+        assert 0 <= int(mq.rr) < num_lanes
+        if min(np.asarray(mq.lane_sizes())) > 0:
+            assert max(served) - min(served) <= 1
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(1, 4),
+       st.lists(st.tuples(st.integers(0, 3), st.integers(0, 12)),
+                max_size=12))
+def test_multiqueue_per_lane_drop_accounting(num_lanes, pushes):
+    """Each lane's dropped counter tracks exactly its own overflow."""
+    cap = 8
+    mq = make_multiqueue(cap, num_lanes)
+    model_size = [0] * num_lanes
+    model_drop = [0] * num_lanes
+    for lane, n in pushes:
+        lane = lane % num_lanes
+        if n == 0:
+            continue
+        mq = mq.push(lane, jnp.arange(n, dtype=jnp.int32),
+                     jnp.ones((n,), bool))
+        fit = min(n, cap - model_size[lane])
+        model_size[lane] += fit
+        model_drop[lane] += n - fit
+    assert list(np.asarray(mq.lane_sizes())) == model_size
+    assert list(np.asarray(mq.lane_dropped())) == model_drop
