@@ -1,41 +1,142 @@
-"""Kernel micro-benchmarks: Pallas (interpret) vs jnp reference wall time and
-— more importantly on CPU — agreement sweeps.  On real TPU hardware the same
-harness times the compiled kernels."""
+"""Kernel micro-benchmarks + backend comparison -> ``BENCH_kernels.json``.
+
+  PYTHONPATH=src python -m benchmarks.run kernels
+
+Two layers of measurement:
+
+  * **kernel micro** — each Pallas kernel against its pure-jnp oracle
+    (lbs / compact / flash), with an exact-agreement check so the numbers
+    are only reported for matching outputs;
+  * **backend dispatch** — the same comparison one level up, through the
+    hot-path entry points the backend layer actually wires
+    (``core.frontier.expand_merge_path`` and ``core.queue.TaskQueue.push``
+    with ``backend="jnp"`` vs ``backend="pallas"``), which is what the
+    autotuner's backend axis trades off (DESIGN.md section 9).
+
+On CPU the Pallas side runs in interpret mode, so jnp winning is expected
+and honest; on real TPU hardware the same harness times compiled Mosaic
+kernels.  The JSON records wall time per side, the speedup, and the
+agreement bit for every comparison.
+"""
 from __future__ import annotations
 
 import jax.numpy as jnp
 import numpy as np
 
-from .harness import row, timeit
+from .harness import emit_json, row, timeit
+
+OUT = "BENCH_kernels.json"
 
 
-def run():
+def _compare(name: str, shape: str, jnp_fn, pallas_fn, agree: bool) -> dict:
+    t_jnp = timeit(jnp_fn)
+    t_pal = timeit(pallas_fn)
+    row(f"kernels/{name}/jnp", t_jnp * 1e6, shape)
+    row(f"kernels/{name}/pallas", t_pal * 1e6,
+        f"{shape} agree={agree}")
+    return {"shape": shape, "jnp_us": t_jnp * 1e6, "pallas_us": t_pal * 1e6,
+            "pallas_over_jnp": t_pal / max(t_jnp, 1e-12), "agree": agree}
+
+
+def run(out: str = OUT):
+    from repro.core.backend import default_interpret, has_tpu
+
     rng = np.random.default_rng(0)
+    results: dict = {}
 
+    # ------------------------------------------------------ kernel micro
     from repro.kernels.frontier_expand.kernel import lbs_pallas
     from repro.kernels.frontier_expand.ref import lbs_ref
     deg = rng.integers(0, 32, size=1024).astype(np.int32)
     scan = jnp.cumsum(jnp.asarray(deg))
-    t_ref = timeit(lambda: lbs_ref(scan, 8192))
-    t_pal = timeit(lambda: lbs_pallas(scan, 8192))
-    row("kernels/lbs/ref", t_ref * 1e6, "budget=8192")
-    row("kernels/lbs/pallas-interpret", t_pal * 1e6, "budget=8192")
+    agree = all(
+        np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(lbs_pallas(scan, 8192), lbs_ref(scan, 8192)))
+    results["lbs"] = _compare(
+        "lbs", "w=1024,budget=8192",
+        lambda: lbs_ref(scan, 8192), lambda: lbs_pallas(scan, 8192), agree)
 
     from repro.kernels.queue_compact.ops import compact
     from repro.kernels.queue_compact.ref import compact_ref
     items = jnp.asarray(rng.integers(0, 1 << 20, size=4096), jnp.int32)
     mask = jnp.asarray(rng.random(4096) < 0.5)
-    t_ref = timeit(lambda: compact_ref(items, mask))
-    t_pal = timeit(lambda: compact(items, mask))
-    row("kernels/compact/ref", t_ref * 1e6, "n=4096")
-    row("kernels/compact/pallas-interpret", t_pal * 1e6, "n=4096")
+    agree = all(
+        np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(compact(items, mask), compact_ref(items, mask)))
+    results["compact"] = _compare(
+        "compact", "n=4096",
+        lambda: compact_ref(items, mask), lambda: compact(items, mask),
+        agree)
 
     from repro.kernels.flash_attention.kernel import flash_attention_pallas
     from repro.kernels.flash_attention.ref import attention_ref
     q = jnp.asarray(rng.standard_normal((4, 256, 128)), jnp.float32)
     k = jnp.asarray(rng.standard_normal((2, 256, 128)), jnp.float32)
     v = jnp.asarray(rng.standard_normal((2, 256, 128)), jnp.float32)
-    t_ref = timeit(lambda: attention_ref(q, k, v))
-    t_pal = timeit(lambda: flash_attention_pallas(q, k, v))
-    row("kernels/flash/ref", t_ref * 1e6, "bh4xs256xd128")
-    row("kernels/flash/pallas-interpret", t_pal * 1e6, "bh4xs256xd128")
+    agree = bool(np.allclose(np.asarray(flash_attention_pallas(q, k, v)),
+                             np.asarray(attention_ref(q, k, v)),
+                             atol=2e-5, rtol=2e-5))
+    results["flash"] = _compare(
+        "flash", "bh4xs256xd128",
+        lambda: attention_ref(q, k, v),
+        lambda: flash_attention_pallas(q, k, v), agree)
+
+    # ------------------------------------------- backend dispatch hot path
+    # Both sides run under jax.jit, matching how the scheduler invokes them
+    # (inside a compiled step) — timing eager jnp against jitted Pallas
+    # wrappers would measure dispatch overhead, not backend cost.
+    import functools
+
+    import jax
+
+    from repro.core import expand_merge_path, make_queue
+    from repro.graph import rmat
+
+    g = rmat(10, 8, seed=0)
+    w = 256
+    wave = jnp.asarray(rng.integers(0, g.num_vertices, size=w), jnp.int32)
+    valid = jnp.ones((w,), bool)
+    budget = 4 * w * max(1, g.num_edges // g.num_vertices)
+
+    @functools.partial(jax.jit, static_argnames=("backend",))
+    def _expand(wave, valid, backend):
+        return expand_merge_path(wave, valid, g.row_ptr, g.col_idx, budget,
+                                 backend=backend)
+
+    agree = all(np.array_equal(np.asarray(a), np.asarray(b))
+                for a, b in zip(_expand(wave, valid, "jnp"),
+                                _expand(wave, valid, "pallas")))
+    results["expand_merge_path"] = _compare(
+        "expand_merge_path", f"wave={w},budget={budget}",
+        lambda: _expand(wave, valid, "jnp"),
+        lambda: _expand(wave, valid, "pallas"), agree)
+
+    @functools.partial(jax.jit, static_argnames=("backend",))
+    def _push(q, items, mask, backend):
+        return q.push(items, mask, backend=backend)
+
+    queue = make_queue(4 * w)
+    pushed = jnp.asarray(rng.integers(0, 1 << 20, size=2 * w), jnp.int32)
+    pmask = jnp.asarray(rng.random(2 * w) < 0.5)
+    qa = _push(queue, pushed, pmask, "jnp")
+    qb = _push(queue, pushed, pmask, "pallas")
+    agree = all(
+        np.array_equal(np.asarray(getattr(qa, f)), np.asarray(getattr(qb, f)))
+        for f in ("buf", "head", "tail", "dropped"))
+    results["queue_push"] = _compare(
+        "queue_push", f"n={2 * w}",
+        lambda: _push(queue, pushed, pmask, "jnp"),
+        lambda: _push(queue, pushed, pmask, "pallas"), agree)
+
+    payload = {
+        "environment": {
+            "tpu": has_tpu(),
+            "pallas_interpret": default_interpret(),
+            "note": ("interpret mode emulates the kernels off-TPU; jnp "
+                     "winning there is expected — compare on TPU for the "
+                     "compiled numbers"),
+        },
+        "comparisons": results,
+    }
+    emit_json(out, payload)
+    return payload

@@ -16,12 +16,20 @@ analysis predicts fused < sequential in total rounds; the JSON records the
 measured ratio.  Note wall time on CPU includes one host dispatch per
 granted lane per round, which favors sequential; rounds (device work
 launches saved) is the architecture-level metric.
+
+The benchmark also runs the autotuner over the job mix with the kernel
+``backend`` axis in the candidate grid (DESIGN.md section 9) and records,
+per job, which backend (and launch shape) calibration picked — on CPU that
+is jnp (pallas interprets); on TPU the same benchmark reports the
+compiled-kernel choice.
 """
 from __future__ import annotations
 
+import dataclasses
+
 from repro.core.scheduler import SchedulerConfig
 from repro.launch.taskserver import build_registry, mixed_specs
-from repro.server import TaskServer, serve_sequential
+from repro.server import Autotuner, TaskServer, serve_sequential
 
 from .harness import emit_json, row, timeit_host
 
@@ -41,12 +49,39 @@ def _run_fused(registry, specs, config, policy, n_lanes):
     return server.run()
 
 
+def _autotune_backends(registry, specs):
+    """Tune each job's (algorithm, graph-class) over the backend axis and
+    return ``{job_index: {key, chosen, backend}}``.  A small grid — the
+    default launch shape on each backend — keeps calibration cheap while
+    still exercising the axis the tentpole added."""
+    # warmup=1 so each candidate's timed sample excludes JIT trace+compile —
+    # otherwise the recorded backend picks are compile-time noise.
+    tuner = Autotuner(
+        candidates=[SchedulerConfig(),
+                    dataclasses.replace(SchedulerConfig(), backend="pallas")],
+        warmup=1, iters=1)
+    picks = {}
+    for i, spec in enumerate(specs):
+        graph = registry.graph(spec.graph)
+        chosen = tuner.tune(spec.algorithm, graph)  # cached per (alg, class)
+        key = tuner.cache_key(spec.algorithm, graph)
+        picks[str(i)] = {"key": key, "backend": chosen.backend,
+                         "num_workers": chosen.num_workers,
+                         "fetch_size": chosen.fetch_size,
+                         "persistent": chosen.persistent}
+        row(f"server/autotune_backend/job{i}", 0.0,
+            f"{key} -> {chosen.backend}")
+    return picks
+
+
 def run(n_jobs: int = N_JOBS, scale: int = SCALE, grid_side: int = GRID_SIDE,
         policy: str = POLICY, eps: float = EPS, iters: int = 2,
         out: str = OUT, seed: int = 0):
     registry = build_registry(scale, grid_side, seed)
     specs = mixed_specs(n_jobs, registry, eps, seed)
     config = SchedulerConfig()
+
+    autotune_picks = _autotune_backends(registry, specs)
 
     fused_wall, fused = timeit_host(
         lambda: _run_fused(registry, specs, config, policy, n_jobs),
@@ -77,8 +112,10 @@ def run(n_jobs: int = N_JOBS, scale: int = SCALE, grid_side: int = GRID_SIDE,
             },
             "config": {"num_workers": config.num_workers,
                        "fetch_size": config.fetch_size,
+                       "backend": config.backend,
                        "policy": policy},
         },
+        "autotune_backend_per_job": autotune_picks,
         "fused": {
             "rounds": fused.stats.rounds,
             "wall_seconds": fused_wall,

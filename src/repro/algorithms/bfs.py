@@ -92,18 +92,22 @@ def init_state(graph: CSRGraph, source: int) -> BFSState:
 
 
 def make_wavefront_fn(graph: CSRGraph, strategy: str, work_budget: int,
-                      max_degree: int):
+                      max_degree: int, backend: str = "jnp"):
     """Reusable speculative-BFS wavefront body.
 
     Closed over the graph only — the returned ``f(items, valid, state)`` is a
     pure :data:`~repro.core.scheduler.WavefrontFn`, so it can drive a
     single-tenant run (``bfs_speculative``) or serve as one tenant's
     expansion logic inside the multi-job task server (``repro.server``).
+
+    ``backend`` selects the merge-path LBS implementation (jnp reference vs
+    the Pallas kernel) — outputs are bit-identical either way (DESIGN.md
+    section 9).
     """
     def f(items, valid, state: BFSState):
         if strategy == "merge_path":      # CTA worker: task+data-parallel LB
             ex = expand_merge_path(items, valid, graph.row_ptr, graph.col_idx,
-                                   work_budget)
+                                   work_budget, backend=backend)
             # items whose rows spill past the work budget are re-queued whole
             # (progress is guaranteed: budget >= max_degree, so the first
             # popped item always expands fully).
@@ -165,7 +169,8 @@ def bfs_speculative(
     queue_capacity = queue_capacity or max(4 * n, 1024)
     queue = make_queue(queue_capacity, jnp.array([source], dtype=jnp.int32))
     state = init_state(graph, source)
-    f = make_wavefront_fn(graph, strategy, work_budget, max_degree)
+    f = make_wavefront_fn(graph, strategy, work_budget, max_degree,
+                          backend=cfg.backend)
     _, state, stats = sched.run(f, queue, state, cfg, trace=trace)
     info = {
         "rounds": int(stats.rounds),

@@ -135,6 +135,12 @@ def make_wavefront_fn(graph: CSRGraph):
     A wavefront mixes both kinds (and multiple speculation depths).  The
     returned ``f`` is a pure WavefrontFn shared by the single-tenant driver
     (``coloring_async``) and the task server.
+
+    Backend note (DESIGN.md section 9): coloring's expansion is the padded
+    per-item gather, not merge-path LBS, so the body itself has no kernel
+    dispatch.  Under ``SchedulerConfig(backend="pallas")`` the algorithm
+    still exercises the Pallas hot path through the scheduler's queue push
+    (``kernels/queue_compact``), with bit-identical colors (tested).
     """
     n = graph.num_vertices
     max_degree = int(jnp.max(graph.degrees()))

@@ -51,7 +51,8 @@ class PRState:
 # is bounded by n.
 
 
-def _push_wavefront(graph: CSRGraph, damping: float, work_budget: int):
+def _push_wavefront(graph: CSRGraph, damping: float, work_budget: int,
+                    backend: str = "jnp"):
     """Shared core: harvest residues of popped vertices, push to neighbors."""
 
     def push(items, valid, state: PRState):
@@ -87,7 +88,7 @@ def _push_wavefront(graph: CSRGraph, damping: float, work_budget: int):
         in_queue = jnp.where(popped & ~trunc_mask, False, state.in_queue)
 
         ex = expand_merge_path(items, process, graph.row_ptr, graph.col_idx,
-                               work_budget)
+                               work_budget, backend=backend)
         deg_f = jnp.maximum(deg, 1).astype(jnp.float32)
         contrib = jnp.where(
             ex.valid, damping * res_lane[ex.owner] / deg_f[ex.owner], 0.0
@@ -181,6 +182,7 @@ def make_wavefront_fns(
     damping: float = 0.85,
     eps: float = 1e-6,
     work_budget: int | None = None,
+    backend: str = "jnp",
 ):
     """Reusable async-PageRank wavefront bodies: ``(f, on_empty, stop)``.
 
@@ -188,10 +190,11 @@ def make_wavefront_fns(
     wavefront), ``n_check`` is the rotating re-scan window.  All three
     returned callables are pure and job-parameterized, shared by the
     single-tenant driver (``pagerank_async``) and the task server.
+    ``backend`` selects the merge-path LBS implementation (DESIGN.md §9).
     """
     n = graph.num_vertices
     work_budget = default_work_budget(graph, wavefront, work_budget)
-    push = _push_wavefront(graph, damping, work_budget)
+    push = _push_wavefront(graph, damping, work_budget, backend=backend)
     n_check = min(n_check, n)
 
     def f(items, valid, state: PRState):
@@ -250,6 +253,7 @@ def pagerank_async(
     f, on_empty, stop = make_wavefront_fns(
         graph, cfg.wavefront, n_check=cfg.num_workers * check_size,
         damping=damping, eps=eps, work_budget=work_budget,
+        backend=cfg.backend,
     )
     state, seeds = init_state(graph, damping,
                               seed_count=min(n, queue_capacity // 2))

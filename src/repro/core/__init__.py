@@ -1,10 +1,14 @@
 """Atos core: wavefront task queue, persistent/discrete schedulers, expansion."""
+from .backend import (BACKENDS, default_interpret, has_tpu, resolve_backend,
+                      resolve_interpret)
 from .queue import EMPTY, MultiQueue, TaskQueue, make_multiqueue, make_queue
 from .scheduler import RunStats, SchedulerConfig, discrete_run, persistent_run, run
 from .frontier import Expansion, expand_merge_path, expand_per_item
 from .counters import WorkCounter, overwork_ratio
 
 __all__ = [
+    "BACKENDS", "default_interpret", "has_tpu", "resolve_backend",
+    "resolve_interpret",
     "EMPTY", "MultiQueue", "TaskQueue", "make_multiqueue", "make_queue",
     "RunStats", "SchedulerConfig", "discrete_run", "persistent_run", "run",
     "Expansion", "expand_merge_path", "expand_per_item",

@@ -15,10 +15,15 @@ low (mesh-like graphs), wasteful when it is high (scale-free graphs),
 vectorized *load-balancing search*: work item k binary-searches the exclusive
 scan of the popped rows' degrees to find its source row.  Every lane receives
 one unit of work regardless of degree skew — the paper's data-parallel LB,
-retargeted at the 8x128 VPU.  A Pallas TPU kernel with explicit VMEM
-BlockSpec tiling implements the same schedule for the hot path
-(``repro/kernels/frontier_expand``); this module is the jnp reference and the
-portable fallback.
+retargeted at the 8x128 VPU.
+
+The expansion schedule is a swappable component (DESIGN.md section 9): the
+``backend`` argument dispatches ``expand_merge_path`` either to the jnp
+implementation in this module (the bit-exact reference) or to the Pallas TPU
+kernel with explicit VMEM BlockSpec tiling (``repro/kernels/frontier_expand``
+— compiled on TPU, interpret mode elsewhere).  Both produce identical
+outputs; the choice is pure performance and is searched by the server
+autotuner (``server/autotune.py``).
 """
 from __future__ import annotations
 
@@ -26,6 +31,8 @@ from typing import NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
+
+from .backend import resolve_backend
 
 
 def searchsorted_right(sorted_arr: jax.Array, values: jax.Array) -> jax.Array:
@@ -62,6 +69,7 @@ def expand_merge_path(
     row_ptr: jax.Array,
     col_idx: jax.Array,
     work_budget: int,
+    backend: str = "jnp",
 ) -> Expansion:
     """CTA-style expansion: load-balancing search over the wavefront.
 
@@ -69,7 +77,17 @@ def expand_merge_path(
     bound on sum(degree(items)) processed per wavefront; excess work units are
     masked out (the caller sizes the budget; tests assert no truncation for
     the configured fetch sizes).
+
+    ``backend`` selects the LBS implementation: ``"jnp"`` runs the reference
+    below, ``"pallas"`` dispatches to the TPU kernel
+    (``kernels/frontier_expand/ops.frontier_expand``), ``"auto"`` picks by
+    hardware.  Outputs are bit-identical across backends (tested).
     """
+    if resolve_backend(backend) == "pallas":
+        # imported lazily: kernels/ imports Expansion from this module
+        from ..kernels.frontier_expand.ops import frontier_expand
+
+        return frontier_expand(items, valid, row_ptr, col_idx, work_budget)
     safe = jnp.where(valid, items, 0)
     deg = jnp.where(valid, row_ptr[safe + 1] - row_ptr[safe], 0)
     scan = jnp.cumsum(deg)                       # inclusive scan of degrees

@@ -12,6 +12,10 @@ pytree, so it lives in HBM and threads through ``lax.while_loop``) where
     the validity mask instead of an atomic ticket counter.  This is
     deterministic and collision-free by construction — the TPU-idiomatic
     replacement for ``atomicAdd`` reservation (see DESIGN.md section 2).
+    ``push(..., backend="pallas")`` runs the reservation through the
+    two-phase Pallas stream-compaction kernel (``kernels/queue_compact``)
+    instead of the jnp prefix sum — bit-identical results, hardware hot
+    path (DESIGN.md section 9).
 
 The queue stores int32 task ids.  Atos tags tasks by sign (graph coloring) or
 by payload; both patterns work unchanged here.  A ``num_lanes``-wide variant
@@ -26,6 +30,8 @@ from typing import Tuple
 
 import jax
 import jax.numpy as jnp
+
+from .backend import resolve_backend
 
 EMPTY = jnp.int32(-(2 ** 31))  # sentinel for "no item"
 
@@ -83,14 +89,22 @@ class TaskQueue:
         q = dataclasses.replace(self, head=self.head + k)
         return items, valid, q
 
-    def push(self, items: jax.Array, mask: jax.Array) -> "TaskQueue":
+    def push(self, items: jax.Array, mask: jax.Array,
+             backend: str = "jnp") -> "TaskQueue":
         """Push ``items[mask]`` — prefix-sum slot reservation.
 
         Each valid item i gets slot ``tail + excl_cumsum(mask)[i]``; one
         vectorized scatter commits the wavefront.  Items beyond capacity are
         dropped and counted (Atos's queue is sized to never overflow; we keep
         the counter so tests & benchmarks can assert no drops happened).
+
+        ``backend="pallas"`` routes the reservation through the Pallas
+        stream-compaction kernel (``kernels/queue_compact``); the resulting
+        queue pytree — buffer contents, cursors, dropped counter — is
+        bit-identical to the jnp path (tested in tests/test_backend.py).
         """
+        if resolve_backend(backend) == "pallas":
+            return self._push_pallas(items, mask)
         mask = mask.astype(jnp.int32)
         offs = jnp.cumsum(mask) - mask  # exclusive prefix sum
         free = self.capacity - self.size
@@ -106,9 +120,34 @@ class TaskQueue:
             self, buf=buf, tail=self.tail + n_push, dropped=self.dropped + n_drop
         )
 
-    def push_dense(self, items: jax.Array) -> "TaskQueue":
+    def _push_pallas(self, items: jax.Array, mask: jax.Array) -> "TaskQueue":
+        """Kernel-backed push: compact valid items, then one contiguous write.
+
+        The compaction kernel assigns valid item i the same rank the jnp
+        path's exclusive prefix sum does, so the first ``free`` valid items
+        land in the same slots with the same values and the overflow
+        accounting matches exactly.
+        """
+        from ..kernels.queue_compact.ops import compact  # lazy: kernels->core
+
+        compacted, count = compact(items, mask.astype(bool))
+        free = self.capacity - self.size
+        n_push = jnp.minimum(count, free)
+        j = jnp.arange(items.shape[0], dtype=jnp.int32)
+        live = j < n_push
+        slots = (self.tail + j) % self.capacity
+        buf = self.buf.at[jnp.where(live, slots, self.capacity)].set(
+            compacted, mode="drop"
+        )
+        return dataclasses.replace(
+            self, buf=buf, tail=self.tail + n_push,
+            dropped=self.dropped + (count - n_push)
+        )
+
+    def push_dense(self, items: jax.Array, backend: str = "jnp") -> "TaskQueue":
         """Push every element of ``items`` (all valid)."""
-        return self.push(items, jnp.ones(items.shape, dtype=bool))
+        return self.push(items, jnp.ones(items.shape, dtype=bool),
+                         backend=backend)
 
 
 def make_queue(capacity: int, init_items: jax.Array | None = None) -> TaskQueue:
@@ -199,8 +238,10 @@ class MultiQueue:
         )
         return items, valid, self.with_lane(lane_id, lane2)
 
-    def push(self, lane_id, items: jax.Array, mask: jax.Array) -> "MultiQueue":
-        return self.with_lane(lane_id, self.lane(lane_id).push(items, mask))
+    def push(self, lane_id, items: jax.Array, mask: jax.Array,
+             backend: str = "jnp") -> "MultiQueue":
+        return self.with_lane(
+            lane_id, self.lane(lane_id).push(items, mask, backend=backend))
 
 
 def make_multiqueue(capacity: int, num_lanes: int) -> MultiQueue:

@@ -47,12 +47,21 @@ class RunStats(NamedTuple):
 
 @dataclasses.dataclass(frozen=True)
 class SchedulerConfig:
-    """Atos launch configuration (see Listing 3 of the paper)."""
+    """Atos launch configuration (see Listing 3 of the paper).
+
+    ``backend`` is the kernel-backend axis (DESIGN.md section 9): ``"jnp"``
+    (reference, default — bit-exact and fastest on CPU), ``"pallas"`` (the
+    TPU kernels: LBS expansion + stream-compaction push; interpret mode
+    off-TPU), or ``"auto"`` (pallas iff a TPU is attached).  Results are
+    bit-identical across backends, so the autotuner searches this axis
+    alongside the paper's three (``server/autotune.py``).
+    """
 
     num_workers: int = 64        # numBlock — parallel workers per wavefront
     fetch_size: int = 1          # FETCH_SIZE — items each worker pops
     persistent: bool = True      # ifPersist — kernel strategy
     max_rounds: int = 1 << 16    # safety bound for while_loop
+    backend: str = "jnp"         # kernel backend: jnp | pallas | auto
 
     @property
     def wavefront(self) -> int:
@@ -67,7 +76,7 @@ def _wavefront_step(f: WavefrontFn, on_empty, cfg: SchedulerConfig, carry):
     def run_f(args):
         q, s = args
         new_items, new_mask, s2 = f(items, valid, s)
-        q2 = q.push(new_items, new_mask)
+        q2 = q.push(new_items, new_mask, backend=cfg.backend)
         return q2, s2
 
     def run_empty(args):
@@ -75,7 +84,7 @@ def _wavefront_step(f: WavefrontFn, on_empty, cfg: SchedulerConfig, carry):
         if on_empty is None:
             return q, s
         new_items, new_mask, s2 = on_empty(s)
-        return q.push(new_items, new_mask), s2
+        return q.push(new_items, new_mask, backend=cfg.backend), s2
 
     queue, state = jax.lax.cond(n_valid > 0, run_f, run_empty, (queue, state))
     return queue, state, rounds + 1, processed + n_valid

@@ -1,6 +1,15 @@
-"""Pallas TPU kernels (pl.pallas_call + BlockSpec), validated interpret=True.
+"""Pallas TPU kernels (pl.pallas_call + BlockSpec) + their jnp oracles.
 
-frontier_expand -- merge-path load-balancing search (Atos CTA-worker LB)
-queue_compact   -- prefix-sum slot reservation / stream compaction
-flash_attention -- tiled online-softmax attention (LM hot path)
+frontier_expand -- merge-path load-balancing search (Atos CTA-worker LB);
+                   hot path of ``core.frontier.expand_merge_path`` under
+                   ``backend="pallas"`` (core/backend.py, DESIGN.md §9)
+queue_compact   -- prefix-sum slot reservation / stream compaction; hot
+                   path of ``core.queue.TaskQueue.push`` under
+                   ``backend="pallas"``
+flash_attention -- tiled online-softmax attention (LM stack; reference-only
+                   in the Atos hot path — see its ops.py)
+
+All kernels compile on TPU and fall back to interpret mode elsewhere
+(``core.backend.resolve_interpret``), so tests validate the real kernel
+schedule on any host.
 """

@@ -25,6 +25,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ...core.backend import resolve_interpret
+
 DEFAULT_TILE_Q = 128
 DEFAULT_TILE_KV = 128
 NEG_INF = -1e30
@@ -86,8 +88,9 @@ def flash_attention_pallas(
     window: int = 0,       # 0 = unlimited; >0 = sliding window
     tile_q: int = DEFAULT_TILE_Q,
     tile_kv: int = DEFAULT_TILE_KV,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ):
+    interpret = resolve_interpret(interpret)
     bh, s_q, d = q.shape
     bkv, s_kv, _ = k.shape
     assert bh % bkv == 0, "q heads must be a multiple of kv heads"

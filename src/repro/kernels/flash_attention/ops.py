@@ -1,10 +1,18 @@
 """jit'd public wrapper around the flash-attention kernel.
 
 Accepts the model-layer layout [B, S, H, D] (+ GQA KV [B, S, KVH, D]) and
-dispatches to the Pallas kernel (TPU target; interpret=True on CPU) or to the
-jnp reference (``impl='xla'``).  The dry-run/roofline path uses 'xla' so XLA
-cost analysis can see the FLOPs (DESIGN.md section 7); 'pallas' is the
-hardware hot path.
+dispatches to the Pallas kernel or to the jnp reference (``impl='xla'``).
+
+Call paths: unlike ``kernels/frontier_expand`` and ``kernels/queue_compact``
+— which the backend layer (``core/backend.py``) wires into the Atos
+scheduler hot path — this kernel is **reference-only** today: the model
+stack (``models/transformer.py``, dry-run/roofline) calls ``impl='xla'`` so
+XLA cost analysis can see the FLOPs (DESIGN.md section 7), and nothing in
+the task-server hot path dispatches to it.  ``impl='pallas'`` is exercised
+by ``tests/test_kernels.py`` and ``benchmarks/bench_kernels.py`` only.
+
+``interpret=None`` defers to :func:`repro.core.backend.resolve_interpret`:
+compiled on TPU, interpreter elsewhere.
 """
 from __future__ import annotations
 
@@ -13,6 +21,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from ...core.backend import resolve_interpret
 from .kernel import flash_attention_pallas
 from .ref import attention_ref
 
@@ -20,7 +29,7 @@ from .ref import attention_ref
 @functools.partial(jax.jit, static_argnames=("causal", "window", "impl",
                                              "interpret"))
 def multihead_attention(q, k, v, *, causal: bool = True, window: int = 0,
-                        impl: str = "xla", interpret: bool = True):
+                        impl: str = "xla", interpret: bool | None = None):
     """q: [B, Sq, H, D], k/v: [B, Skv, KVH, D] -> [B, Sq, H, D]."""
     b, s_q, h, d = q.shape
     kvh = k.shape[2]
@@ -29,7 +38,7 @@ def multihead_attention(q, k, v, *, causal: bool = True, window: int = 0,
     vf = v.transpose(0, 2, 1, 3).reshape(b * kvh, v.shape[1], d)
     if impl == "pallas":
         out = flash_attention_pallas(qf, kf, vf, causal=causal, window=window,
-                                     interpret=interpret)
+                                     interpret=resolve_interpret(interpret))
     else:
         out = attention_ref(qf, kf, vf, causal=causal, window=window)
     return out.reshape(b, h, s_q, d).transpose(0, 2, 1, 3)

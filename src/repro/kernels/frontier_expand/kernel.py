@@ -32,6 +32,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ...core.backend import resolve_interpret
+
 TILE = 1024  # work units per grid step (8 sublanes x 128 lanes)
 
 
@@ -54,11 +56,13 @@ def _lbs_kernel(scan_ref, owner_ref, rank_ref, *, w: int):
 
 
 @functools.partial(jax.jit, static_argnames=("budget", "interpret"))
-def lbs_pallas(scan: jax.Array, budget: int, interpret: bool = True):
+def lbs_pallas(scan: jax.Array, budget: int, interpret: bool | None = None):
     """Run the LBS kernel. ``scan``: [W] int32 inclusive scan of degrees.
 
-    Returns (owner[budget], rank[budget]) int32.
+    Returns (owner[budget], rank[budget]) int32.  ``interpret=None`` defers
+    to the backend layer: compiled on TPU, interpreter elsewhere.
     """
+    interpret = resolve_interpret(interpret)
     w = scan.shape[0]
     w_pad = max(128, -(-w // 128) * 128)
     # pad with the last scan value so padded rows own zero work units

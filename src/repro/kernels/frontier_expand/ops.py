@@ -1,4 +1,20 @@
-"""jit'd public wrapper: full CSR wavefront expansion via the LBS kernel."""
+"""jit'd public wrapper: full CSR wavefront expansion via the LBS kernel.
+
+Call paths (wired by the backend layer, ``core/backend.py``):
+
+  * ``core/frontier.expand_merge_path(..., backend="pallas"|"auto")``
+    dispatches here — which makes this kernel the hot path of the
+    merge-path strategy in ``algorithms/bfs.py`` and
+    ``algorithms/pagerank.py``, of every server job built from them
+    (``server/jobs._kernel_bundle``), and of any autotuner candidate with
+    ``SchedulerConfig(backend="pallas")``.
+  * ``benchmarks/bench_kernels.py`` times it against the jnp reference and
+    emits the comparison to ``BENCH_kernels.json``.
+
+``interpret=None`` defers to :func:`repro.core.backend.resolve_interpret`:
+compiled on TPU, interpreter elsewhere — a real-TPU run never silently
+interprets.
+"""
 from __future__ import annotations
 
 import functools
@@ -6,15 +22,22 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from ...core.backend import resolve_interpret
 from ...core.frontier import Expansion
 from .kernel import lbs_pallas
 
 
 @functools.partial(jax.jit, static_argnames=("budget", "interpret"))
 def frontier_expand(items, valid, row_ptr, col_idx, budget: int,
-                    interpret: bool = True) -> Expansion:
+                    interpret: bool | None = None) -> Expansion:
     """Drop-in replacement for ``core.frontier.expand_merge_path`` that runs
-    the merge-path search as a Pallas TPU kernel."""
+    the merge-path search as a Pallas TPU kernel.
+
+    Bit-identical to the reference by construction (same masking, same
+    owner/rank definitions) — asserted by ``tests/test_kernels.py`` and,
+    end-to-end, by the backend-parity tests in ``tests/test_algorithms.py``.
+    """
+    interpret = resolve_interpret(interpret)
     safe = jnp.where(valid, items, 0)
     deg = jnp.where(valid, row_ptr[safe + 1] - row_ptr[safe], 0)
     scan = jnp.cumsum(deg)

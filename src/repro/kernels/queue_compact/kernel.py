@@ -22,6 +22,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from ...core.backend import resolve_interpret
+
 TILE = 256
 
 
@@ -40,8 +42,9 @@ def _compact_kernel(items_ref, mask_ref, out_ref, cnt_ref):
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def compact_tiles_pallas(items: jax.Array, mask: jax.Array,
-                         interpret: bool = True):
+                         interpret: bool | None = None):
     """[N] items + [N] mask -> ([n_tiles, TILE] local, [n_tiles] counts)."""
+    interpret = resolve_interpret(interpret)
     n = items.shape[0]
     n_pad = -(-n // TILE) * TILE
     items_p = jnp.zeros((1, n_pad), jnp.int32).at[0, :n].set(items)

@@ -3,6 +3,7 @@
   PYTHONPATH=src python -m repro.launch.taskserver --jobs 8 --policy weighted
   PYTHONPATH=src python -m repro.launch.taskserver --jobs 12 --lanes 4 \
       --autotune --compare-sequential
+  PYTHONPATH=src python -m repro.launch.taskserver --jobs 8 --backend pallas
 
 Builds one scale-free (R-MAT) and one mesh (2-D grid) graph — the paper's
 two dataset regimes — submits a mixed batch of BFS / PageRank / coloring
@@ -79,6 +80,12 @@ def main() -> None:
                              "longest_queue_first"])
     ap.add_argument("--workers", type=int, default=64)
     ap.add_argument("--fetch", type=int, default=1)
+    ap.add_argument("--backend", default="auto",
+                    choices=["jnp", "pallas", "auto"],
+                    help="kernel backend: jnp reference, Pallas TPU kernels "
+                         "(interpret mode off-TPU), or auto-detect "
+                         "(ignored under --autotune, which searches the "
+                         "backend axis itself)")
     ap.add_argument("--scale", type=int, default=8,
                     help="R-MAT scale (2**scale vertices)")
     ap.add_argument("--grid-side", type=int, default=16)
@@ -100,7 +107,8 @@ def main() -> None:
     specs = mixed_specs(args.jobs, registry, args.eps, args.seed)
 
     config = None if args.autotune else SchedulerConfig(
-        num_workers=args.workers, fetch_size=args.fetch)
+        num_workers=args.workers, fetch_size=args.fetch,
+        backend=args.backend)
     autotuner = (Autotuner(cache_path=args.autotune_cache)
                  if args.autotune else None)
 

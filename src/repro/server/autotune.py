@@ -5,9 +5,17 @@ kernels when frontiers are small (launch fixed cost dominates), discrete
 when rounds are few and fat; more workers / larger FETCH_SIZE for
 heavy-tailed frontiers, narrow wavefronts for meshes.  Instead of shipping
 those guidelines as prose, the autotuner *measures* a small candidate grid
-over ``SchedulerConfig = (persistent, num_workers, fetch_size)`` on a
-calibration workload and caches the winner per ``(algorithm, graph_class)``
+over ``SchedulerConfig = (persistent, num_workers, fetch_size, backend)`` on
+a calibration workload and caches the winner per ``(algorithm, graph_class)``
 (DESIGN.md section 8).
+
+The fourth axis, ``backend`` (DESIGN.md section 9), selects the kernel
+implementation — jnp reference vs the Pallas TPU kernels
+(``kernels/frontier_expand`` LBS + ``kernels/queue_compact`` push).  Results
+are bit-identical across backends, so the tuner may pick freely on wall time
+alone: on TPU the Pallas candidates compile to Mosaic and typically win; on
+CPU they run in interpret mode and lose honestly.  The chosen backend is
+persisted in the JSON cache like every other axis.
 
 Graph class is the paper's two-regime split: ``scale_free`` (heavy-tailed
 degrees, low diameter) vs ``mesh`` (bounded degree, high diameter), decided
@@ -18,6 +26,7 @@ Decisions are cached to JSON (survives processes) and logged.
 """
 from __future__ import annotations
 
+import dataclasses
 import json
 import logging
 import statistics
@@ -33,15 +42,27 @@ from ..graph.csr import CSRGraph
 
 log = logging.getLogger("repro.server.autotune")
 
-#: curated grid: both kernel strategies, narrow->wide wavefronts.  The plain
-#: ``SchedulerConfig()`` default is first — it must always be measured.
-DEFAULT_CANDIDATES: Tuple[SchedulerConfig, ...] = (
+#: curated launch shapes: both kernel strategies, narrow->wide wavefronts.
+#: The plain ``SchedulerConfig()`` default is first — it must always be
+#: measured.
+_BASE_GRID: Tuple[SchedulerConfig, ...] = (
     SchedulerConfig(),                                       # the default
     SchedulerConfig(num_workers=16, fetch_size=1),
     SchedulerConfig(num_workers=64, fetch_size=4),
     SchedulerConfig(num_workers=256, fetch_size=1),
     SchedulerConfig(num_workers=16, fetch_size=1, persistent=False),
     SchedulerConfig(num_workers=64, fetch_size=1, persistent=False),
+)
+
+#: the searched backends — the resolved axis values only ("auto" would just
+#: alias one of them and waste calibration runs).
+BACKEND_GRID: Tuple[str, ...] = ("jnp", "pallas")
+
+#: full candidate grid: every launch shape crossed with every backend.  The
+#: jnp block comes first so ``DEFAULT_CANDIDATES[0] == SchedulerConfig()``.
+DEFAULT_CANDIDATES: Tuple[SchedulerConfig, ...] = tuple(
+    dataclasses.replace(c, backend=b) for b in BACKEND_GRID
+    for c in _BASE_GRID
 )
 
 
@@ -55,18 +76,22 @@ def graph_class(graph: CSRGraph) -> str:
 
 def _config_key(cfg: SchedulerConfig) -> str:
     kind = "persistent" if cfg.persistent else "discrete"
-    return f"{kind}|workers={cfg.num_workers}|fetch={cfg.fetch_size}"
+    return (f"{kind}|workers={cfg.num_workers}|fetch={cfg.fetch_size}"
+            f"|backend={cfg.backend}")
 
 
 def _config_dict(cfg: SchedulerConfig) -> dict:
     return {"num_workers": cfg.num_workers, "fetch_size": cfg.fetch_size,
-            "persistent": cfg.persistent}
+            "persistent": cfg.persistent, "backend": cfg.backend}
 
 
 def _config_from_dict(d: dict) -> SchedulerConfig:
+    # cache entries written before the backend axis existed lack the field;
+    # they were measured on the jnp reference.
     return SchedulerConfig(num_workers=int(d["num_workers"]),
                            fetch_size=int(d["fetch_size"]),
-                           persistent=bool(d["persistent"]))
+                           persistent=bool(d["persistent"]),
+                           backend=str(d.get("backend", "jnp")))
 
 
 def _default_runner(algorithm: str, graph: CSRGraph,
@@ -211,9 +236,12 @@ class Autotuner:
 
 
 def _parse_config_key(key: str) -> SchedulerConfig:
-    kind, workers, fetch = key.split("|")
+    # pre-backend caches wrote 3-field keys; those runs used the jnp path.
+    kind, workers, fetch, *rest = key.split("|")
+    backend = rest[0].split("=")[1] if rest else "jnp"
     return SchedulerConfig(
         num_workers=int(workers.split("=")[1]),
         fetch_size=int(fetch.split("=")[1]),
         persistent=(kind == "persistent"),
+        backend=backend,
     )

@@ -166,7 +166,7 @@ class TaskServer:
                 biggest = max(biggest, 8 * n)
         return biggest
 
-    def _step_for(self, f, stop, W: int):
+    def _step_for(self, f, stop, W: int, backend: str):
         """One compiled scheduler step per distinct wavefront body.
 
         ``quota`` and ``job_id`` are traced scalars, so every tenant sharing
@@ -181,7 +181,9 @@ class TaskServer:
         registry instead of pinning every served graph process-wide.
         """
         cache = self.registry.step_cache
-        key = (f, stop, W)  # function objects as keys: no id-reuse after GC
+        # function objects as keys: no id-reuse after GC; backend is part of
+        # the key so jnp- and pallas-backed servers never share a step.
+        key = (f, stop, W, backend)
         if key not in cache:
             @jax.jit
             def step(mq, lane_id, state, counters, quota, job_id):
@@ -192,7 +194,8 @@ class TaskServer:
                 mismatch = jnp.sum(
                     (valid & (unpack_job(packed) != job_id)).astype(jnp.int32))
                 out, mask, state = f(natural, valid, state)
-                mq = mq.push(lane_id, pack(job_id, out), mask)
+                mq = mq.push(lane_id, pack(job_id, out), mask,
+                             backend=backend)
                 n_valid = jnp.sum(valid.astype(jnp.int32))
                 counters = counters + jnp.stack([n_valid, mismatch])
                 stopped = (jnp.bool_(False) if stop is None
@@ -202,14 +205,15 @@ class TaskServer:
             cache[key] = step
         return cache[key]
 
-    def _empty_step_for(self, on_empty, stop):
+    def _empty_step_for(self, on_empty, stop, backend: str):
         cache = self.registry.empty_step_cache
-        key = (on_empty, stop)
+        key = (on_empty, stop, backend)
         if key not in cache:
             @jax.jit
             def step(mq, lane_id, state, job_id):
                 out, mask, state = on_empty(state)
-                mq = mq.push(lane_id, pack(job_id, out), mask)
+                mq = mq.push(lane_id, pack(job_id, out), mask,
+                             backend=backend)
                 stopped = (jnp.bool_(False) if stop is None
                            else stop(state))
                 return mq, state, stopped
@@ -222,7 +226,7 @@ class TaskServer:
         if job.program is None:
             job.program = self.registry.build(
                 job.spec, job.job_id, cfg.wavefront, cfg.num_workers,
-                lane_capacity)
+                lane_capacity, backend=cfg.backend)
         prog = job.program
         job.state, seeds = prog.init()
         job.counters = jnp.zeros((2,), jnp.int32)
@@ -237,6 +241,8 @@ class TaskServer:
         job.telemetry.admitted_round = rounds
         mq = mq.reset_lane(lane)
         seeds = jnp.asarray(seeds, jnp.int32)
+        # seed push stays on the jnp path: it runs once per admission outside
+        # the compiled round step, and push results are backend-identical.
         mq = mq.push(lane, pack(job.job_id, seeds),
                      jnp.ones(seeds.shape, bool))
         log.info("admit job %d (%s on %s) -> lane %d at round %d",
@@ -336,14 +342,16 @@ class TaskServer:
                 prog = job.program
                 quota = int(quotas[lane])
                 if quota > 0:
-                    step = self._step_for(prog.wavefront_fn, prog.stop, W)
+                    step = self._step_for(prog.wavefront_fn, prog.stop, W,
+                                          cfg.backend)
                     mq, job.state, job.counters, stopped = step(
                         mq, lane, job.state, job.counters, quota,
                         job.job_id)
                     job.telemetry.rounds_active += 1
                 elif sizes[lane] == 0 and prog.on_empty is not None \
                         and not job.stopped:
-                    estep = self._empty_step_for(prog.on_empty, prog.stop)
+                    estep = self._empty_step_for(prog.on_empty, prog.stop,
+                                                 cfg.backend)
                     mq, job.state, stopped = estep(
                         mq, lane, job.state, job.job_id)
                     job.telemetry.rounds_active += 1

@@ -14,6 +14,14 @@ callables the scheduler drives:
 Programs are exactly the reusable wavefront components the algorithms
 export (``bfs.make_wavefront_fn`` etc.) — the server adds no algorithmic
 logic of its own, it only routes, packs, and meters (DESIGN.md section 8).
+
+Kernel backends (DESIGN.md section 9): ``build(..., backend=...)`` threads
+the server's kernel-backend axis into each bundle, so under
+``SchedulerConfig(backend="pallas")`` every BFS/PageRank tenant's merge-path
+expansion runs the Pallas LBS kernel (``kernels/frontier_expand``) and every
+tenant's queue push runs the Pallas compaction kernel
+(``kernels/queue_compact``) via the engine's step.  ``backend`` is part of
+the kernel-cache key: bundles are shared only between jobs that agree on it.
 """
 from __future__ import annotations
 
@@ -72,8 +80,12 @@ _INIT_ONLY = {"bfs": ("source",), "pagerank": (), "coloring": ()}
 
 
 def _kernel_bundle(spec: JobSpec, graph: CSRGraph, wavefront: int,
-                   num_workers: int) -> Dict[str, Any]:
-    """Build the cacheable (init-independent) callables for one spec."""
+                   num_workers: int, backend: str) -> Dict[str, Any]:
+    """Build the cacheable (init-independent) callables for one spec.
+
+    ``backend`` picks the kernel implementations inside the bundle (jnp
+    reference vs Pallas); results are bit-identical across backends.
+    """
     n = graph.num_vertices
     p = {k: v for k, v in spec.params.items()
          if k not in _INIT_ONLY[spec.algorithm]}
@@ -84,7 +96,8 @@ def _kernel_bundle(spec: JobSpec, graph: CSRGraph, wavefront: int,
             graph, wavefront, p.pop("work_budget", None),
             max_degree=max_degree)
         _reject_unknown(p)
-        f = _bfs.make_wavefront_fn(graph, strategy, work_budget, max_degree)
+        f = _bfs.make_wavefront_fn(graph, strategy, work_budget, max_degree,
+                                   backend=backend)
         return dict(f=f, on_empty=None, stop=None,
                     result=lambda s: s.dist, ideal=n)
     if spec.algorithm == "pagerank":
@@ -96,6 +109,7 @@ def _kernel_bundle(spec: JobSpec, graph: CSRGraph, wavefront: int,
         f, on_empty, stop = _pagerank.make_wavefront_fns(
             graph, wavefront, n_check=num_workers * check_size,
             damping=damping, eps=eps, work_budget=work_budget,
+            backend=backend,
         )
         return dict(f=f, on_empty=on_empty, stop=stop,
                     result=lambda s: s.rank, ideal=n)
@@ -160,17 +174,18 @@ class JobRegistry:
         return sorted(self._graphs)
 
     def build(self, spec: JobSpec, job_id: int, wavefront: int,
-              num_workers: int, lane_capacity: int) -> Program:
+              num_workers: int, lane_capacity: int,
+              backend: str = "jnp") -> Program:
         graph = self.graph(spec.graph)
         check_job_fits(job_id, graph.num_vertices)
         kernel_params = tuple(sorted(
             (k, v) for k, v in spec.params.items()
             if k not in _INIT_ONLY[spec.algorithm]))
         key = (spec.algorithm, spec.graph, kernel_params,
-               wavefront, num_workers)
+               wavefront, num_workers, backend)
         if key not in self._kernels:
             self._kernels[key] = _kernel_bundle(
-                spec, graph, wavefront, num_workers)
+                spec, graph, wavefront, num_workers, backend)
         k = self._kernels[key]
         return Program(
             algorithm=spec.algorithm, graph_name=spec.graph, graph=graph,

@@ -31,6 +31,11 @@ GRAPHS = {
     "mesh_like": grid2d(20, 20),
 }
 
+# the kernel-backend axis (DESIGN.md section 9): "pallas" runs the real
+# Pallas kernels in interpret mode on CPU, so every correctness test below
+# doubles as a backend-parity oracle.
+BACKENDS = ("jnp", "pallas")
+
 
 @pytest.mark.parametrize("gname", list(GRAPHS))
 def test_bfs_bsp_correct(gname):
@@ -43,10 +48,11 @@ def test_bfs_bsp_correct(gname):
 @pytest.mark.parametrize("gname", list(GRAPHS))
 @pytest.mark.parametrize("strategy", ["merge_path", "per_item"])
 @pytest.mark.parametrize("persistent", [True, False])
-def test_bfs_speculative_correct(gname, strategy, persistent):
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_bfs_speculative_correct(gname, strategy, persistent, backend):
     g = GRAPHS[gname]
     cfg = SchedulerConfig(num_workers=8, fetch_size=4, persistent=persistent,
-                          max_rounds=100000)
+                          max_rounds=100000, backend=backend)
     dist, info = bfs_speculative(g, 0, cfg, strategy=strategy)
     np.testing.assert_array_equal(np.asarray(dist, np.int64), _nx_dists(g, 0))
     assert info["dropped"] == 0
@@ -65,11 +71,13 @@ def test_bfs_small_budget_still_correct():
 
 
 @pytest.mark.parametrize("gname", list(GRAPHS))
-def test_pagerank_matches_power_iteration(gname):
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_pagerank_matches_power_iteration(gname, backend):
     g = GRAPHS[gname]
     ref = pagerank_reference(g, iters=300)
     r_bsp, _ = pagerank_bsp(g, eps=1e-7)
-    cfg = SchedulerConfig(num_workers=8, fetch_size=4, max_rounds=100000)
+    cfg = SchedulerConfig(num_workers=8, fetch_size=4, max_rounds=100000,
+                          backend=backend)
     r_async, info = pagerank_async(g, cfg, eps=1e-7)
     assert float(jnp.max(jnp.abs(r_bsp - ref))) < 1e-3
     assert float(jnp.max(jnp.abs(r_async - ref))) < 1e-3
@@ -95,10 +103,11 @@ def test_coloring_bsp_valid(gname):
 
 @pytest.mark.parametrize("gname", list(GRAPHS))
 @pytest.mark.parametrize("persistent", [True, False])
-def test_coloring_async_valid(gname, persistent):
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_coloring_async_valid(gname, persistent, backend):
     g = GRAPHS[gname]
     cfg = SchedulerConfig(num_workers=8, fetch_size=4, persistent=persistent,
-                          max_rounds=100000)
+                          max_rounds=100000, backend=backend)
     colors, info = coloring_async(g, cfg)
     assert validate_coloring(g, colors)
     assert info["dropped"] == 0
@@ -111,6 +120,33 @@ def test_coloring_async_less_overwork_than_bsp():
     cfg = SchedulerConfig(num_workers=8, fetch_size=4, max_rounds=100000)
     _, asy = coloring_async(g, cfg)
     assert asy["work"] < bsp["work"]
+
+
+# ------------------------------------------------- backend parity oracle
+# Beyond "both backends are correct": the backends must agree *bit for bit*
+# — same results, same rounds, same work — so the autotuner may switch
+# between them on wall time alone (DESIGN.md section 9).
+@pytest.mark.parametrize("gname", list(GRAPHS))
+def test_backends_bit_identical(gname):
+    g = GRAPHS[gname]
+    def cfg(backend):
+        return SchedulerConfig(num_workers=8, fetch_size=4,
+                               max_rounds=100000, backend=backend)
+
+    d_j, i_j = bfs_speculative(g, 0, cfg("jnp"), strategy="merge_path")
+    d_p, i_p = bfs_speculative(g, 0, cfg("pallas"), strategy="merge_path")
+    np.testing.assert_array_equal(np.asarray(d_j), np.asarray(d_p))
+    assert i_j == i_p
+
+    r_j, pi_j = pagerank_async(g, cfg("jnp"), eps=1e-6)
+    r_p, pi_p = pagerank_async(g, cfg("pallas"), eps=1e-6)
+    np.testing.assert_array_equal(np.asarray(r_j), np.asarray(r_p))
+    assert pi_j == pi_p
+
+    c_j, ci_j = coloring_async(g, cfg("jnp"))
+    c_p, ci_p = coloring_async(g, cfg("pallas"))
+    np.testing.assert_array_equal(np.asarray(c_j), np.asarray(c_p))
+    assert ci_j == ci_p
 
 
 def test_coloring_permutation_reduces_overwork():

@@ -303,7 +303,8 @@ def test_autotuner_selects_caches_and_logs(registry, tmp_path, caplog):
     assert any("autotune decision" in r.message for r in caplog.records)
 
     entry = json.loads(cache.read_text())["bfs|mesh"]
-    assert entry["chosen"] == "persistent|workers=16|fetch=1"
+    assert entry["chosen"] == "persistent|workers=16|fetch=1|backend=jnp"
+    assert entry["config"]["backend"] == "jnp"  # 4th axis persisted
     # chosen config is at least as fast as the default on calibration data
     assert entry["trials"][entry["chosen"]] <= entry["default_wall"]
 
@@ -373,6 +374,78 @@ def test_autotuner_real_calibration_smoke(registry, tmp_path):
     tuner.tune("bfs", registry.graph("grid"))
     entry = json.loads((tmp_path / "tune.json").read_text())["bfs|mesh"]
     assert entry["trials"][entry["chosen"]] <= entry["default_wall"]
+
+
+def test_default_candidate_grid_spans_backends():
+    """The tuner's 4th axis: every launch shape is measured on both
+    backends, and the plain default stays first (always measured)."""
+    from repro.server import BACKEND_GRID, DEFAULT_CANDIDATES
+    assert set(BACKEND_GRID) == {"jnp", "pallas"}
+    assert {c.backend for c in DEFAULT_CANDIDATES} == {"jnp", "pallas"}
+    per_backend = len(DEFAULT_CANDIDATES) // len(BACKEND_GRID)
+    assert per_backend * len(BACKEND_GRID) == len(DEFAULT_CANDIDATES)
+    assert DEFAULT_CANDIDATES[0] == SchedulerConfig()
+
+
+def test_autotuner_can_choose_pallas_and_persists_it(registry, tmp_path):
+    import time
+
+    def fake_runner(algorithm, graph, cfg):
+        time.sleep(0.01 if cfg.backend == "pallas" else 0.04)
+
+    cache = tmp_path / "tune.json"
+    candidates = [SchedulerConfig(),
+                  SchedulerConfig(backend="pallas")]
+    tuner = Autotuner(cache_path=cache, candidates=candidates,
+                      warmup=0, iters=1, runner=fake_runner)
+    chosen = tuner.tune("coloring", registry.graph("grid"))
+    assert chosen.backend == "pallas"
+    entry = json.loads(cache.read_text())["coloring|mesh"]
+    assert entry["config"]["backend"] == "pallas"
+    assert entry["chosen"].endswith("|backend=pallas")
+    # a fresh process reloads the backend choice from the JSON cache
+    fresh = Autotuner(cache_path=cache, candidates=candidates,
+                      warmup=0, iters=1, runner=fake_runner)
+    assert fresh.tune("coloring", registry.graph("grid")).backend == "pallas"
+
+
+def test_pre_backend_cache_entries_still_load(registry, tmp_path):
+    """Caches written before the backend axis existed (no "backend" field,
+    3-part keys) must load as jnp-backed measurements, not crash."""
+    cache = tmp_path / "tune.json"
+    cache.write_text(json.dumps({
+        "bfs|mesh": {
+            "chosen": "persistent|workers=16|fetch=1",
+            "config": {"num_workers": 16, "fetch_size": 1,
+                       "persistent": True},
+            "trials": {"persistent|workers=16|fetch=1": 0.1},
+            "default_wall": 0.1,
+            "calibration_graph": {"n": 64, "m": 224},
+        }}))
+    tuner = Autotuner(cache_path=cache, warmup=0, iters=1,
+                      runner=lambda *a: None)
+    cfg = tuner.tune("bfs", registry.graph("grid"))
+    assert cfg == SchedulerConfig(num_workers=16, fetch_size=1)
+    assert cfg.backend == "jnp"
+
+
+def test_fused_server_backend_parity(registry, mixed_specs, fused):
+    """The whole multi-tenant batch, re-run on the Pallas backend, must be
+    bit-identical to the jnp fixture — results, rounds, and telemetry."""
+    import dataclasses as dc
+
+    server = TaskServer(registry, num_lanes=8,
+                        config=dc.replace(CFG, backend="pallas"),
+                        policy="weighted")
+    for spec in mixed_specs:
+        server.submit(spec)
+    out = server.run()
+    assert out.stats.rounds == fused.stats.rounds
+    for i in fused.results:
+        assert np.array_equal(out.results[i], fused.results[i]), i
+    for i, tel in fused.telemetry.items():
+        assert out.telemetry[i].items_processed == tel.items_processed
+        assert out.telemetry[i].work == tel.work
 
 
 def test_job_id_space_bounded_at_submit_time():
