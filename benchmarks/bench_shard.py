@@ -1,0 +1,134 @@
+"""Sharded-scheduler benchmark: rounds, exchange volume, occupancy balance.
+
+  PYTHONPATH=src python -m benchmarks.run shard
+
+Drains BFS (the exchange-heavy workload: improved neighbors are routed to
+their owner every round) over the paper's two graph regimes at several
+shard counts, via the discrete sharded driver so per-round telemetry is
+observable.  Emits ``BENCH_shard.json`` with, per (graph, shard count):
+
+  * rounds to drain (vs. the 1-shard run of the same machinery);
+  * total + per-round task exchange volume (the all-to-all wire traffic,
+    in tasks; the replica merge adds a fixed O(n)-per-round term recorded
+    as ``merge_ints_per_round``);
+  * per-device processed items and the min/max occupancy balance;
+  * steal telemetry (donated tasks, triggered rounds) for the skewed
+    single-source drain with stealing on vs. off.
+
+The measurement itself runs in a subprocess that forces 8 XLA host devices
+before jax initializes, so the benchmark works from any session (the parent
+process may already hold a 1-device backend).
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+from .harness import emit_json, row
+
+OUT = "BENCH_shard.json"
+SHARD_COUNTS = (1, 2, 4, 8)
+SCALE = 8          # R-MAT: 2**8 vertices
+GRID_SIDE = 16     # mesh: 16x16
+
+
+def _child() -> None:
+    import time
+
+    import numpy as np
+
+    from repro.algorithms.bfs import bfs_bsp
+    from repro.core import SchedulerConfig
+    from repro.graph.generators import grid2d, rmat
+    from repro import shard as SH
+
+    graphs = {
+        "rmat": rmat(SCALE, edge_factor=8, seed=1),
+        "grid": grid2d(GRID_SIDE, GRID_SIDE, seed=0),
+    }
+    payload: dict = {"shard_counts": list(SHARD_COUNTS), "graphs": {}}
+    for name, g in graphs.items():
+        ref = np.asarray(bfs_bsp(g, 0)[0])
+        entry: dict = {"n": g.num_vertices, "m": g.num_edges, "shards": {}}
+        for s in SHARD_COUNTS:
+            cfg = SchedulerConfig(num_workers=32, fetch_size=1,
+                                  num_shards=s, persistent=False)
+            program = SH.build_program("bfs", g, cfg, params={"source": 0})
+            trace: list = []
+            t0 = time.perf_counter()
+            state, stats = SH.run_sharded(program, g, cfg, trace=trace)
+            wall = time.perf_counter() - t0
+            assert (np.asarray(state.dist) == ref).all(), (name, s)
+            assert stats.mis_routed == 0 and stats.dropped == 0
+            entry["shards"][str(s)] = {
+                "rounds": stats.rounds,
+                "wall_seconds": wall,
+                "exchanged_total": stats.exchanged,
+                "per_round_exchanged": [t["exchanged"] for t in trace],
+                "per_device_items": stats.per_device_items.tolist(),
+                "occupancy_balance": stats.occupancy_balance,
+                # every round merges the int32 dist replica via pmin
+                "merge_ints_per_round": g.num_vertices,
+            }
+        # stealing case study: single-source drain seeds only shard 0 —
+        # the most skewed start the partitioner can produce
+        steal_cfgs = {
+            "steal_off": SchedulerConfig(num_workers=8, num_shards=8,
+                                         persistent=False),
+            "steal_on": SchedulerConfig(num_workers=8, num_shards=8,
+                                        persistent=False,
+                                        steal_threshold=0.5,
+                                        steal_chunk=16),
+        }
+        entry["steal"] = {}
+        for label, cfg in steal_cfgs.items():
+            program = SH.build_program("bfs", g, cfg, params={"source": 0})
+            state, stats = SH.run_sharded(program, g, cfg)
+            assert (np.asarray(state.dist) == ref).all(), (name, label)
+            entry["steal"][label] = {
+                "rounds": stats.rounds,
+                "donated": stats.donated,
+                "steal_rounds": stats.steal_rounds,
+                "stolen_executed": stats.stolen_executed,
+                "occupancy_balance": stats.occupancy_balance,
+            }
+        payload["graphs"][name] = entry
+    print(json.dumps(payload))
+
+
+def run(out: str = OUT):
+    env = dict(
+        os.environ,
+        XLA_FLAGS="--xla_force_host_platform_device_count=8",
+        JAX_PLATFORMS=os.environ.get("JAX_PLATFORMS", "cpu"),
+    )
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.bench_shard", "--child"],
+        capture_output=True, text=True, env=env, timeout=1800)
+    if proc.returncode != 0:
+        raise RuntimeError(f"bench_shard child failed:\n{proc.stderr[-3000:]}")
+    payload = json.loads(proc.stdout.strip().splitlines()[-1])
+
+    for name, entry in payload["graphs"].items():
+        base = entry["shards"]["1"]["rounds"]
+        for s, m in sorted(entry["shards"].items(), key=lambda kv: int(kv[0])):
+            row(f"shard/{name}/s{s}", m["wall_seconds"] * 1e6,
+                f"rounds={m['rounds']} (1-shard={base}) "
+                f"exchanged={m['exchanged_total']} "
+                f"balance={m['occupancy_balance']:.3f}")
+        on, off = entry["steal"]["steal_on"], entry["steal"]["steal_off"]
+        row(f"shard/{name}/steal", 0.0,
+            f"donated={on['donated']} steal_rounds={on['steal_rounds']} "
+            f"balance {off['occupancy_balance']:.3f}->"
+            f"{on['occupancy_balance']:.3f}")
+    emit_json(out, payload)
+    return payload
+
+
+if __name__ == "__main__":
+    if "--child" in sys.argv:
+        _child()
+    else:
+        run()

@@ -1,8 +1,8 @@
 """Benchmark entry point — one section per paper table/figure.
 
 ``PYTHONPATH=src python -m benchmarks.run [section ...]``
-Sections: table1 table4 figs serving server kernels roofline (default: all).
-Prints ``name,us_per_call,derived`` CSV.
+Sections: table1 table4 figs serving server kernels roofline shard
+(default: all).  Prints ``name,us_per_call,derived`` CSV.
 """
 from __future__ import annotations
 
@@ -11,7 +11,7 @@ import sys
 
 def main() -> None:
     from . import (bench_figs, bench_kernels, bench_roofline, bench_server,
-                   bench_serving, bench_table1, bench_table4)
+                   bench_serving, bench_shard, bench_table1, bench_table4)
 
     sections = {
         "table1": bench_table1.run,
@@ -21,6 +21,7 @@ def main() -> None:
         "server": bench_server.run,
         "kernels": bench_kernels.run,
         "roofline": bench_roofline.run,
+        "shard": bench_shard.run,
     }
     want = sys.argv[1:] or list(sections)
     print("name,us_per_call,derived")

@@ -26,7 +26,7 @@ from ..core import (SchedulerConfig, WorkCounter, expand_merge_path,
                     expand_per_item, make_queue)
 from ..core import scheduler as sched
 from ..graph.csr import CSRGraph
-from .common import default_work_budget
+from .common import default_work_budget, shard_info as _shard_info
 
 INF = jnp.int32(0x7FFFFFFF)
 
@@ -161,7 +161,22 @@ def bfs_speculative(
     """Relaxed-barrier BFS on the Atos scheduler.
 
     ``strategy``: "merge_path" (CTA-style) or "per_item" (warp-style).
+    ``cfg.num_shards > 1`` runs the same drain over a device mesh with
+    per-shard queue replicas and routed exchange (repro/shard); distances
+    are bit-identical to the single-device run.  ``trace`` entries are then
+    per-round dicts (sizes/exchanged/donated) instead of tuples.
     """
+    if cfg.num_shards > 1:
+        from .. import shard as _shard  # lazy: shard imports this module
+
+        program = _shard.build_program(
+            "bfs", graph, cfg,
+            params={"source": source, "strategy": strategy,
+                    "work_budget": work_budget},
+            queue_capacity=queue_capacity)
+        state, stats = _shard.run_sharded(
+            program, graph, cfg, queue_capacity=queue_capacity, trace=trace)
+        return state.dist, _shard_info(stats, state)
     n = graph.num_vertices
     max_degree = int(jnp.max(graph.degrees()))
     work_budget = default_work_budget(graph, cfg.wavefront, work_budget,

@@ -33,6 +33,7 @@ import jax.numpy as jnp
 from ..core import SchedulerConfig, WorkCounter, make_queue
 from ..core import scheduler as sched
 from ..graph.csr import CSRGraph
+from .common import shard_info as _shard_info
 
 
 @jax.tree_util.register_dataclass
@@ -128,13 +129,23 @@ def init_state(graph: CSRGraph) -> Tuple["ColorState", jax.Array]:
     return state, jnp.arange(1, n + 1, dtype=jnp.int32)
 
 
-def make_wavefront_fn(graph: CSRGraph):
+def make_wavefront_fn(graph: CSRGraph, fused: bool = True,
+                      max_degree: int | None = None):
     """Reusable fused assign/detect uberkernel body (Alg 6).
 
     Task encoding: +(v+1) = assign color to v; -(v+1) = detect conflict at v.
     A wavefront mixes both kinds (and multiple speculation depths).  The
     returned ``f`` is a pure WavefrontFn shared by the single-tenant driver
     (``coloring_async``) and the task server.
+
+    ``fused=False`` makes phase B read the *pre-wavefront* colors instead of
+    phase A's same-wavefront commits.  The sharded driver (repro/shard)
+    needs this: remote assigns from the same epoch are invisible anyway, so
+    uniform epoch-start reads keep detection independent of which shard a
+    task ran on — detection is merely deferred one epoch, never lost
+    (DESIGN.md section 10).  ``max_degree`` may be passed explicitly when
+    the body is built inside a traced context (a shard_map) where the
+    device-local CSR slice cannot be concretized.
 
     Backend note (DESIGN.md section 9): coloring's expansion is the padded
     per-item gather, not merge-path LBS, so the body itself has no kernel
@@ -143,7 +154,8 @@ def make_wavefront_fn(graph: CSRGraph):
     (``kernels/queue_compact``), with bit-identical colors (tested).
     """
     n = graph.num_vertices
-    max_degree = int(jnp.max(graph.degrees()))
+    if max_degree is None:
+        max_degree = int(jnp.max(graph.degrees()))
     max_colors = max_degree + 1
 
     def f(items, valid, state: ColorState):
@@ -162,10 +174,13 @@ def make_wavefront_fn(graph: CSRGraph):
             jnp.where(is_assign, pick, 0), mode="drop")
 
         # ---- phase B: detects run on post-assign colors of THIS wavefront
-        # (uberkernel fusion: later tasks see earlier tasks' commits)
+        # (uberkernel fusion: later tasks see earlier tasks' commits).  The
+        # unfused variant reads epoch-start colors so detection is identical
+        # no matter which device processed the wavefront (shard parity).
         nbr_d, in_row_d = _gather_neighbor_colors(graph, vids, is_detect,
                                                   max_degree)
-        bad = _conflicts(colors, vids, is_detect, nbr_d, in_row_d)
+        detect_colors = colors if fused else state.colors
+        bad = _conflicts(detect_colors, vids, is_detect, nbr_d, in_row_d)
 
         out = jnp.concatenate([
             jnp.where(is_assign, -(vids + 1), 0),   # assign -> queue a detect
@@ -184,7 +199,22 @@ def coloring_async(
     queue_capacity: int | None = None,
     trace: list | None = None,
 ) -> Tuple[jax.Array, dict]:
-    """Alg 6: fused assign/detect uberkernel on the Atos queue."""
+    """Alg 6: fused assign/detect uberkernel on the Atos queue.
+
+    ``cfg.num_shards > 1`` distributes the drain over a device mesh
+    (repro/shard) using the *unfused* body (detects read epoch-start
+    colors), so the result is independent of which shard a task ran on:
+    a full-width sharded run produces bit-identical colors for every shard
+    count, including 1 (tested in tests/test_shard.py).
+    """
+    if cfg.num_shards > 1:
+        from .. import shard as _shard  # lazy: shard imports this module
+
+        program = _shard.build_program("coloring", graph, cfg,
+                                       queue_capacity=queue_capacity)
+        state, stats = _shard.run_sharded(
+            program, graph, cfg, queue_capacity=queue_capacity, trace=trace)
+        return state.colors, _shard_info(stats, state)
     n = graph.num_vertices
     queue_capacity = queue_capacity or max(4 * n, 1024)
     f = make_wavefront_fn(graph)

@@ -24,3 +24,19 @@ def default_work_budget(graph: CSRGraph, wavefront: int,
             8, int(float(jnp.mean(graph.degrees())) * 4)
         )
     return max(work_budget, max_degree)
+
+
+def shard_info(stats, state) -> dict:
+    """Uniform ``info`` dict for sharded runs (mirrors the single-device
+    drivers' keys, plus the exchange/steal telemetry)."""
+    return {
+        "rounds": stats.rounds,
+        "work": int(state.counter.work),
+        "dropped": stats.dropped + stats.route_dropped,
+        "shards": len(stats.per_device_items),
+        "exchanged": stats.exchanged,
+        "donated": stats.donated,
+        "steal_rounds": stats.steal_rounds,
+        "mis_routed": stats.mis_routed,
+        "occupancy_balance": stats.occupancy_balance,
+    }

@@ -29,7 +29,7 @@ import jax.numpy as jnp
 from ..core import SchedulerConfig, WorkCounter, expand_merge_path, make_queue
 from ..core import scheduler as sched
 from ..graph.csr import CSRGraph
-from .common import default_work_budget
+from .common import default_work_budget, shard_info as _shard_info
 
 
 @jax.tree_util.register_dataclass
@@ -183,6 +183,8 @@ def make_wavefront_fns(
     eps: float = 1e-6,
     work_budget: int | None = None,
     backend: str = "jnp",
+    check_block=None,
+    max_degree: int | None = None,
 ):
     """Reusable async-PageRank wavefront bodies: ``(f, on_empty, stop)``.
 
@@ -191,20 +193,45 @@ def make_wavefront_fns(
     returned callables are pure and job-parameterized, shared by the
     single-tenant driver (``pagerank_async``) and the task server.
     ``backend`` selects the merge-path LBS implementation (DESIGN.md §9).
+
+    ``check_block=(start, length)`` restricts the rotating re-scan to one
+    contiguous vertex block — the sharded driver passes each device its
+    owned block so re-scan tasks are born on their owner and the presence
+    bit stays single-writer (DESIGN.md section 10).  Both values may be
+    traced scalars (they derive from ``lax.axis_index`` under shard_map).
+    ``max_degree`` must then be passed explicitly (precomputed from the
+    global graph): the budget's progress-guarantee floor cannot concretize
+    the device-local CSR slice inside the trace.
     """
     n = graph.num_vertices
-    work_budget = default_work_budget(graph, wavefront, work_budget)
+    work_budget = default_work_budget(graph, wavefront, work_budget,
+                                      max_degree=max_degree)
     push = _push_wavefront(graph, damping, work_budget, backend=backend)
     n_check = min(n_check, n)
+    if check_block is None:
+        block_start, block_len = jnp.int32(0), jnp.int32(n)
+    else:
+        block_start = jnp.asarray(check_block[0], jnp.int32)
+        block_len = jnp.asarray(check_block[1], jnp.int32)
+
+    def scan_window(cursor):
+        """Next ``n_check`` ids of the rotating block scan + validity.
+
+        Lanes past the block length are masked off (a short or empty block
+        — the last shards of an uneven partition — must not rescan other
+        owners' vertices, and must never enqueue one vertex twice in one
+        window)."""
+        j = jnp.arange(n_check, dtype=jnp.int32)
+        ids = block_start + (cursor + j) % jnp.maximum(block_len, 1)
+        return jnp.where(j < block_len, ids, 0), j < block_len
 
     def f(items, valid, state: PRState):
         residue, rank, in_queue, counter, truncated = push(items, valid, state)
         # rotating residual re-scan (Alg 4 lines 11-14): each wavefront checks
         # the next n_check vertices and enqueues those above eps that are not
         # already queued (presence bit — see adaptation note above).
-        check_ids = (state.check_cursor
-                     + jnp.arange(n_check, dtype=jnp.int32)) % n
-        over = (residue[check_ids] > eps) & ~in_queue[check_ids]
+        check_ids, in_window = scan_window(state.check_cursor)
+        over = in_window & (residue[check_ids] > eps) & ~in_queue[check_ids]
         in_queue = in_queue.at[jnp.where(over, check_ids, n)].set(
             True, mode="drop")
         new_state = PRState(rank=rank, residue=residue, in_queue=in_queue,
@@ -216,9 +243,9 @@ def make_wavefront_fns(
         return out, mask, new_state
 
     def on_empty(state: PRState):
-        check_ids = (state.check_cursor
-                     + jnp.arange(n_check, dtype=jnp.int32)) % n
-        over = (state.residue[check_ids] > eps) & ~state.in_queue[check_ids]
+        check_ids, in_window = scan_window(state.check_cursor)
+        over = (in_window & (state.residue[check_ids] > eps)
+                & ~state.in_queue[check_ids])
         in_queue = state.in_queue.at[jnp.where(over, check_ids, n)].set(
             True, mode="drop")
         new_state = dataclasses.replace(
@@ -247,7 +274,26 @@ def pagerank_async(
     queue_capacity: int | None = None,
     trace: list | None = None,
 ) -> Tuple[jax.Array, dict]:
-    """Alg 4: queue-driven asynchronous PageRank on the Atos scheduler."""
+    """Alg 4: queue-driven asynchronous PageRank on the Atos scheduler.
+
+    ``cfg.num_shards > 1`` distributes the drain over a device mesh
+    (repro/shard): each shard's rotating re-scan covers its owned vertex
+    block, residue deltas merge by psum every round, and ranks match the
+    single-device schedule within the usual ``eps * deg`` slack.
+    """
+    if cfg.num_shards > 1:
+        from .. import shard as _shard  # lazy: shard imports this module
+
+        program = _shard.build_program(
+            "pagerank", graph, cfg,
+            params={"damping": damping, "eps": eps, "check_size": check_size,
+                    "work_budget": work_budget},
+            queue_capacity=queue_capacity)
+        state, stats = _shard.run_sharded(
+            program, graph, cfg, queue_capacity=queue_capacity, trace=trace)
+        info = _shard_info(stats, state)
+        info["max_residue"] = float(jnp.max(state.residue))
+        return state.rank, info
     n = graph.num_vertices
     queue_capacity = queue_capacity or max(8 * n, 1024)
     f, on_empty, stop = make_wavefront_fns(

@@ -55,6 +55,15 @@ class SchedulerConfig:
     off-TPU), or ``"auto"`` (pallas iff a TPU is attached).  Results are
     bit-identical across backends, so the autotuner searches this axis
     alongside the paper's three (``server/autotune.py``).
+
+    ``num_shards`` is the device-mesh axis (DESIGN.md section 10): with
+    ``num_shards > 1`` the drain runs one queue replica per device of a 1-D
+    ``("shard",)`` mesh, routing produced tasks to their owner shard every
+    round (``repro/shard``).  ``num_workers x fetch_size`` is then the
+    *per-device* wavefront.  ``steal_threshold`` enables work stealing: when
+    ``(max - min)`` queue occupancy exceeds ``steal_threshold x mean``, rich
+    shards donate up to ``steal_chunk`` owned tasks to their ring successor
+    before the next round; ``0.0`` disables stealing.
     """
 
     num_workers: int = 64        # numBlock — parallel workers per wavefront
@@ -62,6 +71,9 @@ class SchedulerConfig:
     persistent: bool = True      # ifPersist — kernel strategy
     max_rounds: int = 1 << 16    # safety bound for while_loop
     backend: str = "jnp"         # kernel backend: jnp | pallas | auto
+    num_shards: int = 1          # device-mesh axis (repro/shard)
+    steal_threshold: float = 0.0  # occupancy-skew trigger; 0 = stealing off
+    steal_chunk: int = 64        # max tasks donated per shard per round
 
     @property
     def wavefront(self) -> int:

@@ -14,3 +14,34 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_local_mesh(data: int = 1, model: int = 1):
     """Small mesh over whatever devices exist (tests/examples)."""
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def require_devices(n: int, purpose: str = "a sharded run") -> None:
+    """Assert ``n`` devices are visible, with an actionable message.
+
+    TPU pods expose the devices naturally; on CPU the XLA host-platform
+    override must be set *before* jax initializes, which is why the shard
+    tests and the ``multidevice`` CI job export it in the environment.
+    """
+    have = jax.device_count()
+    if have < n:
+        raise RuntimeError(
+            f"{purpose} needs {n} devices but only {have} "
+            f"{'is' if have == 1 else 'are'} visible.  On CPU, relaunch "
+            f"with XLA_FLAGS=--xla_force_host_platform_device_count={n} "
+            f"set before the first jax import (tests/test_shard.py and the "
+            f"CI 'multidevice' job do exactly this); on TPU, check that "
+            f"the requested shard count does not exceed the slice size."
+        )
+
+
+def make_shard_mesh(n: int):
+    """1-D ``("shard",)`` mesh for the sharded task scheduler (repro/shard).
+
+    One mesh axis, ``n`` devices: each device owns one vertex block, one
+    queue replica, and one lane of every collective (task all-to-all,
+    replica merge, steal ppermute).  Raises with the ``XLA_FLAGS`` host
+    override hint when fewer than ``n`` devices exist.
+    """
+    require_devices(n, purpose=f"make_shard_mesh({n})")
+    return jax.make_mesh((n,), ("shard",))

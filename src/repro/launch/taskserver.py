@@ -33,8 +33,14 @@ def build_registry(scale: int, grid_side: int, seed: int) -> JobRegistry:
 
 
 def mixed_specs(n_jobs: int, registry: JobRegistry, eps: float,
-                seed: int) -> list[JobSpec]:
-    """Round-robin over algorithms x graphs, sources spread over vertices."""
+                seed: int, shards: int = 1) -> list[JobSpec]:
+    """Round-robin over algorithms x graphs, sources spread over vertices.
+
+    With ``shards > 1`` the BFS jobs become sharded single-tenant jobs (the
+    exchange-heavy workload benefits most from the mesh) while PageRank and
+    coloring stay in the fused multi-tenant rounds — one batch exercising
+    both serving modes.
+    """
     specs = []
     graphs = registry.graph_names
     for i in range(n_jobs):
@@ -47,7 +53,8 @@ def mixed_specs(n_jobs: int, registry: JobRegistry, eps: float,
         elif algorithm == "pagerank":
             params["eps"] = eps
         specs.append(JobSpec(algorithm, gname, params,
-                             weight=1.0 + (i % 3)))
+                             weight=1.0 + (i % 3),
+                             shards=shards if algorithm == "bfs" else 1))
     return specs
 
 
@@ -69,6 +76,9 @@ def print_telemetry(result) -> None:
           f"wall={s.wall_seconds:.2f}s "
           f"backpressure={s.backpressure_events} "
           f"deferred_admissions={s.deferred_admissions}")
+    if s.sharded_jobs:
+        print(f"sharded phases: {s.sharded_jobs} jobs, "
+              f"{s.sharded_rounds} device rounds")
 
 
 def main() -> None:
@@ -86,6 +96,11 @@ def main() -> None:
                          "(interpret mode off-TPU), or auto-detect "
                          "(ignored under --autotune, which searches the "
                          "backend axis itself)")
+    ap.add_argument("--shards", type=int, default=1,
+                    help="run the BFS jobs as sharded single-tenant drains "
+                         "over an N-device ('shard',) mesh (repro/shard); "
+                         "needs N visible devices — on CPU set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N")
     ap.add_argument("--scale", type=int, default=8,
                     help="R-MAT scale (2**scale vertices)")
     ap.add_argument("--grid-side", type=int, default=16)
@@ -103,8 +118,13 @@ def main() -> None:
         level=logging.INFO if args.verbose else logging.WARNING,
         format="%(name)s: %(message)s")
 
+    if args.shards > 1:
+        from .mesh import require_devices
+
+        require_devices(args.shards, purpose=f"--shards {args.shards}")
     registry = build_registry(args.scale, args.grid_side, args.seed)
-    specs = mixed_specs(args.jobs, registry, args.eps, args.seed)
+    specs = mixed_specs(args.jobs, registry, args.eps, args.seed,
+                        shards=args.shards)
 
     config = None if args.autotune else SchedulerConfig(
         num_workers=args.workers, fetch_size=args.fetch,

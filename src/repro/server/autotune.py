@@ -26,10 +26,13 @@ Decisions are cached to JSON (survives processes) and logged.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import json
 import logging
+import os
 import statistics
+import tempfile
 import time
 from pathlib import Path
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple
@@ -146,10 +149,25 @@ class Autotuner:
 
     # ------------------------------------------------------------- plumbing
     def _save(self) -> None:
+        # atomic write-temp-then-rename: concurrent jobs autotuning the same
+        # graph class race on this file, and a torn half-written JSON would
+        # poison every later run's cache load.  os.replace is atomic on
+        # POSIX and Windows for same-directory renames; last writer wins
+        # with a complete document either way.
         if self.cache_path:
             self.cache_path.parent.mkdir(parents=True, exist_ok=True)
-            self.cache_path.write_text(json.dumps(self._cache, indent=2,
-                                                  sort_keys=True))
+            fd, tmp = tempfile.mkstemp(
+                dir=self.cache_path.parent,
+                prefix=self.cache_path.name + ".", suffix=".tmp")
+            try:
+                with os.fdopen(fd, "w") as f:
+                    f.write(json.dumps(self._cache, indent=2,
+                                       sort_keys=True))
+                os.replace(tmp, self.cache_path)
+            except BaseException:
+                with contextlib.suppress(OSError):
+                    os.unlink(tmp)
+                raise
 
     def _measure(self, algorithm: str, graph: CSRGraph,
                  cfg: SchedulerConfig) -> float:

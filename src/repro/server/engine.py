@@ -71,6 +71,8 @@ class ServerStats:
     backpressure_events: int = 0
     deferred_admissions: int = 0
     wavefront: int = 0
+    sharded_jobs: int = 0          # jobs served as device-wide sharded phases
+    sharded_rounds: int = 0        # device rounds spent in those phases
 
     @property
     def occupancy(self) -> float:
@@ -272,20 +274,81 @@ class TaskServer:
         job.lane = -1
         return mq
 
+    # -------------------------------------------------------- sharded jobs
+    def _run_sharded(self, job: Job, cfg: SchedulerConfig,
+                     stats: ServerStats) -> None:
+        """Serve one ``shards > 1`` job as a device-wide sharded drain.
+
+        A sharded drain owns the whole mesh (every device runs a queue
+        replica plus the exchange/steal collectives), so these jobs run as
+        serialized phases before the fused multi-tenant rounds rather than
+        as lanes inside them — coexistence at the batch level, not the
+        round level (DESIGN.md section 10).
+        """
+        from .. import shard as _shard
+
+        spec = job.spec
+        graph = self.registry.graph(spec.graph)
+        scfg = dataclasses.replace(cfg, num_shards=spec.shards)
+        program = _shard.build_program(spec.algorithm, graph, scfg,
+                                       params=dict(spec.params),
+                                       queue_capacity=self._lane_capacity)
+        log.info("sharded job %d (%s on %s) over %d shards",
+                 job.job_id, spec.algorithm, spec.graph, spec.shards)
+        state, sstats = _shard.run_sharded(
+            program, graph, scfg, queue_capacity=self._lane_capacity)
+        job.result = np.asarray(program.result(state))
+        tel = JobTelemetry(
+            job_id=job.job_id, algorithm=spec.algorithm, graph=spec.graph,
+            wavefront=scfg.wavefront * spec.shards,  # mesh-wide pop budget
+            ideal_work=program.ideal_work)
+        tel.admitted_round = tel.completed_round = 0
+        tel.rounds_active = sstats.rounds
+        tel.items_processed = sstats.items_processed
+        tel.work = int(program.work(state))
+        tel.dropped = sstats.dropped + sstats.route_dropped
+        job.telemetry = tel
+        if self.strict_drops and tel.dropped > 0:
+            raise RuntimeError(
+                f"sharded job {job.job_id} ({spec.algorithm} on "
+                f"{spec.graph}) dropped {tel.dropped} tasks to replica "
+                f"overflow — its result would be silently wrong.  Raise "
+                f"lane_capacity (or pass strict_drops=False).")
+        if sstats.mis_routed:
+            raise RuntimeError(
+                f"sharded job {job.job_id}: {sstats.mis_routed} tasks ran "
+                f"off their owner shard (routing invariant violated)")
+        job.status = "done"
+        stats.sharded_jobs += 1
+        stats.sharded_rounds += sstats.rounds
+        log.info("sharded job %d done in %d device rounds "
+                 "(exchanged=%d donated=%d balance=%.3f)",
+                 job.job_id, sstats.rounds, sstats.exchanged,
+                 sstats.donated, sstats.occupancy_balance)
+
     # ------------------------------------------------------------------ run
     def run(self) -> ServerResult:
-        """Drain every submitted job; returns per-job results + telemetry."""
+        """Drain every submitted job; returns per-job results + telemetry.
+
+        Jobs with ``spec.shards > 1`` are served first as device-wide
+        sharded phases; everything else shares the fused multi-tenant
+        wavefront that follows.
+        """
         cfg = self._resolve_config()
         W = cfg.wavefront
         lane_capacity = self._resolve_lane_capacity()
-        mq = make_multiqueue(lane_capacity, self.num_lanes)
         stats = ServerStats(wavefront=W)
+        t0 = time.perf_counter()
+        for job in self._jobs:
+            if (job.status == "pending" and job.spec is not None
+                    and job.spec.shards > 1):
+                self._run_sharded(job, cfg, stats)
+        mq = make_multiqueue(lane_capacity, self.num_lanes)
         pending = deque(j for j in self._jobs if j.status == "pending")
         lane_owner: Dict[int, Job] = {}
         free_lanes = deque(range(self.num_lanes))
         prev_dropped = np.zeros(self.num_lanes, dtype=np.int64)
         backpressured = False
-        t0 = time.perf_counter()
         rounds = 0
 
         while (pending or lane_owner) and rounds < self.max_rounds:

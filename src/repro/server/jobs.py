@@ -43,12 +43,20 @@ ALGORITHMS = ("bfs", "pagerank", "coloring")
 
 @dataclasses.dataclass(frozen=True)
 class JobSpec:
-    """A tenant's request.  ``weight`` feeds the weighted fairness policy."""
+    """A tenant's request.  ``weight`` feeds the weighted fairness policy.
+
+    ``shards > 1`` asks for a *sharded single-tenant* drain: instead of a
+    lane in the fused multi-tenant wavefront, the job gets the whole
+    ``shards``-device mesh to itself for the duration of its drain
+    (repro/shard), and the server runs such jobs as device-wide phases
+    before the fused rounds (DESIGN.md section 10).
+    """
 
     algorithm: str                 # one of ALGORITHMS
     graph: str                     # name registered with the JobRegistry
     params: Dict[str, Any] = dataclasses.field(default_factory=dict)
     weight: float = 1.0
+    shards: int = 1                # >1 = sharded single-tenant job
 
     def __post_init__(self):
         if self.algorithm not in ALGORITHMS:
@@ -56,6 +64,8 @@ class JobSpec:
                              f"expected one of {ALGORITHMS}")
         if self.weight <= 0:
             raise ValueError("job weight must be positive")
+        if self.shards < 1:
+            raise ValueError("job shards must be >= 1")
 
 
 @dataclasses.dataclass(frozen=True)

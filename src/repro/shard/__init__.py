@@ -1,0 +1,28 @@
+"""Sharded multi-device task scheduler (DESIGN.md section 10).
+
+One Atos drain across every device of a 1-D ``("shard",)`` mesh: a
+vertex-block partitioner reshards the CSR adjacency, each device runs a
+queue replica plus the existing wavefront body on its local slice, produced
+tasks are routed to their owner with an all-to-all every round, occupancy
+skew triggers ring work stealing, and a psum'd stop predicate keeps the
+mesh in lockstep until the global drain ends.  Fully testable on CPU via
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+"""
+from .driver import (ShardCounters, ShardRunStats, discrete_run_sharded,
+                     persistent_run_sharded, run_sharded)
+from .exchange import (LANE_LOCAL, LANE_STOLEN, NUM_LANES, pop_wavefront,
+                       route_tasks)
+from .partition import (ShardedCSR, block_bounds, block_size, owner_of,
+                        partition_graph, split_seeds)
+from .programs import ShardProgram, build_program, delta_psum
+from .steal import plan_donations, rebalance
+
+__all__ = [
+    "ShardCounters", "ShardRunStats", "discrete_run_sharded",
+    "persistent_run_sharded", "run_sharded",
+    "LANE_LOCAL", "LANE_STOLEN", "NUM_LANES", "pop_wavefront", "route_tasks",
+    "ShardedCSR", "block_bounds", "block_size", "owner_of",
+    "partition_graph", "split_seeds",
+    "ShardProgram", "build_program", "delta_psum",
+    "plan_donations", "rebalance",
+]

@@ -1,0 +1,377 @@
+"""Persistent and discrete sharded drivers — one Atos drain, many devices.
+
+Mirrors ``core/scheduler.py`` across a 1-D ``("shard",)`` mesh.  Each device
+carries a queue replica (a 2-lane :class:`~repro.core.queue.MultiQueue`:
+owned tasks + freshly stolen ones) and a full-size state replica that is
+authoritative for its vertex block and reconciled every round by the
+program's merge (``shard/programs.py``).  One **round** is, in lockstep on
+every device:
+
+  1. *steal*    — occupancy-skew-triggered ring donation (shard/steal.py);
+  2. *pop*      — one ``num_workers x fetch_size`` wavefront, stolen first;
+  3. *body*     — the algorithm's existing wavefront fn on the local CSR
+                  slice via the backend layer (runs even when the pop is
+                  empty: a zero-valid wavefront is a no-op for BFS/coloring
+                  and exactly the ``on_empty`` re-scan for PageRank);
+  4. *exchange* — owner-split + all-to-all task routing (shard/exchange.py);
+  5. *merge*    — replica reconciliation (pmin / delta-psum);
+  6. *stop*     — ``psum`` the replica sizes: no device exits while any
+                  device still has work, and converged-but-idle devices keep
+                  serving collectives until the global predicate fires.
+
+``persistent_run_sharded`` wraps the whole drain in a ``shard_map``-wrapped
+``lax.while_loop`` (zero host round-trips — the multi-device persistent
+kernel); ``discrete_run_sharded`` dispatches one jitted sharded round per
+host-loop iteration and can trace per-round exchange volume and occupancy
+for the benchmarks.  Both honor ``SchedulerConfig``: ``num_shards`` picks
+the mesh width, ``persistent`` picks the driver, ``backend`` threads through
+to the kernels exactly as in the single-device path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from ..core.queue import EMPTY, MultiQueue, TaskQueue
+from ..core.scheduler import SchedulerConfig
+from ..graph.csr import CSRGraph
+from ..launch.mesh import make_shard_mesh
+from .exchange import LANE_LOCAL, NUM_LANES, pop_wavefront, route_tasks
+from .partition import ShardedCSR, owner_of, partition_graph, split_seeds
+from .programs import ShardProgram
+from .steal import rebalance
+
+AXIS = "shard"
+
+
+class ShardCounters(NamedTuple):
+    """Per-device round accounting (int32 scalars inside the loop)."""
+
+    rounds: jax.Array         # uniform by construction
+    items: jax.Array          # valid tasks this device popped
+    sent: jax.Array           # tasks this device shipped to other owners
+    route_dropped: jax.Array  # remote tasks lost to a narrow route buffer
+    donated: jax.Array        # tasks this device donated to its successor
+    stolen_run: jax.Array     # stolen tasks this device executed
+    steal_rounds: jax.Array   # rounds the (uniform) steal trigger fired
+    mis_routed: jax.Array     # popped tasks that violated ownership
+
+    @staticmethod
+    def zero() -> "ShardCounters":
+        z = jnp.int32(0)
+        return ShardCounters(z, z, z, z, z, z, z, z)
+
+
+@dataclasses.dataclass
+class ShardRunStats:
+    """Host-side run summary (per-device vectors are length num_shards)."""
+
+    rounds: int
+    items_processed: int
+    dropped: int              # queue-replica overflow drops (sum)
+    route_dropped: int
+    exchanged: int            # tasks delivered across shards (sum)
+    donated: int              # tasks moved by stealing (sum)
+    stolen_executed: int
+    steal_rounds: int
+    mis_routed: int           # must be 0: every task ran on its owner/thief
+    per_device_items: np.ndarray
+    per_device_sent: np.ndarray
+    per_device_donated: np.ndarray
+    final_sizes: np.ndarray
+
+    @property
+    def occupancy_balance(self) -> float:
+        """min/max of per-device processed items (1.0 = perfectly even)."""
+        if self.per_device_items.size == 0:
+            return 1.0
+        hi = int(self.per_device_items.max())
+        return float(self.per_device_items.min()) / hi if hi else 1.0
+
+    def as_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        for k, v in d.items():
+            if isinstance(v, np.ndarray):
+                d[k] = v.tolist()
+        d["occupancy_balance"] = self.occupancy_balance
+        return d
+
+
+# --------------------------------------------------------------- plumbing
+def _make_queues(capacity: int, num_shards: int, seed_buf, seed_counts):
+    """Stacked per-device 2-lane MultiQueue replicas, seeds pre-placed in
+    each owner's LOCAL lane."""
+    buf = np.full((num_shards, NUM_LANES, capacity), int(EMPTY),
+                  dtype=np.int32)
+    tails = np.zeros((num_shards, NUM_LANES), dtype=np.int32)
+    seeds = np.asarray(seed_buf)
+    counts = np.asarray(seed_counts)
+    for d in range(num_shards):
+        k = int(counts[d])
+        if k > capacity:
+            raise ValueError(
+                f"shard {d} got {k} seed tasks > queue capacity {capacity}")
+        buf[d, LANE_LOCAL, :k] = seeds[d, :k]
+        tails[d, LANE_LOCAL] = k
+    lanes = TaskQueue(
+        buf=jnp.asarray(buf),
+        head=jnp.zeros((num_shards, NUM_LANES), jnp.int32),
+        tail=jnp.asarray(tails),
+        dropped=jnp.zeros((num_shards, NUM_LANES), jnp.int32),
+    )
+    return MultiQueue(lanes=lanes, rr=jnp.zeros((num_shards,), jnp.int32))
+
+
+def _local_view(tree):
+    """Strip the leading per-device axis shard_map leaves on every leaf."""
+    return jax.tree.map(lambda x: x[0], tree)
+
+
+def _stacked_view(tree):
+    return jax.tree.map(lambda x: x[None], tree)
+
+
+def _make_round(program: ShardProgram, cfg: SchedulerConfig, n: int,
+                route_width: Optional[int]):
+    """The shared round body: steal -> pop -> f -> exchange -> merge."""
+    s = cfg.num_shards
+    w = cfg.wavefront
+    steal_on = cfg.steal_threshold > 0
+
+    def round_step(f, mq: MultiQueue, state, c: ShardCounters):
+        me = jax.lax.axis_index(AXIS)
+        donated = jnp.int32(0)
+        triggered = jnp.bool_(False)
+        if steal_on:
+            mq, donated, triggered = rebalance(
+                mq, axis_name=AXIS, num_shards=s,
+                threshold=cfg.steal_threshold, chunk=cfg.steal_chunk,
+                backend=cfg.backend)
+
+        items, valid, n_stolen, mq = pop_wavefront(mq, w)
+
+        # ownership meter: lanes [0, n_stolen) came off the stolen lane and
+        # may belong to the ring predecessor; everything else must be ours.
+        verts = program.task_vertex(jnp.where(valid, items, 0))
+        verts = jnp.where(valid, verts, 0)
+        owners = owner_of(verts, n, s)
+        expected = jnp.where(jnp.arange(w, dtype=jnp.int32) < n_stolen,
+                             (me - 1) % s, me)
+        mis = jnp.sum((valid & (owners != expected)).astype(jnp.int32))
+
+        out, mask, new_state = f(items, valid, state)
+        mq, n_sent, n_rdrop = route_tasks(
+            mq, out, mask, axis_name=AXIS, num_shards=s, num_vertices=n,
+            task_vertex=program.task_vertex, route_width=route_width,
+            backend=cfg.backend)
+        # round-synchronous replica reconciliation: after this every device
+        # holds the identical merged state, so next round's pops read
+        # globally fresh values (the TREES-style epoch barrier).
+        state = program.merge(state, new_state, AXIS)
+
+        n_valid = jnp.sum(valid.astype(jnp.int32))
+        c = ShardCounters(
+            rounds=c.rounds + 1,
+            items=c.items + n_valid,
+            sent=c.sent + n_sent,
+            route_dropped=c.route_dropped + n_rdrop,
+            donated=c.donated + donated,
+            stolen_run=c.stolen_run + n_stolen,
+            steal_rounds=c.steal_rounds + triggered.astype(jnp.int32),
+            mis_routed=c.mis_routed + mis,
+        )
+        return mq, state, c
+
+    def keep_going(mq: MultiQueue, state, c: ShardCounters):
+        """Global continuation: psum'd queue mass + the stop predicate.
+
+        The psum is the no-early-exit guarantee — a drained device sees its
+        neighbours' backlog and keeps taking rounds (serving the exchange
+        and merge collectives, and potentially receiving routed or stolen
+        work) until the whole mesh is done.
+        """
+        in_bounds = c.rounds < cfg.max_rounds
+        if program.rescans:
+            more = in_bounds
+        else:
+            global_size = jax.lax.psum(mq.size, AXIS)
+            more = in_bounds & (global_size > 0)
+        if program.stop is not None:
+            more &= ~program.stop(state)
+        return more
+
+    return round_step, keep_going
+
+
+def _counters_out(c: ShardCounters):
+    return jax.tree.map(lambda x: x[None], c)
+
+
+# ----------------------------------------------------------------- drivers
+def persistent_run_sharded(program, parts: ShardedCSR, mq0, state0,
+                           cfg: SchedulerConfig, mesh, route_width=None):
+    """Whole drain in one shard_map'd while_loop (multi-device persistent)."""
+    n = parts.num_vertices
+    round_builder = _make_round(program, cfg, n, route_width)
+
+    def drain(row_ptr, col_idx, mq_st, state):
+        local_graph = CSRGraph(row_ptr=row_ptr[0], col_idx=col_idx[0])
+        me = jax.lax.axis_index(AXIS)
+        f = program.build(local_graph, me, AXIS)
+        round_step, keep_going = round_builder
+
+        mq = _local_view(mq_st)
+        c0 = ShardCounters.zero()
+
+        def cond(carry):
+            return carry[3]
+
+        def body(carry):
+            mq, state, c, _ = carry
+            mq, state, c = round_step(f, mq, state, c)
+            return mq, state, c, keep_going(mq, state, c)
+
+        mq, state, c, _ = jax.lax.while_loop(
+            cond, body, (mq, state, c0, keep_going(mq, state, c0)))
+        return _stacked_view(mq), state, _counters_out(c)
+
+    specs_q = jax.tree.map(lambda _: P(AXIS), mq0)
+    out_q = specs_q
+    fn = shard_map(
+        drain, mesh=mesh,
+        in_specs=(P(AXIS), P(AXIS), specs_q, P()),
+        out_specs=(out_q, P(), jax.tree.map(lambda _: P(AXIS),
+                                            ShardCounters.zero())),
+        check_rep=False)
+    return jax.jit(fn)(parts.row_ptr, parts.col_idx, mq0, state0)
+
+
+def discrete_run_sharded(program, parts: ShardedCSR, mq0, state0,
+                         cfg: SchedulerConfig, mesh, route_width=None,
+                         trace: Optional[list] = None):
+    """Host loop around one jitted sharded round (discrete kernels).
+
+    ``trace`` collects per-round host-side dicts: global queue sizes,
+    exchange volume, donations — the benchmark's per-round telemetry.
+    """
+    n = parts.num_vertices
+    round_builder = _make_round(program, cfg, n, route_width)
+
+    def one_round(row_ptr, col_idx, mq_st, state, c_st):
+        local_graph = CSRGraph(row_ptr=row_ptr[0], col_idx=col_idx[0])
+        me = jax.lax.axis_index(AXIS)
+        f = program.build(local_graph, me, AXIS)
+        round_step, keep_going = round_builder
+        mq = _local_view(mq_st)
+        c = _local_view(c_st)
+        mq, state, c = round_step(f, mq, state, c)
+        more = keep_going(mq, state, c)
+        size = mq.size
+        return (_stacked_view(mq), state, _counters_out(c),
+                more, size[None])
+
+    specs_q = jax.tree.map(lambda _: P(AXIS), mq0)
+    specs_c = jax.tree.map(lambda _: P(AXIS), ShardCounters.zero())
+    step = jax.jit(shard_map(
+        one_round, mesh=mesh,
+        in_specs=(P(AXIS), P(AXIS), specs_q, P(), specs_c),
+        out_specs=(specs_q, P(), specs_c, P(), P(AXIS)),
+        check_rep=False))
+
+    mq_st, state = mq0, state0
+    c_st = jax.tree.map(
+        lambda x: jnp.zeros((cfg.num_shards,), x.dtype), ShardCounters.zero())
+    rounds = 0
+    prev_sent = prev_donated = 0
+    # pre-round emptiness check mirrors discrete_run's host-synced predicate
+    while rounds < cfg.max_rounds:
+        if not program.rescans:
+            sizes = np.asarray(_queue_sizes(mq_st))
+            if sizes.sum() == 0:
+                break
+        if program.stop is not None and bool(program.stop(state)):
+            break
+        mq_st, state, c_st, more, sizes_dev = step(
+            parts.row_ptr, parts.col_idx, mq_st, state, c_st)
+        rounds += 1
+        if trace is not None:
+            sent_total = int(np.asarray(c_st.sent).sum())
+            donated_total = int(np.asarray(c_st.donated).sum())
+            trace.append({
+                "round": rounds,
+                "sizes": np.asarray(sizes_dev).tolist(),
+                "exchanged": sent_total - prev_sent,
+                "donated": donated_total - prev_donated,
+            })
+            prev_sent = sent_total
+            prev_donated = donated_total
+        if not bool(more):
+            break
+    return mq_st, state, c_st
+
+
+def _queue_sizes(mq_st) -> jax.Array:
+    """Per-device total replica occupancy from the stacked queue pytree."""
+    return jnp.sum(mq_st.lanes.tail - mq_st.lanes.head, axis=-1)
+
+
+# --------------------------------------------------------------- front door
+def run_sharded(
+    program: ShardProgram,
+    graph: CSRGraph,
+    cfg: SchedulerConfig,
+    *,
+    queue_capacity: Optional[int] = None,
+    route_width: Optional[int] = None,
+    mesh=None,
+    trace: Optional[list] = None,
+) -> Tuple[Any, ShardRunStats]:
+    """Drain ``program`` over a ``cfg.num_shards``-device mesh.
+
+    Returns ``(final_state, ShardRunStats)``.  The final state is the merged
+    (replicated) global state — ``program.result(state)`` is the answer.
+    """
+    s = cfg.num_shards
+    if mesh is None:
+        mesh = make_shard_mesh(s)
+    n = graph.num_vertices
+    steal_on = cfg.steal_threshold > 0
+    parts = partition_graph(graph, s, halo=steal_on)
+    state0, seeds = program.init()
+    seed_buf, seed_counts = split_seeds(seeds, n, s,
+                                        task_vertex=program.task_vertex)
+    capacity = queue_capacity or max(4 * n, 1024)
+    mq0 = _make_queues(capacity, s, seed_buf, seed_counts)
+
+    if cfg.persistent:
+        mq_st, state, c_st = persistent_run_sharded(
+            program, parts, mq0, state0, cfg, mesh, route_width=route_width)
+    else:
+        mq_st, state, c_st = discrete_run_sharded(
+            program, parts, mq0, state0, cfg, mesh, route_width=route_width,
+            trace=trace)
+
+    c = jax.tree.map(np.asarray, c_st)
+    stats = ShardRunStats(
+        rounds=int(c.rounds.max()),
+        items_processed=int(c.items.sum()),
+        dropped=int(np.asarray(mq_st.lanes.dropped).sum()),
+        route_dropped=int(c.route_dropped.sum()),
+        exchanged=int(c.sent.sum()),
+        donated=int(c.donated.sum()),
+        stolen_executed=int(c.stolen_run.sum()),
+        steal_rounds=int(c.steal_rounds.max()),
+        mis_routed=int(c.mis_routed.sum()),
+        per_device_items=c.items,
+        per_device_sent=c.sent,
+        per_device_donated=c.donated,
+        final_sizes=np.asarray(_queue_sizes(mq_st)),
+    )
+    return state, stats

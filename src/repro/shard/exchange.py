@@ -1,0 +1,105 @@
+"""Routed wavefront delivery: owner-split + all-to-all task exchange.
+
+After a device runs the wavefront body, every produced task is routed to the
+shard that owns its vertex (TREES-style round-synchronous epoch exchange):
+locally-owned tasks go straight into the device's queue replica; remote ones
+are compacted into per-destination send rows and delivered with one
+``lax.all_to_all`` over the ``("shard",)`` mesh axis, landing in the owner's
+queue before the next round.  The EMPTY queue sentinel doubles as the wire
+sentinel — no task encoding ever produces it.
+
+All functions here run *inside* shard_map (they use ``lax.axis_index`` and
+collectives) and are uniform across devices: every shard executes the same
+exchange every round, so the SPMD while_loop stays in lockstep.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.queue import EMPTY, MultiQueue
+from .partition import owner_of
+
+#: lane of each per-device MultiQueue replica holding owned (seeded, routed,
+#: or requeued) tasks — always expandable from the local CSR slice.
+LANE_LOCAL = 0
+#: lane holding tasks freshly donated by the ring predecessor — expandable
+#: from the steal halo, never re-donated (see shard/steal.py).
+LANE_STOLEN = 1
+NUM_LANES = 2
+
+
+def route_tasks(
+    mq: MultiQueue,
+    items: jax.Array,
+    mask: jax.Array,
+    *,
+    axis_name: str,
+    num_shards: int,
+    num_vertices: int,
+    task_vertex,
+    route_width: int | None = None,
+    backend: str = "jnp",
+) -> Tuple[MultiQueue, jax.Array, jax.Array]:
+    """Deliver produced tasks to their owners' queue replicas.
+
+    Returns ``(mq', n_sent, n_route_dropped)`` — tasks shipped off-device
+    and tasks lost because more than ``route_width`` targeted one
+    destination (impossible at the default width = full output width; the
+    counter keeps narrower configurations honest).
+    """
+    k = items.shape[0]
+    route_width = k if route_width is None else route_width
+    me = jax.lax.axis_index(axis_name)
+    verts = task_vertex(jnp.where(mask, items, 0))
+    dest = owner_of(verts, num_vertices, num_shards)
+
+    local = mask & (dest == me)
+    mq = mq.push(LANE_LOCAL, items, local, backend=backend)
+
+    remote = mask & (dest != me)
+    # per-destination compaction: task i's slot in its destination row is
+    # the count of earlier remote tasks with the same destination (the same
+    # exclusive-prefix-sum reservation the queue push uses, one column per
+    # destination shard).
+    onehot = (dest[:, None] == jnp.arange(num_shards, dtype=jnp.int32)[None, :]
+              ) & remote[:, None]
+    rank = (jnp.cumsum(onehot, axis=0) - onehot)[
+        jnp.arange(k), dest].astype(jnp.int32)
+    sent = remote & (rank < route_width)
+    send = jnp.full((num_shards, route_width), EMPTY, jnp.int32).at[
+        jnp.where(sent, dest, num_shards), rank
+    ].set(jnp.where(sent, items, EMPTY), mode="drop")
+
+    # row s of recv = what shard s addressed to me this round
+    recv = jax.lax.all_to_all(send, axis_name, split_axis=0, concat_axis=0)
+    flat = recv.reshape(-1)
+    mq = mq.push(LANE_LOCAL, flat, flat != EMPTY, backend=backend)
+
+    n_sent = jnp.sum(sent.astype(jnp.int32))
+    n_dropped = jnp.sum(remote.astype(jnp.int32)) - n_sent
+    return mq, n_sent, n_dropped
+
+
+def pop_wavefront(mq: MultiQueue, wavefront: int):
+    """Pop one device wavefront, draining stolen tasks first.
+
+    Stolen tasks are served before local ones so donations turn into
+    progress immediately (they were donated because this device was idle).
+    Both lane pops are static-width; the stolen prefix and the local
+    remainder are fused into a single ``wavefront``-wide (items, valid)
+    pair, preserving each lane's FIFO order.
+    """
+    s_items, s_valid, mq = mq.pop_lane(LANE_STOLEN, wavefront)
+    k1 = jnp.sum(s_valid.astype(jnp.int32))
+    l_items, l_valid, mq = mq.pop_lane(LANE_LOCAL, wavefront,
+                                       quota=wavefront - k1)
+    k0 = jnp.sum(l_valid.astype(jnp.int32))
+    lane = jnp.arange(wavefront, dtype=jnp.int32)
+    shifted = l_items[jnp.clip(lane - k1, 0, wavefront - 1)]
+    items = jnp.where(lane < k1, s_items, shifted)
+    valid = lane < (k1 + k0)
+    items = jnp.where(valid, items, EMPTY)
+    return items, valid, k1, mq

@@ -1,0 +1,82 @@
+"""Work-stealing rebalance over the shard ring.
+
+Under shard_map every device pays the same per-round cost regardless of how
+full its queue replica is (a wavefront is a fixed-shape masked computation),
+so occupancy skew does not slow a round down — it inflates the *number* of
+rounds: the drain ends when the richest shard finishes.  Stealing attacks
+exactly that: when the gap between the richest and poorest replica exceeds
+``steal_threshold x mean``, each shard donates up to ``steal_chunk`` of its
+surplus to its ring successor, which can expand them because it carries the
+donor's vertex block as a steal halo (shard/partition.py).
+
+The donation plan is computed identically on every device from the
+all-gathered occupancy vector (``plan_donations`` is a pure function of it),
+so no extra coordination round is needed; the transfer itself is a single
+``ppermute`` of a fixed-width buffer.  Donations come only from the LOCAL
+lane (owned tasks by construction) and land in the receiver's STOLEN lane,
+which is never re-donated — a task strays at most one ring hop from home,
+and anything it produces is routed straight back to its owner by the next
+exchange (shard/exchange.py).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.queue import EMPTY, MultiQueue
+from .exchange import LANE_LOCAL, LANE_STOLEN
+
+
+def plan_donations(sizes: jax.Array, threshold: float,
+                   chunk: int) -> jax.Array:
+    """Per-shard donation counts toward the ring successor.
+
+    Pure function of the gathered occupancy vector, so every device computes
+    the identical plan.  Donation ``d -> d+1`` moves surplus above the mean
+    into the successor's deficit below it, capped at ``chunk``; nothing
+    moves unless the max-min gap exceeds ``threshold x mean`` (so a
+    balanced mesh pays no pop/push work, only the fixed ppermute).
+    """
+    sizes = jnp.asarray(sizes, jnp.int32)
+    s = sizes.shape[0]
+    total = jnp.sum(sizes)
+    mean = total // s + jnp.where(total % s > 0, 1, 0)   # ceil
+    gap = jnp.max(sizes) - jnp.min(sizes)
+    trigger = gap.astype(jnp.float32) > (
+        threshold * jnp.maximum(mean, 1).astype(jnp.float32))
+    surplus = jnp.maximum(sizes - mean, 0)
+    deficit = jnp.maximum(mean - jnp.roll(sizes, -1), 0)  # successor's need
+    give = jnp.minimum(jnp.minimum(surplus, deficit), chunk)
+    return jnp.where(trigger, give, 0).astype(jnp.int32)
+
+
+def rebalance(
+    mq: MultiQueue,
+    *,
+    axis_name: str,
+    num_shards: int,
+    threshold: float,
+    chunk: int,
+    backend: str = "jnp",
+) -> Tuple[MultiQueue, jax.Array, jax.Array]:
+    """One stealing step: donate surplus owned tasks to the ring successor.
+
+    Returns ``(mq', n_donated, triggered)`` for this device.  Runs
+    unconditionally every round (the SPMD loop needs a uniform collective
+    schedule); with an all-zero plan the ppermute carries only sentinels.
+    """
+    my_size = mq.lane_sizes()[LANE_LOCAL] + mq.lane_sizes()[LANE_STOLEN]
+    sizes = jax.lax.all_gather(my_size, axis_name)
+    give = plan_donations(sizes, threshold, chunk)
+    me = jax.lax.axis_index(axis_name)
+    k = give[me]
+
+    items, valid, mq = mq.pop_lane(LANE_LOCAL, chunk, quota=k)
+    buf = jnp.where(valid, items, EMPTY)
+    perm = [(i, (i + 1) % num_shards) for i in range(num_shards)]
+    recv = jax.lax.ppermute(buf, axis_name, perm=perm)
+    mq = mq.push(LANE_STOLEN, recv, recv != EMPTY, backend=backend)
+    n_donated = jnp.sum(valid.astype(jnp.int32))
+    return mq, n_donated, jnp.any(give > 0)

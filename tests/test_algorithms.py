@@ -84,6 +84,20 @@ def test_pagerank_matches_power_iteration(gname, backend):
     assert info["max_residue"] <= 1e-7
 
 
+def test_pagerank_small_explicit_budget_still_converges():
+    """An explicit work_budget below max_degree must be clamped up (the
+    progress-guarantee floor): otherwise a hub row is truncated and
+    re-queued forever, its residue never harvested, and the drain spins to
+    max_rounds."""
+    g = GRAPHS["scale_free"]
+    cfg = SchedulerConfig(num_workers=4, fetch_size=2, max_rounds=100000)
+    rank, info = pagerank_async(g, cfg, eps=1e-5, work_budget=1)
+    assert info["rounds"] < 100000
+    assert info["max_residue"] <= 1e-5
+    ref = pagerank_reference(g, iters=300)
+    assert float(jnp.max(jnp.abs(rank - ref))) < 1e-3
+
+
 def test_pagerank_async_does_less_work_on_scale_free():
     """Paper Table 4: async PageRank workload ratio < 1 vs BSP."""
     g = GRAPHS["scale_free"]

@@ -1,172 +1,142 @@
-"""Multi-device tests — run in subprocesses so the 8-device XLA flag never
-leaks into the main test session (smoke tests must see 1 device)."""
-import json
-import os
-import subprocess
-import sys
-import textwrap
+"""Multi-device tests — run in-process against whatever mesh is visible.
 
+These need 8 devices.  They no longer assume the XLA host-device override:
+when fewer than 8 devices are visible they skip with an actionable reason
+instead of spawning flag-setting subprocesses.  The CI ``multidevice`` job
+(and any local run) provides the devices with
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        python -m pytest tests/test_distributed_multidev.py tests/test_shard.py
+
+set *before* the first jax import.
+"""
+import dataclasses
+import tempfile
+
+import numpy as np
 import pytest
 
-REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+import jax
+import jax.numpy as jnp
 
-
-def _run(body: str, timeout=600) -> dict:
-    """Run ``body`` in a subprocess with 8 host devices; expect JSON on the
-    last stdout line."""
-    prog = ("import os\n"
-            "os.environ['XLA_FLAGS'] = "
-            "'--xla_force_host_platform_device_count=8'\n"
-            + textwrap.dedent(body))
-    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
-    out = subprocess.run([sys.executable, "-c", prog], capture_output=True,
-                         text=True, env=env, timeout=timeout)
-    assert out.returncode == 0, out.stderr[-3000:]
-    return json.loads(out.stdout.strip().splitlines()[-1])
+pytestmark = pytest.mark.skipif(
+    jax.device_count() < 8,
+    reason="needs 8 devices; set "
+           "XLA_FLAGS=--xla_force_host_platform_device_count=8 before jax "
+           "initializes (the CI 'multidevice' job does)")
 
 
 def test_sharded_train_step_runs_and_matches_single_device():
     """2x4 mesh FSDP+TP train step == unsharded train step (same numbers)."""
-    res = _run("""
-        import json
-        import jax, jax.numpy as jnp, numpy as np
-        from repro.configs.registry import smoke_config
-        from repro.distributed import sharding as SH
-        from repro.models import transformer as T
-        from repro.models.params import init_params, param_shardings
-        from repro.optim import adamw
+    from repro.configs.registry import smoke_config
+    from repro.distributed import sharding as SH
+    from repro.models import transformer as T
+    from repro.models.params import init_params, param_shardings
+    from repro.optim import adamw
 
-        cfg = smoke_config('stablelm-1.6b')
-        mesh = jax.make_mesh((2, 4), ('data', 'model'))
-        pc = SH.ParallelConfig()
-        params = init_params(T.model_spec(cfg), jax.random.PRNGKey(0),
-                             jnp.float32)
-        opt = adamw.init(params)
-        batch = {
-          'tokens': jax.random.randint(jax.random.PRNGKey(1), (8, 32), 0,
-                                       cfg.vocab_size),
-          'labels': jax.random.randint(jax.random.PRNGKey(2), (8, 32), 0,
-                                       cfg.vocab_size)}
-        step = SH.make_train_step(cfg)
+    cfg = smoke_config("stablelm-1.6b")
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    pc = SH.ParallelConfig()
+    params = init_params(T.model_spec(cfg), jax.random.PRNGKey(0),
+                         jnp.float32)
+    opt = adamw.init(params)
+    batch = {
+        "tokens": jax.random.randint(jax.random.PRNGKey(1), (8, 32), 0,
+                                     cfg.vocab_size),
+        "labels": jax.random.randint(jax.random.PRNGKey(2), (8, 32), 0,
+                                     cfg.vocab_size)}
+    step = SH.make_train_step(cfg)
 
-        # single-device reference
-        p1, o1, m1 = jax.jit(step)(params, opt, batch)
+    # single-device reference
+    p1, o1, m1 = jax.jit(step)(params, opt, batch)
 
-        # sharded
-        resolve = SH.make_resolver(mesh, pc)
-        shardings = param_shardings(T.model_spec(cfg), resolve)
-        sharded_params = jax.device_put(params, shardings)
-        sharded_opt = jax.tree.map(
-            lambda x: jax.device_put(x, SH.replicated(mesh))
-            if x.ndim == 0 else x, opt)
-        sharded_opt = adamw.AdamWState(
-            step=jax.device_put(opt.step, SH.replicated(mesh)),
-            m=jax.device_put(opt.m, shardings),
-            v=jax.device_put(opt.v, shardings))
-        b_sh = SH.batch_sharding(mesh, pc)
-        sharded_batch = {k: jax.device_put(v, b_sh)
-                         for k, v in batch.items()}
-        with mesh:
-            p2, o2, m2 = jax.jit(step)(sharded_params, sharded_opt,
-                                       sharded_batch)
-        diff = max(float(jnp.max(jnp.abs(a - b)))
-                   for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)))
-        print(json.dumps({
-            'loss1': float(m1['loss']), 'loss2': float(m2['loss']),
-            'max_param_diff': diff,
-            'n_dev': jax.device_count()}))
-    """)
-    assert res["n_dev"] == 8
-    assert abs(res["loss1"] - res["loss2"]) < 1e-4
-    assert res["max_param_diff"] < 1e-4
+    # sharded
+    resolve = SH.make_resolver(mesh, pc)
+    shardings = param_shardings(T.model_spec(cfg), resolve)
+    sharded_params = jax.device_put(params, shardings)
+    sharded_opt = adamw.AdamWState(
+        step=jax.device_put(opt.step, SH.replicated(mesh)),
+        m=jax.device_put(opt.m, shardings),
+        v=jax.device_put(opt.v, shardings))
+    b_sh = SH.batch_sharding(mesh, pc)
+    sharded_batch = {k: jax.device_put(v, b_sh) for k, v in batch.items()}
+    with mesh:
+        p2, o2, m2 = jax.jit(step)(sharded_params, sharded_opt,
+                                   sharded_batch)
+    diff = max(float(jnp.max(jnp.abs(a - b)))
+               for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)))
+    assert abs(float(m1["loss"]) - float(m2["loss"])) < 1e-4
+    assert diff < 1e-4
 
 
 def test_compressed_psum_multidevice():
     """int8 compressed psum across 8 devices approximates the exact psum."""
-    res = _run("""
-        import json
-        import jax, jax.numpy as jnp, numpy as np
-        from jax.experimental.shard_map import shard_map
-        from jax.sharding import PartitionSpec as PS
-        from repro.distributed.compression import compressed_psum
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as PS
 
-        mesh = jax.make_mesh((8,), ('d',))
-        x = jnp.asarray(np.random.default_rng(0).standard_normal(8 * 64),
-                        jnp.float32)
-        exact = shard_map(lambda v: jax.lax.psum(v, 'd'), mesh=mesh,
-                          in_specs=PS('d'), out_specs=PS('d'))(x)
-        approx = shard_map(lambda v: compressed_psum(v, 'd'), mesh=mesh,
-                           in_specs=PS('d'), out_specs=PS('d'))(x)
-        rel = float(jnp.max(jnp.abs(exact - approx)) /
-                    (jnp.max(jnp.abs(exact)) + 1e-9))
-        print(json.dumps({'rel_err': rel}))
-    """)
-    assert res["rel_err"] < 0.05
+    from repro.distributed.compression import compressed_psum
+
+    mesh = jax.make_mesh((8,), ("d",))
+    x = jnp.asarray(np.random.default_rng(0).standard_normal(8 * 64),
+                    jnp.float32)
+    exact = shard_map(lambda v: jax.lax.psum(v, "d"), mesh=mesh,
+                      in_specs=PS("d"), out_specs=PS("d"))(x)
+    approx = shard_map(lambda v: compressed_psum(v, "d"), mesh=mesh,
+                       in_specs=PS("d"), out_specs=PS("d"))(x)
+    rel = float(jnp.max(jnp.abs(exact - approx)) /
+                (jnp.max(jnp.abs(exact)) + 1e-9))
+    assert rel < 0.05
 
 
 def test_elastic_remesh_resume():
     """Checkpoint on a 2x4 mesh, restore onto 4x2 — elastic scaling."""
-    res = _run("""
-        import json, tempfile
-        import jax, jax.numpy as jnp, numpy as np
-        from repro.checkpoint.manager import CheckpointManager
-        from repro.configs.registry import smoke_config
-        from repro.distributed import sharding as SH
-        from repro.models import transformer as T
-        from repro.models.params import init_params, param_shardings
+    from repro.checkpoint.manager import CheckpointManager
+    from repro.configs.registry import smoke_config
+    from repro.distributed import sharding as SH
+    from repro.models import transformer as T
+    from repro.models.params import init_params, param_shardings
 
-        cfg = smoke_config('olmoe-1b-7b')
-        params = init_params(T.model_spec(cfg), jax.random.PRNGKey(0),
-                             jnp.float32)
-        mesh_a = jax.make_mesh((2, 4), ('data', 'model'))
-        sh_a = param_shardings(T.model_spec(cfg),
-                               SH.make_resolver(mesh_a, SH.ParallelConfig()))
-        p_a = jax.device_put(params, sh_a)
-        d = tempfile.mkdtemp()
-        mgr = CheckpointManager(d)
-        mgr.save(3, p_a)
+    cfg = smoke_config("olmoe-1b-7b")
+    params = init_params(T.model_spec(cfg), jax.random.PRNGKey(0),
+                         jnp.float32)
+    mesh_a = jax.make_mesh((2, 4), ("data", "model"))
+    sh_a = param_shardings(T.model_spec(cfg),
+                           SH.make_resolver(mesh_a, SH.ParallelConfig()))
+    p_a = jax.device_put(params, sh_a)
+    d = tempfile.mkdtemp()
+    mgr = CheckpointManager(d)
+    mgr.save(3, p_a)
 
-        mesh_b = jax.make_mesh((4, 2), ('data', 'model'))
-        sh_b = param_shardings(T.model_spec(cfg),
-                               SH.make_resolver(mesh_b, SH.ParallelConfig()))
-        p_b = mgr.restore(3, params, shardings=sh_b)
-        diff = max(float(jnp.max(jnp.abs(a - b)))
-                   for a, b in zip(jax.tree.leaves(params),
-                                   jax.tree.leaves(p_b)))
-        ok_layout = all(
-            pb.sharding == sb for pb, sb in
-            zip(jax.tree.leaves(p_b), jax.tree.leaves(sh_b)))
-        print(json.dumps({'diff': diff, 'ok_layout': bool(ok_layout)}))
-    """)
-    assert res["diff"] == 0.0
-    assert res["ok_layout"]
+    mesh_b = jax.make_mesh((4, 2), ("data", "model"))
+    sh_b = param_shardings(T.model_spec(cfg),
+                           SH.make_resolver(mesh_b, SH.ParallelConfig()))
+    p_b = mgr.restore(3, params, shardings=sh_b)
+    diff = max(float(jnp.max(jnp.abs(a - b)))
+               for a, b in zip(jax.tree.leaves(params),
+                               jax.tree.leaves(p_b)))
+    assert diff == 0.0
+    assert all(pb.sharding == sb for pb, sb in
+               zip(jax.tree.leaves(p_b), jax.tree.leaves(sh_b)))
 
 
 def test_dryrun_mini_mesh():
     """End-to-end dry-run machinery on an 8-device mesh (2x4)."""
-    res = _run("""
-        import json
-        import jax, jax.numpy as jnp
-        from repro.configs.registry import get_config
-        from repro.configs.base import SHAPES
-        import dataclasses
-        from repro.distributed import sharding as SH
-        from repro.launch.specs import input_specs
-        from repro.launch import roofline as RL
+    from repro.configs.base import SHAPES
+    from repro.configs.registry import get_config
+    from repro.distributed import sharding as SH
+    from repro.launch import roofline as RL
+    from repro.launch.specs import input_specs
 
-        cfg = dataclasses.replace(get_config('stablelm-1.6b'), num_layers=2)
-        shape = dataclasses.replace(SHAPES['train_4k'], seq_len=128,
-                                    global_batch=8)
-        mesh = jax.make_mesh((2, 4), ('data', 'model'))
-        pc = SH.ParallelConfig()
-        specs = input_specs(cfg, shape, mesh, pc)
-        params, opt = SH.abstract_train_state(cfg, mesh, pc)
-        step = SH.make_train_step(cfg)
-        with mesh:
-            compiled = jax.jit(step).lower(params, opt, specs).compile()
-        terms = RL.cost_terms(compiled)
-        print(json.dumps({'flops': terms.flops,
-                          'coll_bytes': terms.coll_bytes}))
-    """)
-    assert res["flops"] > 0
-    assert res["coll_bytes"] > 0
+    cfg = dataclasses.replace(get_config("stablelm-1.6b"), num_layers=2)
+    shape = dataclasses.replace(SHAPES["train_4k"], seq_len=128,
+                                global_batch=8)
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    pc = SH.ParallelConfig()
+    specs = input_specs(cfg, shape, mesh, pc)
+    params, opt = SH.abstract_train_state(cfg, mesh, pc)
+    step = SH.make_train_step(cfg)
+    with mesh:
+        compiled = jax.jit(step).lower(params, opt, specs).compile()
+    terms = RL.cost_terms(compiled)
+    assert terms.flops > 0
+    assert terms.coll_bytes > 0

@@ -1,0 +1,99 @@
+"""Packed (job_id, payload) encoding edge cases (DESIGN.md section 8).
+
+Boundary coverage the batch tests in test_server.py skip: the last legal
+job id, naturals at the zigzag/payload-width boundary, the host-side
+admission validator at its exact limits, and a hypothesis round-trip
+property over the full legal domain.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.server.encoding import (MAX_JOBS, MAX_NATURAL, PAYLOAD_BITS,
+                                   check_job_fits, pack, unpack_job,
+                                   unpack_natural, unzigzag, zigzag)
+
+
+def _roundtrip(job_id, naturals):
+    packed = pack(job_id, jnp.asarray(naturals, jnp.int32))
+    return (np.asarray(unpack_job(packed)),
+            np.asarray(unpack_natural(packed)),
+            np.asarray(packed))
+
+
+def test_last_job_id_roundtrips():
+    """job_id == MAX_JOBS - 1 fills every job bit; payload must survive."""
+    naturals = np.array([0, 1, -1, 5, -5, 1000, -1000], np.int32)
+    jobs, nats, packed = _roundtrip(MAX_JOBS - 1, naturals)
+    assert (jobs == MAX_JOBS - 1).all()
+    assert np.array_equal(nats, naturals)
+    # the sign bit stays clear even with all job bits set (queue-orderable)
+    assert (packed >= 0).all()
+
+
+def test_payload_boundary_naturals():
+    """Largest magnitudes whose zigzag still fits PAYLOAD_BITS.
+
+    zigzag maps t -> 2t (t >= 0) and -t -> 2|t|-1, so the width boundary is
+    +MAX_NATURAL / -(MAX_NATURAL + 1): both must round-trip losslessly for
+    every job id that borders the payload field.
+    """
+    edge = np.array([MAX_NATURAL, -MAX_NATURAL, -(MAX_NATURAL + 1)],
+                    np.int32)
+    assert int(zigzag(jnp.int32(-(MAX_NATURAL + 1)))) == (1 << PAYLOAD_BITS) - 1
+    for job_id in (0, 1, MAX_JOBS - 1):
+        jobs, nats, _ = _roundtrip(job_id, edge)
+        assert (jobs == job_id).all()
+        assert np.array_equal(nats, edge)
+
+
+def test_beyond_boundary_wraps_not_corrupts_job_bits():
+    """One past the payload boundary is lossy (documented), but the
+    overflow must stay confined to the payload field — the tenant id can
+    never be corrupted by a bad natural."""
+    too_big = jnp.int32(MAX_NATURAL + 1)          # zigzag needs 25 bits
+    packed = pack(MAX_JOBS - 1, too_big)
+    assert int(unpack_job(packed)) == MAX_JOBS - 1
+    assert int(unpack_natural(packed)) != int(too_big)
+
+
+def test_check_job_fits_boundaries():
+    # largest admissible graph: coloring naturals reach ±(n + 1)
+    check_job_fits(0, MAX_NATURAL - 1)
+    check_job_fits(MAX_JOBS - 1, MAX_NATURAL - 1)
+    with pytest.raises(ValueError, match="too large"):
+        check_job_fits(0, MAX_NATURAL)
+    with pytest.raises(ValueError, match="out of range"):
+        check_job_fits(MAX_JOBS, 16)
+    with pytest.raises(ValueError, match="out of range"):
+        check_job_fits(-1, 16)
+
+
+def test_zigzag_boundary_bijection():
+    t = jnp.asarray([0, -1, 1, MAX_NATURAL, -MAX_NATURAL,
+                     -(MAX_NATURAL + 1)], jnp.int32)
+    z = zigzag(t)
+    assert int(jnp.max(z)) < (1 << PAYLOAD_BITS)
+    assert np.array_equal(np.asarray(unzigzag(z)), np.asarray(t))
+
+
+# ------------------------------------------------------------ property test
+def test_roundtrip_property():
+    """Hypothesis-gated (like test_queue/test_frontier): pack∘unpack is the
+    identity over the entire legal (job_id, natural) domain."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=200, deadline=None)
+    @given(job_id=st.integers(0, MAX_JOBS - 1),
+           naturals=st.lists(
+               st.integers(-(MAX_NATURAL + 1), MAX_NATURAL),
+               min_size=1, max_size=64))
+    def inner(job_id, naturals):
+        jobs, nats, packed = _roundtrip(job_id, naturals)
+        assert (jobs == job_id).all()
+        assert np.array_equal(nats, np.asarray(naturals, np.int32))
+        assert (packed >= 0).all()
+
+    inner()
