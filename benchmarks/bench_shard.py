@@ -32,6 +32,12 @@ OUT = "BENCH_shard.json"
 SHARD_COUNTS = (1, 2, 4, 8)
 SCALE = 8          # R-MAT: 2**8 vertices
 GRID_SIDE = 16     # mesh: 16x16
+# launch shapes shared with benchmarks/smoke.py — the regression guard must
+# recompute with exactly the configs that produced the checked-in JSON
+SHARD_WORKERS = 32       # scaling sweep: per-device wavefront width
+STEAL_WORKERS = 8        # steal case study: narrow wavefront, 8 shards
+STEAL_THRESHOLD = 0.5
+STEAL_CHUNK = 16
 
 
 def _child() -> None:
@@ -53,7 +59,7 @@ def _child() -> None:
         ref = np.asarray(bfs_bsp(g, 0)[0])
         entry: dict = {"n": g.num_vertices, "m": g.num_edges, "shards": {}}
         for s in SHARD_COUNTS:
-            cfg = SchedulerConfig(num_workers=32, fetch_size=1,
+            cfg = SchedulerConfig(num_workers=SHARD_WORKERS, fetch_size=1,
                                   num_shards=s, persistent=False)
             program = SH.build_program("bfs", g, cfg, params={"source": 0})
             trace: list = []
@@ -75,12 +81,12 @@ def _child() -> None:
         # stealing case study: single-source drain seeds only shard 0 —
         # the most skewed start the partitioner can produce
         steal_cfgs = {
-            "steal_off": SchedulerConfig(num_workers=8, num_shards=8,
-                                         persistent=False),
-            "steal_on": SchedulerConfig(num_workers=8, num_shards=8,
-                                        persistent=False,
-                                        steal_threshold=0.5,
-                                        steal_chunk=16),
+            "steal_off": SchedulerConfig(num_workers=STEAL_WORKERS,
+                                         num_shards=8, persistent=False),
+            "steal_on": SchedulerConfig(num_workers=STEAL_WORKERS,
+                                        num_shards=8, persistent=False,
+                                        steal_threshold=STEAL_THRESHOLD,
+                                        steal_chunk=STEAL_CHUNK),
         }
         entry["steal"] = {}
         for label, cfg in steal_cfgs.items():

@@ -3,6 +3,11 @@
 ``PYTHONPATH=src python -m benchmarks.run [section ...]``
 Sections: table1 table4 figs serving server kernels roofline shard
 (default: all).  Prints ``name,us_per_call,derived`` CSV.
+
+``--smoke`` instead recomputes the schedule-deterministic counters (round
+counts, exchange totals, donations) and exits non-zero if any disagrees
+with the checked-in ``BENCH_*.json`` — the CI regression guard
+(benchmarks/smoke.py).
 """
 from __future__ import annotations
 
@@ -10,6 +15,16 @@ import sys
 
 
 def main() -> None:
+    argv = sys.argv[1:]
+    if "--smoke" in argv:
+        extra = [a for a in argv if a != "--smoke"]
+        if extra:
+            sys.exit(f"--smoke runs alone (got extra args {extra}); run "
+                     f"sections first, then the smoke check")
+        from . import smoke
+
+        sys.exit(1 if smoke.run() else 0)
+
     from . import (bench_figs, bench_kernels, bench_roofline, bench_server,
                    bench_serving, bench_shard, bench_table1, bench_table4)
 
@@ -23,7 +38,7 @@ def main() -> None:
         "roofline": bench_roofline.run,
         "shard": bench_shard.run,
     }
-    want = sys.argv[1:] or list(sections)
+    want = argv or list(sections)
     print("name,us_per_call,derived")
     for name in want:
         sections[name]()

@@ -1,0 +1,139 @@
+"""Bench smoke: recompute deterministic round counts, diff vs checked-in JSON.
+
+``PYTHONPATH=src python -m benchmarks.run --smoke``
+
+The sharded benchmark's round counts are pure functions of the schedule —
+graph, seeds, launch shape, shard count — with zero timing noise, so any
+change to the drain engines that shifts them is a real behavioral
+regression, not jitter.  This re-runs the exact configurations
+``bench_shard`` records in ``BENCH_shard.json`` (BFS over the R-MAT and
+grid graphs, every shard count, steal on/off) and fails loudly when a
+recomputed round count, exchange total, or donation count disagrees with
+the checked-in value.  CI runs it on every push (``bench-smoke`` job); the
+full benchmark suite refreshes the JSONs deliberately, this guard keeps
+them honest in between.
+
+Like ``bench_shard``, the measurement runs in a subprocess that forces 8
+host devices before jax initializes, so the smoke works under plain CPU CI.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+SHARD_JSON = REPO / "BENCH_shard.json"
+
+#: fields of each per-shard-count entry that are schedule-deterministic
+#: (wall_seconds, balances etc. are measurements, not invariants)
+_SHARD_FIELDS = ("rounds", "exchanged_total", "per_device_items")
+_STEAL_FIELDS = ("rounds", "donated", "stolen_executed")
+
+
+def _recompute() -> dict:
+    """Run bench_shard's deterministic portion in an 8-device subprocess.
+
+    Every graph parameter and launch shape is imported from bench_shard so
+    the guard can never drift from the configs that produced the baseline.
+    """
+    from .bench_shard import (GRID_SIDE, SCALE, SHARD_COUNTS, SHARD_WORKERS,
+                              STEAL_CHUNK, STEAL_THRESHOLD, STEAL_WORKERS)
+
+    body = f"""
+import os
+os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count=8'
+os.environ.setdefault('JAX_PLATFORMS', 'cpu')
+import json
+import numpy as np
+from repro.core import SchedulerConfig
+from repro.graph.generators import grid2d, rmat
+from repro.runtime import build_program
+from repro.shard import run_sharded
+
+graphs = {{
+    'rmat': rmat({SCALE}, edge_factor=8, seed=1),
+    'grid': grid2d({GRID_SIDE}, {GRID_SIDE}, seed=0),
+}}
+out = {{}}
+for name, g in graphs.items():
+    entry = {{'shards': {{}}, 'steal': {{}}}}
+    for s in {list(SHARD_COUNTS)}:
+        cfg = SchedulerConfig(num_workers={SHARD_WORKERS}, fetch_size=1,
+                              num_shards=s, persistent=False)
+        program = build_program('bfs', g, cfg, params={{'source': 0}})
+        state, stats = run_sharded(program, g, cfg)
+        entry['shards'][str(s)] = {{
+            'rounds': stats.rounds,
+            'exchanged_total': stats.exchanged,
+            'per_device_items': stats.per_device_items.tolist(),
+        }}
+    for label, kw in {{'steal_off': {{}},
+                       'steal_on': {{'steal_threshold': {STEAL_THRESHOLD},
+                                     'steal_chunk': {STEAL_CHUNK}}}}}.items():
+        cfg = SchedulerConfig(num_workers={STEAL_WORKERS}, num_shards=8,
+                              persistent=False, **kw)
+        program = build_program('bfs', g, cfg, params={{'source': 0}})
+        state, stats = run_sharded(program, g, cfg)
+        entry['steal'][label] = {{
+            'rounds': stats.rounds,
+            'donated': stats.donated,
+            'stolen_executed': stats.stolen_executed,
+        }}
+    out[name] = entry
+print(json.dumps(out))
+"""
+    env = dict(os.environ, PYTHONPATH=os.pathsep.join(
+        [str(REPO / "src")] + ([os.environ["PYTHONPATH"]]
+                               if "PYTHONPATH" in os.environ else [])))
+    proc = subprocess.run([sys.executable, "-c", body], capture_output=True,
+                          text=True, env=env, timeout=1800, cwd=REPO)
+    if proc.returncode != 0:
+        raise RuntimeError(f"smoke subprocess failed:\n{proc.stderr[-3000:]}")
+    return json.loads(proc.stdout.strip().splitlines()[-1])
+
+
+def run() -> int:
+    """Returns the number of mismatches (0 = pass); prints a report."""
+    if not SHARD_JSON.exists():
+        print(f"smoke: {SHARD_JSON.name} missing — run "
+              f"'python -m benchmarks.run shard' to create the baseline")
+        return 1
+    baseline = json.loads(SHARD_JSON.read_text())["graphs"]
+    fresh = _recompute()
+    mismatches = 0
+
+    def check(path: str, want, got):
+        nonlocal mismatches
+        if want != got:
+            mismatches += 1
+            print(f"smoke MISMATCH {path}: checked-in {want!r} != "
+                  f"recomputed {got!r}")
+
+    for gname, entry in baseline.items():
+        for s, want in entry["shards"].items():
+            got = fresh[gname]["shards"][s]
+            for field in _SHARD_FIELDS:
+                check(f"{gname}/shards={s}/{field}", want[field], got[field])
+        for label, want in entry.get("steal", {}).items():
+            got = fresh[gname]["steal"][label]
+            for field in _STEAL_FIELDS:
+                check(f"{gname}/steal/{label}/{field}", want[field],
+                      got[field])
+    if mismatches:
+        print(f"smoke: {mismatches} round-count regression(s) vs "
+              f"{SHARD_JSON.name}")
+    else:
+        print(f"smoke: OK — all deterministic counters match "
+              f"{SHARD_JSON.name}")
+    return mismatches
+
+
+def main() -> None:
+    sys.exit(1 if run() else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -23,10 +23,11 @@ import jax
 import jax.numpy as jnp
 
 from ..core import (SchedulerConfig, WorkCounter, expand_merge_path,
-                    expand_per_item, make_queue)
-from ..core import scheduler as sched
+                    expand_per_item)
 from ..graph.csr import CSRGraph
-from .common import default_work_budget, shard_info as _shard_info
+from ..runtime.program import AtosProgram, ProgramContext
+from ..runtime.programs import reject_unknown_params
+from .common import default_work_budget, max_degree_of
 
 INF = jnp.int32(0x7FFFFFFF)
 
@@ -149,6 +150,45 @@ def make_wavefront_fn(graph: CSRGraph, strategy: str, work_budget: int,
     return f
 
 
+def make_program(graph: CSRGraph, cfg: SchedulerConfig, *,
+                 queue_capacity: int | None = None,
+                 **params) -> AtosProgram:
+    """Speculative BFS as **one** :class:`AtosProgram` — the single
+    definition every execution policy (single/fused/sharded x
+    persistent/discrete) drains unchanged (DESIGN.md section 11).
+
+    ``params``: ``source`` (init-only), ``strategy`` (merge_path |
+    per_item), ``work_budget``.  Static bounds (budget, max degree) come
+    from the global graph so a sharded run traces the identical body on
+    every device; ``dist`` merges by ``pmin`` — the exact union of all
+    relaxations — and the work counter by delta-psum.
+    """
+    source = int(params.pop("source", 0))
+    strategy = params.pop("strategy", "merge_path")
+    work_budget = params.pop("work_budget", None)
+    reject_unknown_params("bfs", params)
+    n = graph.num_vertices
+    max_degree = max_degree_of(graph)
+    budget = default_work_budget(graph, cfg.wavefront, work_budget,
+                                 max_degree=max_degree)
+
+    def make_body(local_graph: CSRGraph, ctx: ProgramContext):
+        return make_wavefront_fn(local_graph, strategy, budget, max_degree,
+                                 backend=ctx.backend)
+
+    return AtosProgram(
+        name="bfs",
+        init=lambda: (init_state(graph, source),
+                      jnp.array([source], jnp.int32)),
+        make_body=make_body,
+        result=lambda s: s.dist,
+        merge={"dist": "pmin", "counter": "sum_delta"},
+        work=lambda s: s.counter.work,
+        ideal_work=n,
+        default_queue_capacity=queue_capacity or max(4 * n, 1024),
+    )
+
+
 def bfs_speculative(
     graph: CSRGraph,
     source: int,
@@ -160,36 +200,19 @@ def bfs_speculative(
 ) -> Tuple[jax.Array, dict]:
     """Relaxed-barrier BFS on the Atos scheduler.
 
-    ``strategy``: "merge_path" (CTA-style) or "per_item" (warp-style).
-    ``cfg.num_shards > 1`` runs the same drain over a device mesh with
-    per-shard queue replicas and routed exchange (repro/shard); distances
-    are bit-identical to the single-device run.  ``trace`` entries are then
-    per-round dicts (sizes/exchanged/donated) instead of tuples.
+    Thin driver over :func:`repro.runtime.execute`: builds the BFS
+    :class:`AtosProgram` and drains it under ``cfg``'s resolved execution
+    policy.  ``strategy``: "merge_path" (CTA-style) or "per_item"
+    (warp-style).  Under the sharded topology (``cfg.num_shards > 1`` or
+    ``topology="sharded"``) distances are bit-identical to the
+    single-device run, and ``trace`` entries are per-round dicts
+    (sizes/exchanged/donated) instead of tuples.
     """
-    if cfg.num_shards > 1:
-        from .. import shard as _shard  # lazy: shard imports this module
+    from ..runtime import execute  # lazy: runtime.api imports this module
 
-        program = _shard.build_program(
-            "bfs", graph, cfg,
-            params={"source": source, "strategy": strategy,
-                    "work_budget": work_budget},
-            queue_capacity=queue_capacity)
-        state, stats = _shard.run_sharded(
-            program, graph, cfg, queue_capacity=queue_capacity, trace=trace)
-        return state.dist, _shard_info(stats, state)
-    n = graph.num_vertices
-    max_degree = int(jnp.max(graph.degrees()))
-    work_budget = default_work_budget(graph, cfg.wavefront, work_budget,
-                                      max_degree=max_degree)
-    queue_capacity = queue_capacity or max(4 * n, 1024)
-    queue = make_queue(queue_capacity, jnp.array([source], dtype=jnp.int32))
-    state = init_state(graph, source)
-    f = make_wavefront_fn(graph, strategy, work_budget, max_degree,
-                          backend=cfg.backend)
-    _, state, stats = sched.run(f, queue, state, cfg, trace=trace)
-    info = {
-        "rounds": int(stats.rounds),
-        "work": int(state.counter.work),
-        "dropped": int(stats.dropped),
-    }
+    program = make_program(graph, cfg, queue_capacity=queue_capacity,
+                           source=source, strategy=strategy,
+                           work_budget=work_budget)
+    state, _, info = execute(program, graph, cfg,
+                             queue_capacity=queue_capacity, trace=trace)
     return state.dist, info

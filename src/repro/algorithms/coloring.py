@@ -30,10 +30,11 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-from ..core import SchedulerConfig, WorkCounter, make_queue
-from ..core import scheduler as sched
+from ..core import SchedulerConfig, WorkCounter
 from ..graph.csr import CSRGraph
-from .common import shard_info as _shard_info
+from ..runtime.program import AtosProgram, ProgramContext
+from ..runtime.programs import reject_unknown_params
+from .common import max_degree_of
 
 
 @jax.tree_util.register_dataclass
@@ -193,6 +194,41 @@ def make_wavefront_fn(graph: CSRGraph, fused: bool = True,
     return f
 
 
+def make_program(graph: CSRGraph, cfg: SchedulerConfig, *,
+                 queue_capacity: int | None = None,
+                 **params) -> AtosProgram:
+    """Speculative greedy coloring as **one** :class:`AtosProgram`
+    (DESIGN.md section 11).
+
+    The context picks the body variant: the single/fused topologies run the
+    fused assign/detect uberkernel (Alg 6), the sharded topology the
+    unfused one (detects read epoch-start colors), so results never depend
+    on which device a same-epoch neighbor assign ran on.  Tasks are
+    sign-encoded ±(v+1); ownership follows the decoded vertex
+    (``task_vertex``).  Colors are single-writer per round, so both state
+    fields merge by delta-psum.
+    """
+    reject_unknown_params("coloring", params)
+    n = graph.num_vertices
+    max_degree = max_degree_of(graph)
+
+    def make_body(local_graph: CSRGraph, ctx: ProgramContext):
+        return make_wavefront_fn(local_graph, fused=not ctx.sharded,
+                                 max_degree=max_degree)
+
+    return AtosProgram(
+        name="coloring",
+        init=lambda: init_state(graph),
+        make_body=make_body,
+        result=lambda s: s.colors,
+        merge={"colors": "sum_delta", "counter": "sum_delta"},
+        task_vertex=lambda t: jnp.abs(jnp.asarray(t, jnp.int32)) - 1,
+        work=lambda s: s.counter.work,
+        ideal_work=n,
+        default_queue_capacity=queue_capacity or max(4 * n, 1024),
+    )
+
+
 def coloring_async(
     graph: CSRGraph,
     cfg: SchedulerConfig,
@@ -201,31 +237,16 @@ def coloring_async(
 ) -> Tuple[jax.Array, dict]:
     """Alg 6: fused assign/detect uberkernel on the Atos queue.
 
-    ``cfg.num_shards > 1`` distributes the drain over a device mesh
-    (repro/shard) using the *unfused* body (detects read epoch-start
-    colors), so the result is independent of which shard a task ran on:
-    a full-width sharded run produces bit-identical colors for every shard
+    Thin driver over :func:`repro.runtime.execute`.  The sharded topology
+    uses the *unfused* body (detects read epoch-start colors), so a
+    full-width sharded run produces bit-identical colors for every shard
     count, including 1 (tested in tests/test_shard.py).
     """
-    if cfg.num_shards > 1:
-        from .. import shard as _shard  # lazy: shard imports this module
+    from ..runtime import execute  # lazy: runtime.api imports this module
 
-        program = _shard.build_program("coloring", graph, cfg,
-                                       queue_capacity=queue_capacity)
-        state, stats = _shard.run_sharded(
-            program, graph, cfg, queue_capacity=queue_capacity, trace=trace)
-        return state.colors, _shard_info(stats, state)
-    n = graph.num_vertices
-    queue_capacity = queue_capacity or max(4 * n, 1024)
-    f = make_wavefront_fn(graph)
-    state, seeds = init_state(graph)
-    queue = make_queue(queue_capacity, seeds)
-    _, state, stats = sched.run(f, queue, state, cfg, trace=trace)
-    info = {
-        "rounds": int(stats.rounds),
-        "work": int(state.counter.work),
-        "dropped": int(stats.dropped),
-    }
+    program = make_program(graph, cfg, queue_capacity=queue_capacity)
+    state, _, info = execute(program, graph, cfg,
+                             queue_capacity=queue_capacity, trace=trace)
     return state.colors, info
 
 

@@ -1,9 +1,35 @@
 """Budget helpers shared by the queue-driven algorithm drivers."""
 from __future__ import annotations
 
+from collections import OrderedDict
+
 import jax.numpy as jnp
 
 from ..graph.csr import CSRGraph
+
+_MAX_DEGREE_CACHE: OrderedDict = OrderedDict()
+_MAX_DEGREE_CACHE_SIZE = 64
+
+
+def max_degree_of(graph: CSRGraph) -> int:
+    """Max degree, cached per graph identity (bounded LRU).
+
+    The program factories need it for every build, and the JobRegistry
+    builds a program per admission — without the cache each admit pays a
+    device reduction + host sync.  The row_ptr reference is pinned in the
+    value so a GC'd id can never alias a different graph; the LRU bound
+    keeps a long-lived process over many transient graphs from pinning
+    device arrays without limit (eviction only costs a re-reduction).
+    """
+    key = id(graph.row_ptr)
+    cache = _MAX_DEGREE_CACHE
+    if key in cache:
+        cache.move_to_end(key)
+    else:
+        cache[key] = (graph.row_ptr, int(jnp.max(graph.degrees())))
+        while len(cache) > _MAX_DEGREE_CACHE_SIZE:
+            cache.popitem(last=False)
+    return cache[key][1]
 
 
 def default_work_budget(graph: CSRGraph, wavefront: int,
@@ -24,19 +50,3 @@ def default_work_budget(graph: CSRGraph, wavefront: int,
             8, int(float(jnp.mean(graph.degrees())) * 4)
         )
     return max(work_budget, max_degree)
-
-
-def shard_info(stats, state) -> dict:
-    """Uniform ``info`` dict for sharded runs (mirrors the single-device
-    drivers' keys, plus the exchange/steal telemetry)."""
-    return {
-        "rounds": stats.rounds,
-        "work": int(state.counter.work),
-        "dropped": stats.dropped + stats.route_dropped,
-        "shards": len(stats.per_device_items),
-        "exchanged": stats.exchanged,
-        "donated": stats.donated,
-        "steal_rounds": stats.steal_rounds,
-        "mis_routed": stats.mis_routed,
-        "occupancy_balance": stats.occupancy_balance,
-    }

@@ -26,10 +26,11 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-from ..core import SchedulerConfig, WorkCounter, expand_merge_path, make_queue
-from ..core import scheduler as sched
+from ..core import SchedulerConfig, WorkCounter, expand_merge_path
 from ..graph.csr import CSRGraph
-from .common import default_work_budget, shard_info as _shard_info
+from ..runtime.program import AtosProgram, ProgramContext
+from ..runtime.programs import reject_unknown_params
+from .common import default_work_budget, max_degree_of
 
 
 @jax.tree_util.register_dataclass
@@ -264,6 +265,83 @@ def make_wavefront_fns(
     return f, on_empty, stop
 
 
+def make_program(graph: CSRGraph, cfg: SchedulerConfig, *,
+                 queue_capacity: int | None = None,
+                 **params) -> AtosProgram:
+    """Async push PageRank as **one** :class:`AtosProgram` (DESIGN.md §11).
+
+    ``params``: ``damping``, ``eps``, ``check_size``, ``work_budget``,
+    ``seed_count``.  The program declares ``empty_means_done=False`` — the
+    rotating rescan legally refills a drained queue, so only ``stop``
+    (max residue <= eps) ends the drain; this replaces the old implicit
+    "``on_empty`` is set, ignore queue size" inference.  Under the sharded
+    topology the body's rescan window is restricted to the device's owned
+    vertex block (``ctx.shard``), residue/rank merge by delta-psum, the
+    presence bit by or-delta, and the cursor — advanced by the same
+    constant on every device — stays collective-free.
+    """
+    from ..shard.partition import block_size  # lazy: shard imports runtime
+
+    damping = float(params.pop("damping", 0.85))
+    eps = float(params.pop("eps", 1e-6))
+    check_size = int(params.pop("check_size", 64))
+    work_budget = params.pop("work_budget", None)
+    seed_count = params.pop("seed_count", None)
+    reject_unknown_params("pagerank", params)
+    n = graph.num_vertices
+    max_degree = max_degree_of(graph)
+    budget = default_work_budget(graph, cfg.wavefront, work_budget,
+                                 max_degree=max_degree)
+    n_check = min(cfg.num_workers * check_size, n)
+    # the rescan blocks must match the partitioner's ownership map exactly,
+    # or rescan tasks are born off-owner and break the single-writer merges
+    blk = block_size(n, cfg.num_shards)
+    fns_cache: dict = {}
+
+    def _fns(local_graph: CSRGraph, ctx: ProgramContext):
+        if ctx.sharded:
+            # traced shard index — rebuild inside the shard_map, no caching
+            start = jnp.asarray(ctx.shard, jnp.int32) * blk
+            check_block = (start, jnp.clip(jnp.int32(n) - start, 0, blk))
+            return make_wavefront_fns(
+                local_graph, ctx.wavefront, n_check=n_check, damping=damping,
+                eps=eps, work_budget=budget, backend=ctx.backend,
+                check_block=check_block, max_degree=max_degree)
+        # body / on_empty / stop share one closure build per host context
+        key = (id(local_graph.row_ptr), ctx.wavefront, ctx.backend)
+        if key not in fns_cache:
+            fns_cache[key] = (local_graph, make_wavefront_fns(
+                local_graph, ctx.wavefront, n_check=n_check, damping=damping,
+                eps=eps, work_budget=budget, backend=ctx.backend,
+                max_degree=max_degree))
+        return fns_cache[key][1]
+
+    # stop reads only the (merged, replicated) state — build it once on the
+    # host from the global graph; bodies are rebuilt per execution context.
+    _, _, stop = _fns(graph, ProgramContext(cfg.wavefront, cfg.num_workers,
+                                            cfg.backend))
+
+    if seed_count is None:
+        cap = queue_capacity or max(8 * n, 1024)
+        seed_count = min(n, max(1, cap // 2))
+
+    return AtosProgram(
+        name="pagerank",
+        init=lambda: init_state(graph, damping, seed_count=seed_count),
+        make_body=lambda g, ctx: _fns(g, ctx)[0],
+        make_on_empty=lambda g, ctx: _fns(g, ctx)[1],
+        result=lambda s: s.rank,
+        stop=stop,
+        empty_means_done=False,
+        merge={"rank": "sum_delta", "residue": "sum_delta",
+               "in_queue": "or_delta", "check_cursor": "replicated",
+               "counter": "sum_delta"},
+        work=lambda s: s.counter.work,
+        ideal_work=n,
+        default_queue_capacity=queue_capacity or max(8 * n, 1024),
+    )
+
+
 def pagerank_async(
     graph: CSRGraph,
     cfg: SchedulerConfig,
@@ -276,42 +354,19 @@ def pagerank_async(
 ) -> Tuple[jax.Array, dict]:
     """Alg 4: queue-driven asynchronous PageRank on the Atos scheduler.
 
-    ``cfg.num_shards > 1`` distributes the drain over a device mesh
-    (repro/shard): each shard's rotating re-scan covers its owned vertex
-    block, residue deltas merge by psum every round, and ranks match the
+    Thin driver over :func:`repro.runtime.execute`.  Under the sharded
+    topology each shard's rotating re-scan covers its owned vertex block,
+    residue deltas merge by psum every round, and ranks match the
     single-device schedule within the usual ``eps * deg`` slack.
     """
-    if cfg.num_shards > 1:
-        from .. import shard as _shard  # lazy: shard imports this module
+    from ..runtime import execute  # lazy: runtime.api imports this module
 
-        program = _shard.build_program(
-            "pagerank", graph, cfg,
-            params={"damping": damping, "eps": eps, "check_size": check_size,
-                    "work_budget": work_budget},
-            queue_capacity=queue_capacity)
-        state, stats = _shard.run_sharded(
-            program, graph, cfg, queue_capacity=queue_capacity, trace=trace)
-        info = _shard_info(stats, state)
-        info["max_residue"] = float(jnp.max(state.residue))
-        return state.rank, info
-    n = graph.num_vertices
-    queue_capacity = queue_capacity or max(8 * n, 1024)
-    f, on_empty, stop = make_wavefront_fns(
-        graph, cfg.wavefront, n_check=cfg.num_workers * check_size,
-        damping=damping, eps=eps, work_budget=work_budget,
-        backend=cfg.backend,
-    )
-    state, seeds = init_state(graph, damping,
-                              seed_count=min(n, queue_capacity // 2))
-    queue = make_queue(queue_capacity, seeds)
-    _, state, stats = sched.run(f, queue, state, cfg, stop=stop,
-                                on_empty=on_empty, trace=trace)
-    info = {
-        "rounds": int(stats.rounds),
-        "work": int(state.counter.work),
-        "dropped": int(stats.dropped),
-        "max_residue": float(jnp.max(state.residue)),
-    }
+    program = make_program(graph, cfg, queue_capacity=queue_capacity,
+                           damping=damping, eps=eps, check_size=check_size,
+                           work_budget=work_budget)
+    state, _, info = execute(program, graph, cfg,
+                             queue_capacity=queue_capacity, trace=trace)
+    info["max_residue"] = float(jnp.max(state.residue))
     return state.rank, info
 
 

@@ -10,20 +10,27 @@ host->device dispatch:
     is the persistent-kernel analogue and removes the "small frontier"
     fixed cost exactly as in the paper.
   * ``discrete_run``    — a host-side Python loop around one jitted wavefront
-    step; every round pays a dispatch + a device->host sync on the stop
-    predicate (the analogue of per-kernel launch overhead + the BSP barrier).
+    step; every round pays a dispatch + a one-scalar device->host sync on the
+    continuation flag (the analogue of per-kernel launch overhead + the BSP
+    barrier).  The stop predicate is folded *into* the jitted step
+    (DESIGN.md section 11), so the host never evaluates ``stop(state)``
+    eagerly per round.
 
-Both drivers run the same *wavefront body*: pop ``num_workers x fetch_size``
-tasks, apply the application function f, push the produced tasks.  The
-application function is vectorized over the wavefront — Atos's "worker"
-granularity (warp vs CTA, i.e. per-item vs merge-path expansion) lives inside
-``f`` (see ``core/frontier.py``).
+Both drivers run the same *wavefront step*: pop ``num_workers x fetch_size``
+tasks, apply the application function f, push the produced tasks.  Since the
+runtime layer (``repro/runtime``) the step core is parameterized over a
+:class:`QueueOps` triple, so the exact same ``wavefront_step`` drives the
+single-device ``TaskQueue``, the task server's packed ``MultiQueue`` lanes,
+and the sharded per-device replicas with routed exchange — three policy
+drivers, one core.
 
 API mirror of Atos's ``launchWarp/launchCTA(ifPersist, numBlock, numThread,
 f1, f2, ...)``: here ``ifPersist`` picks the driver, ``num_workers`` plays
 numBlock, ``fetch_size`` plays FETCH_SIZE, ``f`` plays f1.  ``on_empty``
 (Atos's f2) runs when a pop returns no valid items but the stop condition has
-not fired — useful for PageRank's residual re-scan.
+not fired — useful for PageRank's residual re-scan.  Whether an empty queue
+*ends* the drain is an explicit declaration (``empty_means_done``), not an
+inference from ``on_empty``'s presence (see :func:`resolve_empty_means_done`).
 """
 from __future__ import annotations
 
@@ -45,6 +52,21 @@ class RunStats(NamedTuple):
     dropped: jax.Array         # queue overflow drops (must be 0 in tests)
 
 
+class QueueOps(NamedTuple):
+    """The three queue operations the shared wavefront step is generic over.
+
+    Each engine supplies its own triple: the single-device scheduler wraps a
+    plain :class:`~repro.core.queue.TaskQueue`, the task server wraps one
+    ``MultiQueue`` lane with (job_id, payload) packing, and the sharded
+    driver wraps a per-device replica whose push is the routed all-to-all
+    exchange.  ``queue`` below is whatever pytree the engine threads through.
+    """
+
+    pop: Callable[[Any], Tuple[jax.Array, jax.Array, Any]]  # q -> items, valid, q'
+    push: Callable[[Any, jax.Array, jax.Array], Any]        # q, items, mask -> q'
+    size: Callable[[Any], jax.Array]                        # q -> live item count
+
+
 @dataclasses.dataclass(frozen=True)
 class SchedulerConfig:
     """Atos launch configuration (see Listing 3 of the paper).
@@ -55,6 +77,15 @@ class SchedulerConfig:
     off-TPU), or ``"auto"`` (pallas iff a TPU is attached).  Results are
     bit-identical across backends, so the autotuner searches this axis
     alongside the paper's three (``server/autotune.py``).
+
+    ``topology`` is the execution-policy axis (DESIGN.md section 11):
+    ``"single"`` (one TaskQueue, the classic drain), ``"fused"`` (the drain
+    runs through a packed MultiQueue lane — the task server's engine),
+    ``"sharded"`` (per-device queue replicas over a 1-D mesh, repro/shard),
+    or ``"auto"`` (sharded iff ``num_shards > 1``, else single).  Together
+    with ``persistent`` it forms the 3x2 :class:`~repro.runtime.policy.
+    ExecutionPolicy` matrix every :class:`~repro.runtime.program.AtosProgram`
+    runs under unchanged.
 
     ``num_shards`` is the device-mesh axis (DESIGN.md section 10): with
     ``num_shards > 1`` the drain runs one queue replica per device of a 1-D
@@ -71,6 +102,7 @@ class SchedulerConfig:
     persistent: bool = True      # ifPersist — kernel strategy
     max_rounds: int = 1 << 16    # safety bound for while_loop
     backend: str = "jnp"         # kernel backend: jnp | pallas | auto
+    topology: str = "auto"       # execution topology: single|fused|sharded|auto
     num_shards: int = 1          # device-mesh axis (repro/shard)
     steal_threshold: float = 0.0  # occupancy-skew trigger; 0 = stealing off
     steal_chunk: int = 64        # max tasks donated per shard per round
@@ -80,28 +112,118 @@ class SchedulerConfig:
         return self.num_workers * self.fetch_size
 
 
-def _wavefront_step(f: WavefrontFn, on_empty, cfg: SchedulerConfig, carry):
+def taskqueue_ops(cfg: SchedulerConfig) -> QueueOps:
+    """The single-device engine's ops: one plain TaskQueue."""
+    w = cfg.wavefront
+    return QueueOps(
+        pop=lambda q: q.pop(w),
+        push=lambda q, items, mask: q.push(items, mask, backend=cfg.backend),
+        size=lambda q: q.size,
+    )
+
+
+def wavefront_step(f: WavefrontFn, on_empty, ops: QueueOps, carry,
+                   *, always_run_body: bool = False):
+    """One scheduling round, generic over the queue implementation.
+
+    ``carry = (queue, state, rounds, processed)``.  When the pop yields no
+    valid item, the body is skipped and ``on_empty`` (if any) runs instead —
+    unless ``always_run_body`` is set, in which case ``f`` runs on the
+    zero-valid wavefront (the sharded engine's mode: a rescan folded into
+    ``f`` must advance even on a drained replica, and SPMD lockstep forbids
+    data-dependent branching across devices anyway).
+    """
     queue, state, rounds, processed = carry
-    items, valid, queue = queue.pop(cfg.wavefront)
+    items, valid, queue = ops.pop(queue)
     n_valid = jnp.sum(valid.astype(jnp.int32))
 
-    def run_f(args):
-        q, s = args
-        new_items, new_mask, s2 = f(items, valid, s)
-        q2 = q.push(new_items, new_mask, backend=cfg.backend)
-        return q2, s2
+    if always_run_body:
+        out, mask, state = f(items, valid, state)
+        queue = ops.push(queue, out, mask)
+    else:
+        def run_f(args):
+            q, s = args
+            out, mask, s2 = f(items, valid, s)
+            return ops.push(q, out, mask), s2
 
-    def run_empty(args):
-        q, s = args
-        if on_empty is None:
-            return q, s
-        new_items, new_mask, s2 = on_empty(s)
-        return q.push(new_items, new_mask, backend=cfg.backend), s2
+        def run_empty(args):
+            q, s = args
+            if on_empty is None:
+                return q, s
+            out, mask, s2 = on_empty(s)
+            return ops.push(q, out, mask), s2
 
-    queue, state = jax.lax.cond(n_valid > 0, run_f, run_empty, (queue, state))
+        queue, state = jax.lax.cond(n_valid > 0, run_f, run_empty,
+                                    (queue, state))
     return queue, state, rounds + 1, processed + n_valid
 
 
+def resolve_empty_means_done(on_empty, empty_means_done: Optional[bool]) -> bool:
+    """Explicit-declaration default: historically the mere *presence* of
+    ``on_empty`` silently dropped the ``queue.size > 0`` term from the
+    continuation — a drain with ``on_empty`` but no ``stop`` ran to
+    ``max_rounds`` even after the queue emptied for good.  Programs now
+    declare the interaction (``AtosProgram.empty_means_done``); ``None``
+    preserves the legacy inference for the deprecated raw entry points.
+    """
+    return on_empty is None if empty_means_done is None else empty_means_done
+
+
+def continuation(ops: QueueOps, cfg: SchedulerConfig, stop,
+                 empty_means_done: bool):
+    """The shared while-condition: bounded rounds, optional drain/stop terms."""
+
+    def cond(carry):
+        queue, state, rounds, _ = carry
+        more = rounds < cfg.max_rounds
+        if empty_means_done:
+            more &= ops.size(queue) > 0
+        if stop is not None:
+            more &= ~stop(state)
+        return more
+
+    return cond
+
+
+# ----------------------------------------------------------------- drivers
+def persistent_drive(step, cond, carry0):
+    """Whole drain in one ``lax.while_loop`` (zero host round-trips)."""
+    return jax.lax.while_loop(cond, step, carry0)
+
+
+def discrete_drive(step, cond, ops: QueueOps, carry0, trace=None):
+    """Host loop, one jitted round per iteration (discrete kernels).
+
+    The continuation predicate — including any ``stop(state)`` — is
+    evaluated *inside* the jitted step, so each round costs exactly one
+    scalar device->host sync (the flag) instead of a full ``stop``
+    evaluation + retrace hazard on the host.  ``trace``, if given, collects
+    per-round ``(queue_size_before_pop, items_processed)`` pairs — this
+    powers the throughput-timeline benchmark (paper Figs 1-3) at the price
+    of extra host syncs, which is why it is opt-in.
+    """
+
+    @jax.jit
+    def round_step(carry):
+        carry = step(carry)
+        return carry, cond(carry)
+
+    carry = carry0
+    # cond on concrete arrays evaluates eagerly — the pre-loop check costs
+    # one tiny dispatch, never a per-round one.
+    more = bool(cond(carry0))
+    prev_processed = 0
+    while more:
+        size_before = int(ops.size(carry[0])) if trace is not None else 0
+        carry, more_dev = round_step(carry)
+        if trace is not None:
+            trace.append((size_before, int(carry[3]) - prev_processed))
+            prev_processed = int(carry[3])
+        more = bool(more_dev)  # the one per-round device->host sync
+    return carry
+
+
+# ---------------------------------------------------- TaskQueue entry points
 def persistent_run(
     f: WavefrontFn,
     queue: TaskQueue,
@@ -109,28 +231,15 @@ def persistent_run(
     cfg: SchedulerConfig,
     stop: Optional[Callable[[Any], jax.Array]] = None,
     on_empty=None,
+    empty_means_done: Optional[bool] = None,
 ):
     """Run until the queue drains (or ``stop(state)``), fully on device."""
-
-    def cond(carry):
-        q, s, rounds, _ = carry
-        more = (q.size > 0) & (rounds < cfg.max_rounds)
-        if stop is not None:
-            more &= ~stop(s)
-        if on_empty is not None:
-            # queue may be empty while the stop condition is still false
-            # (e.g. PageRank residual rescan) — keep running on_empty.
-            more = (rounds < cfg.max_rounds)
-            if stop is not None:
-                more &= ~stop(s)
-        return more
-
-    def body(carry):
-        return _wavefront_step(f, on_empty, cfg, carry)
-
-    q, s, rounds, processed = jax.lax.while_loop(
-        cond, body, (queue, state, jnp.int32(0), jnp.int32(0))
-    )
+    ops = taskqueue_ops(cfg)
+    cond = continuation(ops, cfg, stop,
+                        resolve_empty_means_done(on_empty, empty_means_done))
+    step = lambda carry: wavefront_step(f, on_empty, ops, carry)
+    q, s, rounds, processed = persistent_drive(
+        step, cond, (queue, state, jnp.int32(0), jnp.int32(0)))
     return q, s, RunStats(rounds, processed, q.dropped)
 
 
@@ -141,44 +250,48 @@ def discrete_run(
     cfg: SchedulerConfig,
     stop: Optional[Callable[[Any], jax.Array]] = None,
     on_empty=None,
+    empty_means_done: Optional[bool] = None,
     trace: Optional[list] = None,
 ):
-    """Host-driven loop: one jitted wavefront per round (discrete kernels).
+    """Host-driven loop: one jitted wavefront per round (discrete kernels)."""
+    ops = taskqueue_ops(cfg)
+    cond = continuation(ops, cfg, stop,
+                        resolve_empty_means_done(on_empty, empty_means_done))
+    step = lambda carry: wavefront_step(f, on_empty, ops, carry)
+    q, s, rounds, processed = discrete_drive(
+        step, cond, ops, (queue, state, jnp.int32(0), jnp.int32(0)),
+        trace=trace)
+    return q, s, RunStats(rounds, processed, q.dropped)
 
-    ``trace``, if given, collects per-round (queue_size, items_processed)
-    pairs on the host — this powers the throughput-timeline benchmark
-    (paper Figs 1-3) without instrumenting the persistent variant.
+
+def run(f, queue, state, cfg: SchedulerConfig, stop=None, on_empty=None,
+        empty_means_done: Optional[bool] = None, trace=None):
+    """Dispatch on ``cfg.persistent`` — the Atos ``ifPersist`` switch.
+
+    Deprecated front door: new code should express the drain as an
+    :class:`~repro.runtime.program.AtosProgram` and call
+    :func:`repro.runtime.execute`, which also serves the fused and sharded
+    topologies.  This shim remains for raw-``WavefrontFn`` callers.
     """
-    step = jax.jit(partial_step(f, on_empty, cfg))
-    rounds = 0
-    processed = jnp.int32(0)
-    carry = (queue, state, jnp.int32(0), jnp.int32(0))
-    while rounds < cfg.max_rounds:
-        q = carry[0]
-        size = int(q.size)  # device->host sync: the discrete-kernel fixed cost
-        s = carry[1]
-        if stop is not None and bool(stop(s)):
-            break
-        if size == 0 and on_empty is None:
-            break
-        carry = step(carry)
-        rounds += 1
-        if trace is not None:
-            trace.append((size, int(carry[3]) - int(processed)))
-        processed = carry[3]
-    q, s, _, processed = carry
-    return q, s, RunStats(jnp.int32(rounds), processed, q.dropped)
+    if cfg.persistent:
+        return persistent_run(f, queue, state, cfg, stop=stop,
+                              on_empty=on_empty,
+                              empty_means_done=empty_means_done)
+    return discrete_run(f, queue, state, cfg, stop=stop, on_empty=on_empty,
+                        empty_means_done=empty_means_done, trace=trace)
+
+
+# ------------------------------------------------------- deprecated aliases
+def _wavefront_step(f: WavefrontFn, on_empty, cfg: SchedulerConfig, carry):
+    """Deprecated: pre-runtime-layer signature (one PR grace period)."""
+    return wavefront_step(f, on_empty, taskqueue_ops(cfg), carry)
 
 
 def partial_step(f, on_empty, cfg):
+    """Deprecated: pre-runtime-layer step builder (one PR grace period)."""
+    ops = taskqueue_ops(cfg)
+
     def step(carry):
-        return _wavefront_step(f, on_empty, cfg, carry)
+        return wavefront_step(f, on_empty, ops, carry)
 
     return step
-
-
-def run(f, queue, state, cfg: SchedulerConfig, stop=None, on_empty=None, trace=None):
-    """Dispatch on ``cfg.persistent`` — the Atos ``ifPersist`` switch."""
-    if cfg.persistent:
-        return persistent_run(f, queue, state, cfg, stop=stop, on_empty=on_empty)
-    return discrete_run(f, queue, state, cfg, stop=stop, on_empty=on_empty, trace=trace)

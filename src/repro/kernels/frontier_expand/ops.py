@@ -5,9 +5,9 @@ Call paths (wired by the backend layer, ``core/backend.py``):
   * ``core/frontier.expand_merge_path(..., backend="pallas"|"auto")``
     dispatches here — which makes this kernel the hot path of the
     merge-path strategy in ``algorithms/bfs.py`` and
-    ``algorithms/pagerank.py``, of every server job built from them
-    (``server/jobs._kernel_bundle``), and of any autotuner candidate with
-    ``SchedulerConfig(backend="pallas")``.
+    ``algorithms/pagerank.py``, of every server job built from their
+    runtime program factories (``server/jobs.JobRegistry.build``), and of
+    any autotuner candidate with ``SchedulerConfig(backend="pallas")``.
   * ``benchmarks/bench_kernels.py`` times it against the jnp reference and
     emits the comparison to ``BENCH_kernels.json``.
 

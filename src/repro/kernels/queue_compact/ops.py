@@ -4,7 +4,7 @@ Call paths (wired by the backend layer, ``core/backend.py``):
 
   * ``core/queue.TaskQueue.push(..., backend="pallas"|"auto")`` uses
     :func:`compact` as its slot-reservation engine — which makes this kernel
-    the push hot path of the scheduler (``core/scheduler._wavefront_step``),
+    the push hot path of the scheduler (``core/scheduler.wavefront_step``),
     of every ``MultiQueue`` lane the task server drives
     (``server/engine.TaskServer``), and of any autotuner candidate with
     ``SchedulerConfig(backend="pallas")``.  All three case-study algorithms

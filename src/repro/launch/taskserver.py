@@ -19,6 +19,7 @@ import logging
 
 from ..core.scheduler import SchedulerConfig
 from ..graph.generators import grid2d, rmat
+from ..runtime.policy import POLICY_GRID, parse_policy
 from ..server import (Autotuner, JobRegistry, JobSpec, TaskServer,
                       serve_sequential)
 
@@ -90,6 +91,13 @@ def main() -> None:
                              "longest_queue_first"])
     ap.add_argument("--workers", type=int, default=64)
     ap.add_argument("--fetch", type=int, default=1)
+    ap.add_argument("--exec-policy", default="auto",
+                    choices=["auto"] + [str(p) for p in POLICY_GRID],
+                    help="execution policy for the single-tenant drains "
+                         "(topology.kernel, DESIGN.md section 11): e.g. "
+                         "fused.discrete drains through a packed MultiQueue "
+                         "lane with a host loop; auto keeps the config "
+                         "defaults (single topology, persistent kernel)")
     ap.add_argument("--backend", default="auto",
                     choices=["jnp", "pallas", "auto"],
                     help="kernel backend: jnp reference, Pallas TPU kernels "
@@ -126,9 +134,14 @@ def main() -> None:
     specs = mixed_specs(args.jobs, registry, args.eps, args.seed,
                         shards=args.shards)
 
+    if args.exec_policy == "auto":
+        topology, persistent = "auto", True
+    else:
+        policy = parse_policy(args.exec_policy)
+        topology, persistent = policy.topology, policy.persistent
     config = None if args.autotune else SchedulerConfig(
         num_workers=args.workers, fetch_size=args.fetch,
-        backend=args.backend)
+        backend=args.backend, topology=topology, persistent=persistent)
     autotuner = (Autotuner(cache_path=args.autotune_cache)
                  if args.autotune else None)
 

@@ -1,0 +1,42 @@
+"""The Atos runtime layer: programs x execution policies (DESIGN.md §11).
+
+Applications declare *what* a task does once — an :class:`AtosProgram`
+(wavefront body, stop condition, rescan hook, replica-merge spec) — and an
+:class:`ExecutionPolicy` decides *how* it is scheduled: topology
+(``single | fused | sharded``) crossed with kernel strategy
+(``persistent | discrete``).  :func:`execute` is the front door.
+
+``execute`` / ``build_program`` are imported lazily: the algorithm modules
+import :mod:`repro.runtime.program` for the protocol types, and an eager
+import here would cycle back through them.
+"""
+from .policy import (ExecutionPolicy, KERNELS, POLICY_GRID, TOPOLOGIES,
+                     config_for, parse_policy, policy_of)
+from .program import (AtosProgram, MERGE_RULES, ProgramContext, build_merge,
+                      delta_psum, identity_task_vertex)
+
+__all__ = [
+    "ExecutionPolicy", "KERNELS", "POLICY_GRID", "TOPOLOGIES",
+    "config_for", "parse_policy", "policy_of",
+    "AtosProgram", "MERGE_RULES", "ProgramContext", "build_merge",
+    "delta_psum", "identity_task_vertex",
+    "ExecutionResult", "execute", "fused_lane_ops",
+    "algorithms", "build_program",
+]
+
+_LAZY = {
+    "ExecutionResult": "api",
+    "execute": "api",
+    "fused_lane_ops": "api",
+    "algorithms": "programs",
+    "build_program": "programs",
+}
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        import importlib
+
+        module = importlib.import_module(f".{_LAZY[name]}", __name__)
+        return getattr(module, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,152 @@
+"""``execute`` — one front door for every (program, policy) combination.
+
+The three drain engines (single-device scheduler, fused MultiQueue lane,
+sharded device mesh) share the :func:`~repro.core.scheduler.wavefront_step`
+core and differ only in their :class:`~repro.core.scheduler.QueueOps` and
+host-vs-device loop; this module is the dispatch that picks the driver from
+the config's resolved :class:`~repro.runtime.policy.ExecutionPolicy` and
+normalizes the outcome to ``(state, RunStats, info)`` so callers (algorithm
+drivers, the autotuner, benchmarks, tests) never branch on topology.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax.numpy as jnp
+
+from ..core.queue import make_multiqueue, make_queue
+from ..core.scheduler import (QueueOps, RunStats, SchedulerConfig,
+                              continuation, discrete_drive, persistent_drive,
+                              taskqueue_ops, wavefront_step)
+from .policy import ExecutionPolicy, policy_of
+from .program import AtosProgram, ProgramContext
+
+
+class ExecutionResult(NamedTuple):
+    state: Any
+    stats: RunStats
+    info: dict
+
+
+def _context(cfg: SchedulerConfig) -> ProgramContext:
+    return ProgramContext(wavefront=cfg.wavefront,
+                          num_workers=cfg.num_workers,
+                          backend=cfg.backend)
+
+
+def fused_lane_ops(wavefront: int, backend: str, lane_id, job_id,
+                   quota=None, aux: Optional[dict] = None) -> QueueOps:
+    """QueueOps over one packed MultiQueue lane — the task server's engine.
+
+    Tasks on the wire are ``(job_id, zigzag(payload))`` int32s; the pop
+    unpacks naturals for the body, the push re-packs.  ``lane_id``,
+    ``job_id`` and ``quota`` may be traced scalars, so one compiled step
+    serves every tenant sharing a kernel bundle (DESIGN.md section 8).
+    ``aux``, if given, receives the per-pop routing-mismatch count
+    (``aux["mismatch"]``) — the multi-tenant engine's wire-integrity meter.
+    """
+    from ..server.encoding import (pack, unpack_job,
+                                   unpack_natural)  # lazy: server->core
+
+    def pop(mq):
+        packed, valid, mq2 = mq.pop_lane(lane_id, wavefront, quota)
+        natural = jnp.where(valid, unpack_natural(packed), 0)
+        if aux is not None:
+            aux["mismatch"] = jnp.sum(
+                (valid & (unpack_job(packed) != job_id)).astype(jnp.int32))
+        return natural, valid, mq2
+
+    def push(mq, items, mask):
+        return mq.push(lane_id, pack(job_id, items), mask, backend=backend)
+
+    return QueueOps(pop=pop, push=push, size=lambda mq: mq.size)
+
+
+def _run_shared_core(program: AtosProgram, graph, cfg: SchedulerConfig,
+                     policy: ExecutionPolicy, queue_capacity: Optional[int],
+                     trace: Optional[list]):
+    """single / fused topologies: same step core, different QueueOps."""
+    state, seeds = program.init()
+    seeds = jnp.asarray(seeds, jnp.int32)
+    capacity = queue_capacity or program.default_queue_capacity
+    ctx = _context(cfg)
+    f = program.body(graph, ctx)
+    on_empty = program.on_empty(graph, ctx)
+
+    if policy.topology == "single":
+        queue = make_queue(capacity, seeds)
+        ops = taskqueue_ops(cfg)
+        dropped_of = lambda q: q.dropped
+    else:  # fused: the degenerate one-lane, one-tenant server drain
+        from ..server.encoding import check_job_fits, pack
+        if graph is not None:
+            check_job_fits(0, graph.num_vertices)
+        queue = make_multiqueue(capacity, 1).push(
+            0, pack(0, seeds), jnp.ones(seeds.shape, bool))
+        ops = fused_lane_ops(cfg.wavefront, cfg.backend, lane_id=0, job_id=0)
+        dropped_of = lambda mq: jnp.sum(mq.lanes.dropped)
+
+    cond = continuation(ops, cfg, program.stop, program.empty_means_done)
+    step = lambda carry: wavefront_step(f, on_empty, ops, carry)
+    carry0 = (queue, state, jnp.int32(0), jnp.int32(0))
+    if policy.persistent:
+        queue, state, rounds, processed = persistent_drive(step, cond, carry0)
+    else:
+        queue, state, rounds, processed = discrete_drive(step, cond, ops,
+                                                         carry0, trace=trace)
+    stats = RunStats(rounds, processed, dropped_of(queue))
+    info = {
+        "rounds": int(stats.rounds),
+        "work": program.work_of(state),
+        "dropped": int(stats.dropped),
+    }
+    return ExecutionResult(state, stats, info)
+
+
+def _run_sharded(program: AtosProgram, graph, cfg: SchedulerConfig,
+                 queue_capacity, trace, route_width, mesh):
+    from .. import shard as _shard  # lazy: shard imports this package
+
+    state, sstats = _shard.run_sharded(
+        program, graph, cfg, queue_capacity=queue_capacity,
+        route_width=route_width, mesh=mesh, trace=trace)
+    stats = RunStats(jnp.int32(sstats.rounds),
+                     jnp.int32(sstats.items_processed),
+                     jnp.int32(sstats.dropped + sstats.route_dropped))
+    info = {
+        "rounds": sstats.rounds,
+        "work": program.work_of(state),
+        "dropped": sstats.dropped + sstats.route_dropped,
+        "shards": len(sstats.per_device_items),
+        "exchanged": sstats.exchanged,
+        "donated": sstats.donated,
+        "steal_rounds": sstats.steal_rounds,
+        "mis_routed": sstats.mis_routed,
+        "occupancy_balance": sstats.occupancy_balance,
+    }
+    return ExecutionResult(state, stats, info)
+
+
+def execute(
+    program: AtosProgram,
+    graph,
+    cfg: SchedulerConfig,
+    *,
+    queue_capacity: Optional[int] = None,
+    trace: Optional[list] = None,
+    route_width: Optional[int] = None,
+    mesh=None,
+) -> ExecutionResult:
+    """Drain ``program`` under the config's resolved execution policy.
+
+    Returns ``(final_state, RunStats, info)``; ``info`` carries the
+    per-topology telemetry (exchange/steal meters for sharded runs).
+    ``trace`` is honored by the discrete kernel strategy only: per-round
+    ``(size, items)`` tuples (single/fused) or telemetry dicts (sharded).
+    """
+    policy = policy_of(cfg)
+    if policy.topology == "sharded":
+        return _run_sharded(program, graph, cfg, queue_capacity, trace,
+                            route_width, mesh)
+    return _run_shared_core(program, graph, cfg, policy, queue_capacity,
+                            trace)

@@ -1,0 +1,93 @@
+"""The execution-policy axis: (topology) x (kernel strategy).
+
+Atos exposes orthogonal scheduling controls — kernel strategy
+(persistent/discrete), worker granularity, load-balancing mode — and the
+runtime layer adds the deployment topology on top:
+
+    topology:  single  | fused  | sharded
+    kernel:    persistent | discrete
+
+``single``  — one TaskQueue, one device: the classic Atos drain.
+``fused``   — the drain runs through a packed (job_id, payload) MultiQueue
+              lane, i.e. the task server's engine; a single-tenant fused run
+              is the degenerate one-lane case, and the multi-tenant server
+              interleaves many programs through the same step.
+``sharded`` — per-device queue replicas over a 1-D ``("shard",)`` mesh with
+              routed exchange and optional stealing (repro/shard).
+
+``persistent`` wraps the drain in one ``lax.while_loop`` (zero host
+round-trips); ``discrete`` dispatches one jitted round per host-loop
+iteration.  Every :class:`~repro.runtime.program.AtosProgram` runs under all
+six combinations unchanged — that 3x2 matrix is what the parity tests
+(tests/test_runtime.py) pin down.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+TOPOLOGIES: Tuple[str, ...] = ("single", "fused", "sharded")
+KERNELS: Tuple[str, ...] = ("persistent", "discrete")
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionPolicy:
+    """One cell of the (topology x kernel) matrix."""
+
+    topology: str = "single"
+    kernel: str = "persistent"
+
+    def __post_init__(self):
+        if self.topology not in TOPOLOGIES:
+            raise ValueError(f"unknown topology {self.topology!r}; "
+                             f"expected one of {TOPOLOGIES}")
+        if self.kernel not in KERNELS:
+            raise ValueError(f"unknown kernel strategy {self.kernel!r}; "
+                             f"expected one of {KERNELS}")
+
+    @property
+    def persistent(self) -> bool:
+        return self.kernel == "persistent"
+
+    def __str__(self) -> str:
+        return f"{self.topology}.{self.kernel}"
+
+
+#: every policy combination, row-major over (topology, kernel)
+POLICY_GRID: Tuple[ExecutionPolicy, ...] = tuple(
+    ExecutionPolicy(t, k) for t in TOPOLOGIES for k in KERNELS
+)
+
+
+def parse_policy(text: str) -> ExecutionPolicy:
+    """Parse ``"fused.discrete"``-style policy names (CLI / cache keys)."""
+    parts = text.split(".")
+    if len(parts) != 2:
+        raise ValueError(
+            f"bad policy {text!r}; expected '<topology>.<kernel>' like "
+            f"'single.persistent'")
+    return ExecutionPolicy(parts[0], parts[1])
+
+
+def policy_of(cfg) -> ExecutionPolicy:
+    """Resolve a :class:`~repro.core.scheduler.SchedulerConfig`'s policy.
+
+    ``topology="auto"`` resolves to ``sharded`` iff ``num_shards > 1``; an
+    explicit non-sharded topology with ``num_shards > 1`` is a
+    contradiction and raises rather than silently dropping the mesh.
+    """
+    topology = cfg.topology
+    if topology == "auto":
+        topology = "sharded" if cfg.num_shards > 1 else "single"
+    elif topology != "sharded" and cfg.num_shards > 1:
+        raise ValueError(
+            f"topology={topology!r} is incompatible with "
+            f"num_shards={cfg.num_shards}; use topology='sharded' (or 'auto')")
+    return ExecutionPolicy(topology,
+                           "persistent" if cfg.persistent else "discrete")
+
+
+def config_for(cfg, policy: ExecutionPolicy):
+    """A config whose resolved policy is ``policy`` (other axes unchanged)."""
+    return dataclasses.replace(cfg, topology=policy.topology,
+                               persistent=policy.persistent)

@@ -5,9 +5,9 @@ kernels when frontiers are small (launch fixed cost dominates), discrete
 when rounds are few and fat; more workers / larger FETCH_SIZE for
 heavy-tailed frontiers, narrow wavefronts for meshes.  Instead of shipping
 those guidelines as prose, the autotuner *measures* a small candidate grid
-over ``SchedulerConfig = (persistent, num_workers, fetch_size, backend)`` on
-a calibration workload and caches the winner per ``(algorithm, graph_class)``
-(DESIGN.md section 8).
+over ``SchedulerConfig = (persistent, num_workers, fetch_size, backend,
+topology)`` on a calibration workload and caches the winner per
+``(algorithm, graph_class)`` (DESIGN.md section 8).
 
 The fourth axis, ``backend`` (DESIGN.md section 9), selects the kernel
 implementation — jnp reference vs the Pallas TPU kernels
@@ -16,6 +16,14 @@ are bit-identical across backends, so the tuner may pick freely on wall time
 alone: on TPU the Pallas candidates compile to Mosaic and typically win; on
 CPU they run in interpret mode and lose honestly.  The chosen backend is
 persisted in the JSON cache like every other axis.
+
+The fifth axis, ``topology`` (DESIGN.md section 11), is the execution-
+policy dimension of the runtime layer: the same AtosProgram drains through
+a plain TaskQueue (``single``) or a packed MultiQueue lane (``fused``) with
+bit-identical results, so — like the backend — the tuner may pick freely on
+wall time.  ``sharded`` is excluded from the default grid (it needs a
+device mesh and competes on capacity, not calibration wall time) but tuned
+caches that record it parse fine.
 
 Graph class is the paper's two-regime split: ``scale_free`` (heavy-tailed
 degrees, low diameter) vs ``mesh`` (bounded degree, high diameter), decided
@@ -42,6 +50,7 @@ import jax.numpy as jnp
 
 from ..core.scheduler import SchedulerConfig
 from ..graph.csr import CSRGraph
+from ..runtime.policy import policy_of
 
 log = logging.getLogger("repro.server.autotune")
 
@@ -61,10 +70,20 @@ _BASE_GRID: Tuple[SchedulerConfig, ...] = (
 #: alias one of them and waste calibration runs).
 BACKEND_GRID: Tuple[str, ...] = ("jnp", "pallas")
 
-#: full candidate grid: every launch shape crossed with every backend.  The
-#: jnp block comes first so ``DEFAULT_CANDIDATES[0] == SchedulerConfig()``.
+#: the searched execution topologies (DESIGN.md section 11).  ``sharded``
+#: is deliberately absent: it needs a device mesh the calibration host may
+#: not have, and its win condition is capacity, not wall time.
+TOPOLOGY_GRID: Tuple[str, ...] = ("single", "fused")
+
+#: full candidate grid: every launch shape crossed with every backend and
+#: every topology.  The single-topology jnp block keeps ``topology="auto"``
+#: (which resolves to ``single`` off-mesh) and comes first so
+#: ``DEFAULT_CANDIDATES[0] == SchedulerConfig()``.
 DEFAULT_CANDIDATES: Tuple[SchedulerConfig, ...] = tuple(
-    dataclasses.replace(c, backend=b) for b in BACKEND_GRID
+    dataclasses.replace(c, backend=b,
+                        topology="auto" if t == "single" else t)
+    for t in TOPOLOGY_GRID
+    for b in BACKEND_GRID
     for c in _BASE_GRID
 )
 
@@ -79,22 +98,37 @@ def graph_class(graph: CSRGraph) -> str:
 
 def _config_key(cfg: SchedulerConfig) -> str:
     kind = "persistent" if cfg.persistent else "discrete"
-    return (f"{kind}|workers={cfg.num_workers}|fetch={cfg.fetch_size}"
-            f"|backend={cfg.backend}")
+    key = (f"{kind}|workers={cfg.num_workers}|fetch={cfg.fetch_size}"
+           f"|backend={cfg.backend}")
+    topology = policy_of(cfg).topology
+    # the default single topology is omitted so pre-topology cache keys
+    # stay valid and their trials comparable with new single candidates.
+    if topology != "single":
+        key += f"|topology={topology}"
+    return key
 
 
 def _config_dict(cfg: SchedulerConfig) -> dict:
     return {"num_workers": cfg.num_workers, "fetch_size": cfg.fetch_size,
-            "persistent": cfg.persistent, "backend": cfg.backend}
+            "persistent": cfg.persistent, "backend": cfg.backend,
+            "topology": policy_of(cfg).topology}
+
+
+def _load_topology(stored: Optional[str]) -> str:
+    # "single" and "auto" resolve identically off-mesh; normalize loads to
+    # "auto" so reloaded configs compare equal to the default candidates.
+    return "auto" if stored in (None, "single") else str(stored)
 
 
 def _config_from_dict(d: dict) -> SchedulerConfig:
-    # cache entries written before the backend axis existed lack the field;
-    # they were measured on the jnp reference.
+    # cache entries written before the backend / topology axes existed lack
+    # those fields; they were measured on the jnp reference's single
+    # topology.
     return SchedulerConfig(num_workers=int(d["num_workers"]),
                            fetch_size=int(d["fetch_size"]),
                            persistent=bool(d["persistent"]),
-                           backend=str(d.get("backend", "jnp")))
+                           backend=str(d.get("backend", "jnp")),
+                           topology=_load_topology(d.get("topology")))
 
 
 def _default_runner(algorithm: str, graph: CSRGraph,
@@ -254,12 +288,14 @@ class Autotuner:
 
 
 def _parse_config_key(key: str) -> SchedulerConfig:
-    # pre-backend caches wrote 3-field keys; those runs used the jnp path.
+    # pre-backend caches wrote 3-field keys, pre-topology caches 4-field
+    # ones; those runs used the jnp path's single topology.
     kind, workers, fetch, *rest = key.split("|")
-    backend = rest[0].split("=")[1] if rest else "jnp"
+    extras = dict(part.split("=", 1) for part in rest)
     return SchedulerConfig(
         num_workers=int(workers.split("=")[1]),
         fetch_size=int(fetch.split("=")[1]),
         persistent=(kind == "persistent"),
-        backend=backend,
+        backend=extras.get("backend", "jnp"),
+        topology=_load_topology(extras.get("topology")),
     )

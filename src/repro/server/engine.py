@@ -38,8 +38,9 @@ import numpy as np
 
 from ..core.counters import JobTelemetry
 from ..core.queue import MultiQueue, make_multiqueue
-from ..core.scheduler import SchedulerConfig
-from .encoding import MAX_JOBS, pack, unpack_job, unpack_natural
+from ..core.scheduler import SchedulerConfig, wavefront_step
+from ..runtime.api import fused_lane_ops
+from .encoding import MAX_JOBS, pack
 from .jobs import JobRegistry, JobSpec, Program
 from .policies import FairnessPolicy, make_policy
 
@@ -171,11 +172,16 @@ class TaskServer:
     def _step_for(self, f, stop, W: int, backend: str):
         """One compiled scheduler step per distinct wavefront body.
 
-        ``quota`` and ``job_id`` are traced scalars, so every tenant sharing
-        a kernel bundle shares this executable.  Telemetry (items popped,
-        routing mismatches) accumulates in a device-side ``counters`` array
-        and the convergence predicate is evaluated in-step, so the host loop
-        syncs one boolean per stop-ful job per round and nothing else.
+        The pop->body->push spine is the shared
+        :func:`~repro.core.scheduler.wavefront_step` core (DESIGN.md
+        section 11), driven through fused-lane QueueOps: pop unpacks
+        ``(job_id, payload)`` tasks from one MultiQueue lane (metering
+        routing mismatches on the way), push re-packs.  ``quota`` and
+        ``job_id`` are traced scalars, so every tenant sharing a kernel
+        bundle shares this executable.  Telemetry (items popped, routing
+        mismatches) accumulates in a device-side ``counters`` array and the
+        convergence predicate is evaluated in-step, so the host loop syncs
+        one boolean per stop-ful job per round and nothing else.
 
         Steps are cached on the registry (whose kernel bundles own the
         closures), so a fused server and the sequential baseline over the
@@ -191,15 +197,15 @@ class TaskServer:
             def step(mq, lane_id, state, counters, quota, job_id):
                 # lane extraction/writeback is traced: one dispatch per
                 # scheduler step instead of a shower of eager slice ops.
-                packed, valid, mq = mq.pop_lane(lane_id, W, quota)
-                natural = jnp.where(valid, unpack_natural(packed), 0)
-                mismatch = jnp.sum(
-                    (valid & (unpack_job(packed) != job_id)).astype(jnp.int32))
-                out, mask, state = f(natural, valid, state)
-                mq = mq.push(lane_id, pack(job_id, out), mask,
-                             backend=backend)
-                n_valid = jnp.sum(valid.astype(jnp.int32))
-                counters = counters + jnp.stack([n_valid, mismatch])
+                aux = {}
+                ops = fused_lane_ops(W, backend, lane_id, job_id,
+                                     quota=quota, aux=aux)
+                # always_run_body: a granted lane advances even on a
+                # zero-valid pop (PageRank's in-body rescan must tick).
+                mq, state, _, n_valid = wavefront_step(
+                    f, None, ops, (mq, state, jnp.int32(0), jnp.int32(0)),
+                    always_run_body=True)
+                counters = counters + jnp.stack([n_valid, aux["mismatch"]])
                 stopped = (jnp.bool_(False) if stop is None
                            else stop(state))
                 return mq, state, counters, stopped
@@ -286,13 +292,15 @@ class TaskServer:
         round level (DESIGN.md section 10).
         """
         from .. import shard as _shard
+        from ..runtime import build_program
 
         spec = job.spec
         graph = self.registry.graph(spec.graph)
-        scfg = dataclasses.replace(cfg, num_shards=spec.shards)
-        program = _shard.build_program(spec.algorithm, graph, scfg,
-                                       params=dict(spec.params),
-                                       queue_capacity=self._lane_capacity)
+        scfg = dataclasses.replace(cfg, num_shards=spec.shards,
+                                   topology="sharded")
+        program = build_program(spec.algorithm, graph, scfg,
+                                params=dict(spec.params),
+                                queue_capacity=self._lane_capacity)
         log.info("sharded job %d (%s on %s) over %d shards",
                  job.job_id, spec.algorithm, spec.graph, spec.shards)
         state, sstats = _shard.run_sharded(
@@ -360,10 +368,14 @@ class TaskServer:
 
             # -- completion: convergence predicate wins (its flag was
             # computed inside last round's step); otherwise a drained lane
-            # means the job is finished.
+            # finishes the job iff the program declares empty-means-done
+            # (an empty_means_done=False program without a stop keeps
+            # running its on_empty refills until max_rounds — the same
+            # contract as the other engines, DESIGN.md section 11).
             for lane, job in list(lane_owner.items()):
                 done = (job.stopped if job.program.stop is not None
-                        else sizes[lane] == 0)
+                        else (sizes[lane] == 0
+                              and job.program.empty_means_done))
                 if done:
                     mq = self._finalize(job, mq, rounds)
                     del lane_owner[lane]

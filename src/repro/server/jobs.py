@@ -11,9 +11,13 @@ callables the scheduler drives:
     stop(s)               -> optional convergence predicate
     result(s)             -> the job's answer (dist / rank / colors)
 
-Programs are exactly the reusable wavefront components the algorithms
-export (``bfs.make_wavefront_fn`` etc.) — the server adds no algorithmic
-logic of its own, it only routes, packs, and meters (DESIGN.md section 8).
+Since the runtime layer (DESIGN.md section 11) the registry adds no
+algorithmic knowledge of its own: it compiles the spec through the single
+per-algorithm :class:`~repro.runtime.program.AtosProgram` definition
+(``repro.runtime.build_program``) and materializes the bundle by building
+the program's body for the server's fused execution context.  The old
+per-algorithm ``_kernel_bundle`` parameter parsing is gone — adding an
+algorithm to the registry is now one line in ``repro/runtime/programs.py``.
 
 Kernel backends (DESIGN.md section 9): ``build(..., backend=...)`` threads
 the server's kernel-backend axis into each bundle, so under
@@ -29,13 +33,11 @@ import dataclasses
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 
-from ..algorithms import bfs as _bfs
-from ..algorithms import coloring as _coloring
-from ..algorithms import pagerank as _pagerank
-from ..algorithms.common import default_work_budget
+from ..core.scheduler import SchedulerConfig
 from ..graph.csr import CSRGraph
+from ..runtime.program import ProgramContext
+from ..runtime.programs import build_program as _build_runtime_program
 from .encoding import check_job_fits
 
 ALGORITHMS = ("bfs", "pagerank", "coloring")
@@ -74,7 +76,7 @@ class Program:
 
     algorithm: str
     graph_name: str
-    graph: CSRGraph
+    graph: Optional[CSRGraph]
     init: Callable[[], Tuple[Any, jax.Array]]
     wavefront_fn: Callable
     result: Callable[[Any], jax.Array]
@@ -82,70 +84,15 @@ class Program:
     ideal_work: int
     on_empty: Optional[Callable] = None
     stop: Optional[Callable] = None
+    #: mirrors AtosProgram.empty_means_done: when False (and stop is None)
+    #: a drained lane does NOT finish the job — the engine keeps serving
+    #: its on_empty refills until stop/max_rounds (DESIGN.md section 11).
+    empty_means_done: bool = True
 
 
 # init-only params: they shape a job's initial state but NOT its wavefront
 # kernel, so jobs differing only in these share one compiled kernel bundle.
 _INIT_ONLY = {"bfs": ("source",), "pagerank": (), "coloring": ()}
-
-
-def _kernel_bundle(spec: JobSpec, graph: CSRGraph, wavefront: int,
-                   num_workers: int, backend: str) -> Dict[str, Any]:
-    """Build the cacheable (init-independent) callables for one spec.
-
-    ``backend`` picks the kernel implementations inside the bundle (jnp
-    reference vs Pallas); results are bit-identical across backends.
-    """
-    n = graph.num_vertices
-    p = {k: v for k, v in spec.params.items()
-         if k not in _INIT_ONLY[spec.algorithm]}
-    if spec.algorithm == "bfs":
-        strategy = p.pop("strategy", "merge_path")
-        max_degree = int(jnp.max(graph.degrees()))
-        work_budget = default_work_budget(
-            graph, wavefront, p.pop("work_budget", None),
-            max_degree=max_degree)
-        _reject_unknown(p)
-        f = _bfs.make_wavefront_fn(graph, strategy, work_budget, max_degree,
-                                   backend=backend)
-        return dict(f=f, on_empty=None, stop=None,
-                    result=lambda s: s.dist, ideal=n)
-    if spec.algorithm == "pagerank":
-        damping = float(p.pop("damping", 0.85))
-        eps = float(p.pop("eps", 1e-6))
-        check_size = int(p.pop("check_size", 64))
-        work_budget = p.pop("work_budget", None)
-        _reject_unknown(p)
-        f, on_empty, stop = _pagerank.make_wavefront_fns(
-            graph, wavefront, n_check=num_workers * check_size,
-            damping=damping, eps=eps, work_budget=work_budget,
-            backend=backend,
-        )
-        return dict(f=f, on_empty=on_empty, stop=stop,
-                    result=lambda s: s.rank, ideal=n)
-    # coloring
-    _reject_unknown(p)
-    f = _coloring.make_wavefront_fn(graph)
-    return dict(f=f, on_empty=None, stop=None,
-                result=lambda s: s.colors, ideal=n)
-
-
-def _make_init(spec: JobSpec, graph: CSRGraph, lane_capacity: int):
-    """Per-job initial (state, seed tasks) — never cached."""
-    if spec.algorithm == "bfs":
-        source = int(spec.params.get("source", 0))
-        return lambda: (_bfs.init_state(graph, source),
-                        jnp.array([source], jnp.int32))
-    if spec.algorithm == "pagerank":
-        damping = float(spec.params.get("damping", 0.85))
-        seed_count = min(graph.num_vertices, max(1, lane_capacity // 2))
-        return lambda: _pagerank.init_state(graph, damping, seed_count)
-    return lambda: _coloring.init_state(graph)
-
-
-def _reject_unknown(params: Dict[str, Any]) -> None:
-    if params:
-        raise ValueError(f"unknown job params: {sorted(params)}")
 
 
 class JobRegistry:
@@ -188,20 +135,47 @@ class JobRegistry:
               backend: str = "jnp") -> Program:
         graph = self.graph(spec.graph)
         check_job_fits(job_id, graph.num_vertices)
+        if num_workers <= 0 or wavefront % num_workers:
+            # the reconstructed config must reproduce the engine's wavefront
+            # exactly — a silent floor-division here would size the kernel
+            # budgets for a narrower wavefront than the engine pops.
+            raise ValueError(
+                f"wavefront {wavefront} is not num_workers "
+                f"({num_workers}) x fetch_size")
+        cfg = SchedulerConfig(num_workers=num_workers,
+                              fetch_size=wavefront // num_workers,
+                              backend=backend)
         kernel_params = tuple(sorted(
             (k, v) for k, v in spec.params.items()
             if k not in _INIT_ONLY[spec.algorithm]))
         key = (spec.algorithm, spec.graph, kernel_params,
                wavefront, num_workers, backend)
         if key not in self._kernels:
-            self._kernels[key] = _kernel_bundle(
-                spec, graph, wavefront, num_workers, backend)
+            # one AtosProgram per kernel key; its body, built for the fused
+            # execution context, is the shared (init-independent) kernel.
+            prog = _build_runtime_program(
+                spec.algorithm, graph, cfg, params=dict(kernel_params),
+                queue_capacity=lane_capacity)
+            ctx = ProgramContext(wavefront=wavefront,
+                                 num_workers=num_workers, backend=backend)
+            self._kernels[key] = dict(
+                f=prog.body(graph, ctx),
+                on_empty=prog.on_empty(graph, ctx),
+                stop=prog.stop, result=prog.result,
+                ideal=prog.ideal_work,
+                empty_means_done=prog.empty_means_done)
         k = self._kernels[key]
+        # a full-params program supplies the per-job init (never cached) —
+        # and validates init-only params like the BFS source at build time.
+        job_prog = _build_runtime_program(
+            spec.algorithm, graph, cfg, params=dict(spec.params),
+            queue_capacity=lane_capacity)
         return Program(
             algorithm=spec.algorithm, graph_name=spec.graph, graph=graph,
-            init=_make_init(spec, graph, lane_capacity),
+            init=job_prog.init,
             wavefront_fn=k["f"], on_empty=k["on_empty"], stop=k["stop"],
             result=k["result"],
             work=lambda s: s.counter.work,
             ideal_work=k["ideal"],
+            empty_means_done=k["empty_means_done"],
         )

@@ -7,6 +7,10 @@ tasks are routed to their owner with an all-to-all every round, occupancy
 skew triggers ring work stealing, and a psum'd stop predicate keeps the
 mesh in lockstep until the global drain ends.  Fully testable on CPU via
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+
+Since the runtime layer (DESIGN.md section 11) the driver consumes the
+unified :class:`~repro.runtime.program.AtosProgram`; ``ShardProgram`` and
+``build_program`` here are deprecation shims over it.
 """
 from .driver import (ShardCounters, ShardRunStats, discrete_run_sharded,
                      persistent_run_sharded, run_sharded)

@@ -40,15 +40,23 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
 from ..core.queue import EMPTY, MultiQueue, TaskQueue
-from ..core.scheduler import SchedulerConfig
+from ..core.scheduler import QueueOps, SchedulerConfig, wavefront_step
 from ..graph.csr import CSRGraph
 from ..launch.mesh import make_shard_mesh
+from ..runtime.program import AtosProgram, ProgramContext, build_merge
 from .exchange import LANE_LOCAL, NUM_LANES, pop_wavefront, route_tasks
 from .partition import ShardedCSR, owner_of, partition_graph, split_seeds
-from .programs import ShardProgram
 from .steal import rebalance
 
 AXIS = "shard"
+
+
+def _shard_context(cfg: SchedulerConfig, shard) -> ProgramContext:
+    """Context for building the body inside the shard_map trace."""
+    return ProgramContext(wavefront=cfg.wavefront,
+                          num_workers=cfg.num_workers, backend=cfg.backend,
+                          shard=shard, num_shards=cfg.num_shards,
+                          axis_name=AXIS)
 
 
 class ShardCounters(NamedTuple):
@@ -138,12 +146,22 @@ def _stacked_view(tree):
     return jax.tree.map(lambda x: x[None], tree)
 
 
-def _make_round(program: ShardProgram, cfg: SchedulerConfig, n: int,
+def _make_round(program: AtosProgram, cfg: SchedulerConfig, n: int,
                 route_width: Optional[int]):
-    """The shared round body: steal -> pop -> f -> exchange -> merge."""
+    """The shared round body: steal -> pop -> f -> exchange -> merge.
+
+    The pop->body->push spine is the same :func:`~repro.core.scheduler.
+    wavefront_step` the other engines drive; the sharded QueueOps wrap it
+    with the 2-lane replica pop (stolen first, with the ownership meter)
+    and the routed all-to-all push, accumulating their telemetry in a
+    trace-local ``aux`` dict.  ``always_run_body`` is set: a rescan folded
+    into ``f`` must advance even on a drained replica, and SPMD lockstep
+    forbids data-dependent branching across devices.
+    """
     s = cfg.num_shards
     w = cfg.wavefront
     steal_on = cfg.steal_threshold > 0
+    merge = build_merge(program.merge)
 
     def round_step(f, mq: MultiQueue, state, c: ShardCounters):
         me = jax.lax.axis_index(AXIS)
@@ -155,37 +173,49 @@ def _make_round(program: ShardProgram, cfg: SchedulerConfig, n: int,
                 threshold=cfg.steal_threshold, chunk=cfg.steal_chunk,
                 backend=cfg.backend)
 
-        items, valid, n_stolen, mq = pop_wavefront(mq, w)
+        aux = {}
 
-        # ownership meter: lanes [0, n_stolen) came off the stolen lane and
-        # may belong to the ring predecessor; everything else must be ours.
-        verts = program.task_vertex(jnp.where(valid, items, 0))
-        verts = jnp.where(valid, verts, 0)
-        owners = owner_of(verts, n, s)
-        expected = jnp.where(jnp.arange(w, dtype=jnp.int32) < n_stolen,
-                             (me - 1) % s, me)
-        mis = jnp.sum((valid & (owners != expected)).astype(jnp.int32))
+        def pop(mq):
+            items, valid, n_stolen, mq2 = pop_wavefront(mq, w)
+            # ownership meter: lanes [0, n_stolen) came off the stolen lane
+            # and may belong to the ring predecessor; the rest must be ours.
+            verts = program.task_vertex(jnp.where(valid, items, 0))
+            verts = jnp.where(valid, verts, 0)
+            owners = owner_of(verts, n, s)
+            expected = jnp.where(jnp.arange(w, dtype=jnp.int32) < n_stolen,
+                                 (me - 1) % s, me)
+            aux["mis"] = jnp.sum((valid & (owners != expected))
+                                 .astype(jnp.int32))
+            aux["stolen"] = n_stolen
+            return items, valid, mq2
 
-        out, mask, new_state = f(items, valid, state)
-        mq, n_sent, n_rdrop = route_tasks(
-            mq, out, mask, axis_name=AXIS, num_shards=s, num_vertices=n,
-            task_vertex=program.task_vertex, route_width=route_width,
-            backend=cfg.backend)
+        def push(mq, out, mask):
+            mq2, n_sent, n_rdrop = route_tasks(
+                mq, out, mask, axis_name=AXIS, num_shards=s, num_vertices=n,
+                task_vertex=program.task_vertex, route_width=route_width,
+                backend=cfg.backend)
+            aux["sent"] = n_sent
+            aux["rdrop"] = n_rdrop
+            return mq2
+
+        ops = QueueOps(pop=pop, push=push, size=lambda mq: mq.size)
+        mq, new_state, _, n_valid = wavefront_step(
+            f, None, ops, (mq, state, jnp.int32(0), jnp.int32(0)),
+            always_run_body=True)
         # round-synchronous replica reconciliation: after this every device
         # holds the identical merged state, so next round's pops read
         # globally fresh values (the TREES-style epoch barrier).
-        state = program.merge(state, new_state, AXIS)
+        state = merge(state, new_state, AXIS)
 
-        n_valid = jnp.sum(valid.astype(jnp.int32))
         c = ShardCounters(
             rounds=c.rounds + 1,
             items=c.items + n_valid,
-            sent=c.sent + n_sent,
-            route_dropped=c.route_dropped + n_rdrop,
+            sent=c.sent + aux["sent"],
+            route_dropped=c.route_dropped + aux["rdrop"],
             donated=c.donated + donated,
-            stolen_run=c.stolen_run + n_stolen,
+            stolen_run=c.stolen_run + aux["stolen"],
             steal_rounds=c.steal_rounds + triggered.astype(jnp.int32),
-            mis_routed=c.mis_routed + mis,
+            mis_routed=c.mis_routed + aux["mis"],
         )
         return mq, state, c
 
@@ -195,14 +225,16 @@ def _make_round(program: ShardProgram, cfg: SchedulerConfig, n: int,
         The psum is the no-early-exit guarantee — a drained device sees its
         neighbours' backlog and keeps taking rounds (serving the exchange
         and merge collectives, and potentially receiving routed or stolen
-        work) until the whole mesh is done.
+        work) until the whole mesh is done.  ``empty_means_done=False``
+        programs (PageRank's rescan) drop the queue-mass term, exactly as
+        in the shared :func:`~repro.core.scheduler.continuation`.
         """
         in_bounds = c.rounds < cfg.max_rounds
-        if program.rescans:
-            more = in_bounds
-        else:
+        if program.empty_means_done:
             global_size = jax.lax.psum(mq.size, AXIS)
             more = in_bounds & (global_size > 0)
+        else:
+            more = in_bounds
         if program.stop is not None:
             more &= ~program.stop(state)
         return more
@@ -224,7 +256,7 @@ def persistent_run_sharded(program, parts: ShardedCSR, mq0, state0,
     def drain(row_ptr, col_idx, mq_st, state):
         local_graph = CSRGraph(row_ptr=row_ptr[0], col_idx=col_idx[0])
         me = jax.lax.axis_index(AXIS)
-        f = program.build(local_graph, me, AXIS)
+        f = program.body(local_graph, _shard_context(cfg, me))
         round_step, keep_going = round_builder
 
         mq = _local_view(mq_st)
@@ -267,7 +299,7 @@ def discrete_run_sharded(program, parts: ShardedCSR, mq0, state0,
     def one_round(row_ptr, col_idx, mq_st, state, c_st):
         local_graph = CSRGraph(row_ptr=row_ptr[0], col_idx=col_idx[0])
         me = jax.lax.axis_index(AXIS)
-        f = program.build(local_graph, me, AXIS)
+        f = program.body(local_graph, _shard_context(cfg, me))
         round_step, keep_going = round_builder
         mq = _local_view(mq_st)
         c = _local_view(c_st)
@@ -292,7 +324,7 @@ def discrete_run_sharded(program, parts: ShardedCSR, mq0, state0,
     prev_sent = prev_donated = 0
     # pre-round emptiness check mirrors discrete_run's host-synced predicate
     while rounds < cfg.max_rounds:
-        if not program.rescans:
+        if program.empty_means_done:
             sizes = np.asarray(_queue_sizes(mq_st))
             if sizes.sum() == 0:
                 break
@@ -324,7 +356,7 @@ def _queue_sizes(mq_st) -> jax.Array:
 
 # --------------------------------------------------------------- front door
 def run_sharded(
-    program: ShardProgram,
+    program: AtosProgram,
     graph: CSRGraph,
     cfg: SchedulerConfig,
     *,

@@ -1,201 +1,40 @@
-"""Per-algorithm adapters for the sharded driver.
+"""Deprecation shims: sharded program construction moved to the runtime layer.
 
-A :class:`ShardProgram` packages what the sharded drain needs beyond the
-plain wavefront body:
+Before the runtime layer (DESIGN.md section 11) this module carried a
+hand-written ``ShardProgram`` adapter per algorithm — its own copy of each
+wavefront-body builder, replica merge, and stop predicate.  Those adapters
+are absorbed into the single per-algorithm :class:`~repro.runtime.program.
+AtosProgram` definitions (``algorithms/*.make_program``): the per-field
+merge lattices (``pmin`` for BFS dist, delta-psum for single-writer /
+additive PageRank + coloring state, or-delta for presence bits) are now
+declarative ``merge`` specs compiled by :func:`repro.runtime.program.
+build_merge`, and ``rescans`` became the explicit ``empty_means_done``
+declaration.
 
-  * ``build(local_graph, shard, axis_name)`` — construct the wavefront body
-    *inside* the shard_map trace, closed over the device-local CSR slice
-    (budgets and degree bounds are precomputed from the global graph so
-    every device traces the identical computation);
-  * ``merge(prev, new, axis_name)`` — reconcile the per-device state
-    replicas at the end of every round.  Each algorithm's state is a
-    conflict-free merge under round-synchronous exchange:
+Kept for one PR:
 
-      - BFS ``dist`` is a min-lattice: ``pmin`` of the replicas is exactly
-        the union of all relaxations (order-free, idempotent).
-      - PageRank / coloring fields are **single-writer per round** (tasks
-        for a vertex exist once, rescans cover disjoint owned blocks), so
-        ``prev + psum(new - prev)`` reassembles the global round exactly;
-        residue scatter-adds are additive and sum across devices.
-
-    ``WorkCounter`` merges by delta-psum too, so ``state.counter.work`` is
-    the *global* processed count on every replica after each round.
-  * ``task_vertex`` — task int -> vertex id, which is what ownership (and
-    therefore routing and stealing) is defined on.
-
-``rescans=True`` (PageRank) tells the driver the queue may legally run dry
-before convergence: the body's rotating re-scan refills it, so only the
-``stop`` predicate ends the drain — the sharded analogue of the scheduler's
-``on_empty`` path (the re-scan is already folded into ``f``; a device with
-an empty replica simply runs a zero-valid wavefront whose scan side still
-advances).
+  * :func:`build_program` — same signature, now returns an ``AtosProgram``
+    (which exposes the old ``ShardProgram`` attribute surface via
+    deprecated aliases: ``algorithm``, ``rescans``).
+  * ``ShardProgram`` — alias of ``AtosProgram``.
+  * ``delta_psum`` — canonical home is :mod:`repro.runtime.program`.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
-import jax
-import jax.numpy as jnp
-
-from ..algorithms import bfs as _bfs
-from ..algorithms import coloring as _coloring
-from ..algorithms import pagerank as _pagerank
-from ..algorithms.common import default_work_budget
-from ..core.counters import WorkCounter
 from ..core.scheduler import SchedulerConfig
 from ..graph.csr import CSRGraph
-from .partition import block_size
+from ..runtime.program import AtosProgram, delta_psum  # noqa: F401 (re-export)
+from ..runtime.programs import build_program as _build_runtime_program
 
-
-def delta_psum(prev: jax.Array, new: jax.Array, axis_name: str) -> jax.Array:
-    """Exact cross-device merge for single-writer / additive round updates."""
-    return prev + jax.lax.psum(new - prev, axis_name)
-
-
-def _merge_bool(prev: jax.Array, new: jax.Array, axis_name: str) -> jax.Array:
-    d = delta_psum(prev.astype(jnp.int32), new.astype(jnp.int32), axis_name)
-    return d > 0
-
-
-def _merge_counter(prev: WorkCounter, new: WorkCounter,
-                   axis_name: str) -> WorkCounter:
-    return WorkCounter(work=delta_psum(prev.work, new.work, axis_name))
-
-
-@dataclasses.dataclass(frozen=True)
-class ShardProgram:
-    """Everything the sharded driver needs to drain one algorithm."""
-
-    algorithm: str
-    init: Callable[[], Tuple[Any, jax.Array]]
-    build: Callable[..., Callable]           # (local_graph, shard, axis) -> f
-    merge: Callable[[Any, Any, str], Any]
-    task_vertex: Callable[[jax.Array], jax.Array]
-    result: Callable[[Any], jax.Array]
-    work: Callable[[Any], jax.Array]
-    ideal_work: int
-    stop: Optional[Callable[[Any], jax.Array]] = None
-    rescans: bool = False                    # queue may run dry pre-stop
-
-
-def _identity_vertex(items: jax.Array) -> jax.Array:
-    return items
+#: Deprecated alias — the unified program type serves every engine.
+ShardProgram = AtosProgram
 
 
 def build_program(algorithm: str, graph: CSRGraph, cfg: SchedulerConfig,
                   params: Optional[Dict[str, Any]] = None,
-                  queue_capacity: int | None = None) -> ShardProgram:
-    """Compile (algorithm, graph, config) into a :class:`ShardProgram`.
-
-    ``params`` mirrors the single-tenant drivers' keyword arguments (BFS
-    ``source``/``strategy``, PageRank ``damping``/``eps``/``check_size``,
-    ...).  All static budgets come from the *global* graph so the traced
-    body is structurally identical on every device.
-    """
-    p = dict(params or {})
-    n = graph.num_vertices
-    w = cfg.wavefront
-    max_degree = int(jnp.max(graph.degrees()))
-
-    if algorithm == "bfs":
-        source = int(p.pop("source", 0))
-        strategy = p.pop("strategy", "merge_path")
-        work_budget = default_work_budget(graph, w, p.pop("work_budget", None),
-                                          max_degree=max_degree)
-        _reject_unknown(algorithm, p)
-
-        def build(local_graph, shard, axis_name):
-            return _bfs.make_wavefront_fn(local_graph, strategy, work_budget,
-                                          max_degree, backend=cfg.backend)
-
-        def merge(prev, new, axis_name):
-            return _bfs.BFSState(
-                dist=jax.lax.pmin(new.dist, axis_name),
-                counter=_merge_counter(prev.counter, new.counter, axis_name))
-
-        return ShardProgram(
-            algorithm="bfs",
-            init=lambda: (_bfs.init_state(graph, source),
-                          jnp.array([source], jnp.int32)),
-            build=build, merge=merge, task_vertex=_identity_vertex,
-            result=lambda s: s.dist, work=lambda s: s.counter.work,
-            ideal_work=n)
-
-    if algorithm == "pagerank":
-        damping = float(p.pop("damping", 0.85))
-        eps = float(p.pop("eps", 1e-6))
-        check_size = int(p.pop("check_size", 64))
-        work_budget = default_work_budget(graph, w, p.pop("work_budget", None),
-                                          max_degree=max_degree)
-        seed_count = p.pop("seed_count", None)
-        _reject_unknown(algorithm, p)
-        n_check = min(cfg.num_workers * check_size, n)
-        blk = block_size(n, cfg.num_shards)
-        # stop reads only the (merged, replicated) state — build it once on
-        # the host from the global graph; the bodies are rebuilt per device.
-        _, _, stop = _pagerank.make_wavefront_fns(
-            graph, w, n_check=n_check, damping=damping, eps=eps,
-            work_budget=work_budget, backend=cfg.backend)
-
-        def build(local_graph, shard, axis_name):
-            start = shard * blk
-            length = jnp.clip(jnp.int32(n) - start, 0, blk)
-            f, _, _ = _pagerank.make_wavefront_fns(
-                local_graph, w, n_check=n_check, damping=damping, eps=eps,
-                work_budget=work_budget, backend=cfg.backend,
-                check_block=(start, length), max_degree=max_degree)
-            return f
-
-        def merge(prev, new, axis_name):
-            return _pagerank.PRState(
-                rank=delta_psum(prev.rank, new.rank, axis_name),
-                residue=delta_psum(prev.residue, new.residue, axis_name),
-                in_queue=_merge_bool(prev.in_queue, new.in_queue, axis_name),
-                # every device advances its cursor by n_check every round:
-                # already identical, no collective needed.
-                check_cursor=new.check_cursor,
-                counter=_merge_counter(prev.counter, new.counter, axis_name))
-
-        if seed_count is None:
-            cap = queue_capacity or max(8 * n, 1024)
-            seed_count = min(n, max(1, cap // 2))
-
-        return ShardProgram(
-            algorithm="pagerank",
-            init=lambda: _pagerank.init_state(graph, damping,
-                                              seed_count=seed_count),
-            build=build, merge=merge, task_vertex=_identity_vertex,
-            result=lambda s: s.rank, work=lambda s: s.counter.work,
-            ideal_work=n, stop=stop, rescans=True)
-
-    if algorithm == "coloring":
-        _reject_unknown(algorithm, p)
-
-        def build(local_graph, shard, axis_name):
-            # unfused: detects read epoch-start colors, so detection does
-            # not depend on which device a same-epoch neighbor assign ran on
-            return _coloring.make_wavefront_fn(local_graph, fused=False,
-                                               max_degree=max_degree)
-
-        def merge(prev, new, axis_name):
-            return _coloring.ColorState(
-                colors=delta_psum(prev.colors, new.colors, axis_name),
-                counter=_merge_counter(prev.counter, new.counter, axis_name))
-
-        return ShardProgram(
-            algorithm="coloring",
-            init=lambda: _coloring.init_state(graph),
-            build=build, merge=merge,
-            task_vertex=lambda t: jnp.abs(jnp.asarray(t, jnp.int32)) - 1,
-            result=lambda s: s.colors, work=lambda s: s.counter.work,
-            ideal_work=n)
-
-    raise ValueError(f"unknown algorithm {algorithm!r}; "
-                     f"expected one of ('bfs', 'pagerank', 'coloring')")
-
-
-def _reject_unknown(algorithm: str, params: Dict[str, Any]) -> None:
-    if params:
-        raise ValueError(
-            f"unknown sharded {algorithm} params: {sorted(params)}")
+                  queue_capacity: int | None = None) -> AtosProgram:
+    """Deprecated: use :func:`repro.runtime.build_program`."""
+    return _build_runtime_program(algorithm, graph, cfg, params=params,
+                                  queue_capacity=queue_capacity)

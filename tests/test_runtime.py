@@ -1,0 +1,313 @@
+"""The runtime layer: AtosProgram x ExecutionPolicy (DESIGN.md section 11).
+
+Acceptance bars:
+
+  * one program definition per algorithm drains under every cell of the
+    (single | fused | sharded) x (persistent | discrete) policy matrix with
+    bit-identical BFS/coloring results and eps-slack PageRank;
+  * a program whose ``stop`` never fires terminates at ``max_rounds`` with
+    identical RunStats under all six policies;
+  * the discrete driver folds ``stop`` into the jitted step (no host
+    evaluation per round);
+  * the empty-queue/``on_empty`` interaction is an explicit declaration
+    (``empty_means_done``), not an inference.
+
+Sharded policies run on a single-device mesh here — the full 8-device
+parity suite lives in tests/test_shard.py.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.algorithms.bfs import bfs_bsp, bfs_speculative
+from repro.algorithms.coloring import coloring_async, validate_coloring
+from repro.algorithms.pagerank import pagerank_async, pagerank_reference
+from repro.core import SchedulerConfig, discrete_run, make_queue, persistent_run
+from repro.graph.generators import grid2d, rmat
+from repro.runtime import (AtosProgram, ExecutionPolicy, POLICY_GRID,
+                           build_program, config_for, execute, parse_policy,
+                           policy_of)
+
+
+@pytest.fixture(scope="module")
+def g_rmat():
+    return rmat(6, edge_factor=8, seed=2)
+
+
+@pytest.fixture(scope="module")
+def g_grid():
+    return grid2d(8, 8, seed=0)
+
+
+# ---------------------------------------------------------------- policies
+def test_policy_grid_is_complete_and_parses():
+    assert len(POLICY_GRID) == 6
+    assert len(set(POLICY_GRID)) == 6
+    for p in POLICY_GRID:
+        assert parse_policy(str(p)) == p
+    with pytest.raises(ValueError, match="topology"):
+        ExecutionPolicy("multi", "persistent")
+    with pytest.raises(ValueError, match="kernel"):
+        ExecutionPolicy("single", "eager")
+    with pytest.raises(ValueError, match="policy"):
+        parse_policy("persistent")
+
+
+def test_policy_resolution_from_config():
+    assert str(policy_of(SchedulerConfig())) == "single.persistent"
+    assert str(policy_of(SchedulerConfig(persistent=False,
+                                         topology="fused"))) \
+        == "fused.discrete"
+    assert policy_of(SchedulerConfig(num_shards=4)).topology == "sharded"
+    # an explicit non-sharded topology must not silently drop the mesh
+    with pytest.raises(ValueError, match="num_shards"):
+        policy_of(SchedulerConfig(topology="single", num_shards=4))
+
+
+def test_merge_spec_must_be_total(g_grid):
+    """A field-spec that omits a state field would silently keep ``prev``
+    for it after every sharded round — reject at merge time instead."""
+    from repro.algorithms.bfs import init_state
+    from repro.runtime import build_merge
+
+    state = init_state(g_grid, 0)
+    with pytest.raises(ValueError, match="missing rules.*counter"):
+        build_merge({"dist": "pmin"})(state, state, "shard")
+    with pytest.raises(ValueError, match="unknown state fields"):
+        build_merge({"dist": "pmin", "counter": "sum_delta",
+                     "bogus": "pmin"})(state, state, "shard")
+
+
+def test_build_program_rejects_unknowns(g_grid):
+    with pytest.raises(ValueError, match="unknown algorithm"):
+        build_program("dijkstra", g_grid, SchedulerConfig())
+    with pytest.raises(ValueError, match="unknown bfs params"):
+        build_program("bfs", g_grid, SchedulerConfig(),
+                      params={"bogus": 1})
+
+
+# ----------------------------------------------- parity: one program, 6 ways
+def _cfg(policy, **kw):
+    return config_for(SchedulerConfig(**kw), policy)
+
+
+def test_bfs_bit_identical_under_all_six_policies(g_rmat):
+    ref = np.asarray(bfs_bsp(g_rmat, 0)[0])
+    for policy in POLICY_GRID:
+        dist, info = bfs_speculative(g_rmat, 0,
+                                     _cfg(policy, num_workers=16))
+        assert (np.asarray(dist) == ref).all(), str(policy)
+        assert info["dropped"] == 0, str(policy)
+        assert info["work"] > 0, str(policy)
+
+
+def test_coloring_valid_under_all_six_policies(g_rmat):
+    # full-width wavefront: rounds stay homogeneous (all-assign or
+    # all-detect), so the fused and unfused (sharded) bodies see the same
+    # reads and every policy produces the identical coloring.
+    W = 2 * g_rmat.num_vertices
+    results = {}
+    for policy in POLICY_GRID:
+        colors, info = coloring_async(g_rmat, _cfg(policy, num_workers=W))
+        assert validate_coloring(g_rmat, colors), str(policy)
+        results[str(policy)] = np.asarray(colors)
+    base = results["single.persistent"]
+    for name, colors in results.items():
+        assert (colors == base).all(), name
+
+
+def test_pagerank_within_eps_under_all_six_policies(g_rmat):
+    eps = 1e-5
+    ref = np.asarray(pagerank_reference(g_rmat, iters=300))
+    ranks = {}
+    for policy in POLICY_GRID:
+        rank, info = pagerank_async(g_rmat, _cfg(policy, num_workers=16),
+                                    eps=eps)
+        assert np.abs(np.asarray(rank) - ref).max() < 1e-3, str(policy)
+        assert info["max_residue"] <= eps, str(policy)
+        ranks[str(policy)] = np.asarray(rank)
+    # the single and fused topologies drive the identical schedule (same
+    # pop/push order through one lane), so their ranks agree bitwise.
+    for kernel in ("persistent", "discrete"):
+        assert (ranks[f"single.{kernel}"] == ranks[f"fused.{kernel}"]).all()
+
+
+def test_sharded_info_carries_exchange_telemetry(g_grid):
+    program = build_program("bfs", g_grid, SchedulerConfig(num_workers=16))
+    _, stats, info = execute(program, g_grid,
+                             _cfg(ExecutionPolicy("sharded", "persistent"),
+                                  num_workers=16))
+    for key in ("exchanged", "donated", "mis_routed", "occupancy_balance",
+                "shards"):
+        assert key in info
+    assert info["mis_routed"] == 0
+    assert int(stats.rounds) == info["rounds"]
+
+
+# -------------------------------------- satellite: max_rounds safety bound
+def _forever_program(n_tasks=8, capacity=256):
+    """A program whose stop never fires: every popped task is re-pushed."""
+
+    def make_body(graph, ctx):
+        def f(items, valid, state):
+            return items, valid, state + jnp.sum(valid.astype(jnp.int32))
+
+        return f
+
+    return AtosProgram(
+        name="forever",
+        init=lambda: (jnp.int32(0), jnp.arange(n_tasks, dtype=jnp.int32)),
+        make_body=make_body,
+        result=lambda s: s,
+        merge="sum_delta",
+        default_queue_capacity=capacity,
+    )
+
+
+def test_max_rounds_identical_runstats_under_all_six_policies(g_grid):
+    """A runaway drain must terminate at exactly ``max_rounds`` with the
+    same RunStats no matter which policy drives it."""
+    program = _forever_program()
+    observed = {}
+    for policy in POLICY_GRID:
+        cfg = _cfg(policy, num_workers=4, fetch_size=1, max_rounds=9)
+        state, stats, info = execute(program, g_grid, cfg)
+        observed[str(policy)] = (int(stats.rounds),
+                                 int(stats.items_processed),
+                                 int(stats.dropped))
+        # the state saw exactly the processed items (merge-exactness too)
+        assert int(state) == int(stats.items_processed), str(policy)
+    assert len(set(observed.values())) == 1, observed
+    rounds, items, dropped = next(iter(observed.values()))
+    assert rounds == 9
+    assert items == 9 * 4  # every round popped a full wavefront
+    assert dropped == 0
+
+
+# ------------------------------- satellite: stop folded into the jitted step
+def test_discrete_stop_is_traced_not_evaluated_per_round():
+    """The discrete driver must not call ``stop(state)`` on the host every
+    round (a device->host sync + retrace hazard): it is traced into the
+    jitted step, so the Python callable runs only during the pre-loop check
+    and tracing."""
+    calls = {"n": 0}
+
+    def stop(state):
+        calls["n"] += 1
+        return state >= jnp.int32(1 << 30)  # never fires
+
+    def f(items, valid, state):
+        return items, valid, state + jnp.sum(valid.astype(jnp.int32))
+
+    cfg = SchedulerConfig(num_workers=2, fetch_size=1, persistent=False,
+                          max_rounds=50)
+    _, _, stats = discrete_run(f, make_queue(64, jnp.arange(4)),
+                               jnp.int32(0), cfg, stop=stop)
+    assert int(stats.rounds) == 50
+    # pre-loop eager check + one trace (+ possibly one retrace) — never 50
+    assert calls["n"] <= 3, calls["n"]
+
+
+def test_discrete_equals_persistent_with_stop():
+    def f(items, valid, state):
+        new = items - 1
+        return new, valid & (new > 0), state + jnp.sum(
+            valid.astype(jnp.int32))
+
+    stop = lambda s: s >= 7
+    cfg_p = SchedulerConfig(num_workers=2, fetch_size=1, max_rounds=100)
+    cfg_d = SchedulerConfig(num_workers=2, fetch_size=1, max_rounds=100,
+                            persistent=False)
+    seeds = jnp.array([5, 3, 6, 2])
+    _, s1, st1 = persistent_run(f, make_queue(64, seeds), jnp.int32(0),
+                                cfg_p, stop=stop)
+    _, s2, st2 = discrete_run(f, make_queue(64, seeds), jnp.int32(0),
+                              cfg_d, stop=stop)
+    assert int(s1) == int(s2)
+    assert int(st1.rounds) == int(st2.rounds)
+
+
+# --------------------------- satellite: empty queue vs on_empty, explicitly
+def _consume(items, valid, state):
+    """Body that consumes tasks without producing any."""
+    return items, jnp.zeros_like(valid), state + jnp.sum(
+        valid.astype(jnp.int32))
+
+
+def _refill_once(state):
+    # an on_empty that never actually produces work
+    return jnp.zeros((1,), jnp.int32), jnp.zeros((1,), bool), state + 1000
+
+
+@pytest.mark.parametrize("runner", [persistent_run, discrete_run])
+def test_empty_means_done_true_ends_drain_despite_on_empty(runner):
+    """Regression (DESIGN.md §11): with ``on_empty`` set, the old
+    continuation silently dropped the queue-size term, so a drain with no
+    ``stop`` ran to max_rounds after the queue emptied for good.  A program
+    declaring ``empty_means_done=True`` must end when the queue drains —
+    ``on_empty`` never fires."""
+    cfg = SchedulerConfig(num_workers=2, fetch_size=1, max_rounds=100)
+    _, state, stats = runner(_consume, make_queue(64, jnp.arange(4)),
+                             jnp.int32(0), cfg, on_empty=_refill_once,
+                             empty_means_done=True)
+    assert int(stats.rounds) == 2          # 4 seeds / wavefront 2
+    assert int(state) == 4                 # on_empty's +1000 never ran
+
+
+@pytest.mark.parametrize("runner", [persistent_run, discrete_run])
+def test_empty_means_done_default_keeps_legacy_inference(runner):
+    """``empty_means_done=None`` preserves the old behavior: the presence
+    of ``on_empty`` keeps the drain alive past queue exhaustion (bounded by
+    stop/max_rounds) — PageRank's rescan contract."""
+    cfg = SchedulerConfig(num_workers=2, fetch_size=1, max_rounds=10)
+    _, state, stats = runner(_consume, make_queue(64, jnp.arange(4)),
+                             jnp.int32(0), cfg, on_empty=_refill_once)
+    assert int(stats.rounds) == 10         # ran to max_rounds
+    assert int(state) == 4 + 8 * 1000      # on_empty ticked every dry round
+
+
+def test_fused_server_honors_empty_means_done():
+    """The multi-tenant engine obeys the same declaration as the other two
+    engines: a drained lane finishes the job only when the program says an
+    empty queue means done; ``empty_means_done=False`` keeps its
+    ``on_empty`` refills running until stop/max_rounds."""
+    from repro.server import JobRegistry, Program, TaskServer
+
+    def make_prog(emd):
+        def f(items, valid, state):
+            return items, jnp.zeros_like(valid), state + jnp.sum(
+                valid.astype(jnp.int32))
+
+        def on_empty(state):
+            return (jnp.zeros((1,), jnp.int32), jnp.zeros((1,), bool),
+                    state + 1000)
+
+        return Program(
+            algorithm="drain", graph_name="synthetic", graph=None,
+            init=lambda: (jnp.int32(0), jnp.array([1], jnp.int32)),
+            wavefront_fn=f, on_empty=on_empty,
+            result=lambda s: np.asarray([int(s)]),
+            work=lambda s: s, ideal_work=1, empty_means_done=emd)
+
+    server = TaskServer(JobRegistry(), num_lanes=1,
+                        config=SchedulerConfig(num_workers=2),
+                        lane_capacity=16)
+    server.submit_program(make_prog(True))
+    out = server.run()
+    assert out.results[0][0] == 1          # finished at drain; no refill ran
+
+    server = TaskServer(JobRegistry(), num_lanes=1,
+                        config=SchedulerConfig(num_workers=2),
+                        lane_capacity=16, max_rounds=5)
+    server.submit_program(make_prog(False))
+    with pytest.raises(RuntimeError, match="max_rounds"):
+        server.run()                       # refills ran; nothing ended it
+
+
+def test_programs_declare_empty_semantics(g_grid):
+    cfg = SchedulerConfig(num_workers=8)
+    assert build_program("bfs", g_grid, cfg).empty_means_done is True
+    assert build_program("coloring", g_grid, cfg).empty_means_done is True
+    pr = build_program("pagerank", g_grid, cfg)
+    assert pr.empty_means_done is False    # the rescan refills the queue
+    assert pr.stop is not None             # ...so convergence must bound it
