@@ -49,6 +49,7 @@ def _child() -> None:
     from repro.core import SchedulerConfig
     from repro.graph.generators import grid2d, rmat
     from repro import shard as SH
+    from repro.runtime import build_program
 
     graphs = {
         "rmat": rmat(SCALE, edge_factor=8, seed=1),
@@ -61,7 +62,7 @@ def _child() -> None:
         for s in SHARD_COUNTS:
             cfg = SchedulerConfig(num_workers=SHARD_WORKERS, fetch_size=1,
                                   num_shards=s, persistent=False)
-            program = SH.build_program("bfs", g, cfg, params={"source": 0})
+            program = build_program("bfs", g, cfg, params={"source": 0})
             trace: list = []
             t0 = time.perf_counter()
             state, stats = SH.run_sharded(program, g, cfg, trace=trace)
@@ -90,7 +91,7 @@ def _child() -> None:
         }
         entry["steal"] = {}
         for label, cfg in steal_cfgs.items():
-            program = SH.build_program("bfs", g, cfg, params={"source": 0})
+            program = build_program("bfs", g, cfg, params={"source": 0})
             state, stats = SH.run_sharded(program, g, cfg)
             assert (np.asarray(state.dist) == ref).all(), (name, label)
             entry["steal"][label] = {

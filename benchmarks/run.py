@@ -2,6 +2,7 @@
 
 ``PYTHONPATH=src python -m benchmarks.run [section ...]``
 Sections: table1 table4 figs serving server kernels roofline shard
+granularity
 (default: all).  Prints ``name,us_per_call,derived`` CSV.
 
 ``--smoke`` instead recomputes the schedule-deterministic counters (round
@@ -25,8 +26,9 @@ def main() -> None:
 
         sys.exit(1 if smoke.run() else 0)
 
-    from . import (bench_figs, bench_kernels, bench_roofline, bench_server,
-                   bench_serving, bench_shard, bench_table1, bench_table4)
+    from . import (bench_figs, bench_granularity, bench_kernels,
+                   bench_roofline, bench_server, bench_serving, bench_shard,
+                   bench_table1, bench_table4)
 
     sections = {
         "table1": bench_table1.run,
@@ -37,6 +39,7 @@ def main() -> None:
         "kernels": bench_kernels.run,
         "roofline": bench_roofline.run,
         "shard": bench_shard.run,
+        "granularity": bench_granularity.run,
     }
     want = argv or list(sections)
     print("name,us_per_call,derived")

@@ -1,19 +1,21 @@
-"""Bench smoke: recompute deterministic round counts, diff vs checked-in JSON.
+"""Bench smoke: recompute deterministic counters, diff vs checked-in JSON.
 
 ``PYTHONPATH=src python -m benchmarks.run --smoke``
 
-The sharded benchmark's round counts are pure functions of the schedule —
-graph, seeds, launch shape, shard count — with zero timing noise, so any
-change to the drain engines that shifts them is a real behavioral
-regression, not jitter.  This re-runs the exact configurations
-``bench_shard`` records in ``BENCH_shard.json`` (BFS over the R-MAT and
-grid graphs, every shard count, steal on/off) and fails loudly when a
-recomputed round count, exchange total, or donation count disagrees with
-the checked-in value.  CI runs it on every push (``bench-smoke`` job); the
-full benchmark suite refreshes the JSONs deliberately, this guard keeps
-them honest in between.
+The sharded and granularity benchmarks' counters are pure functions of the
+schedule — graph, seeds, launch shape, shard count, chunk width — with
+zero timing noise, so any change to the drain engines that shifts them is
+a real behavioral regression, not jitter.  This re-runs the exact
+configurations ``bench_shard`` records in ``BENCH_shard.json`` (BFS over
+the R-MAT and grid graphs, every shard count, steal on/off) and
+``bench_granularity`` records in ``BENCH_granularity.json`` (PageRank
+ample/tight-budget rounds + formation splits and sharded per-g exchange
+volume, every chunk width) and fails loudly when any recomputed counter
+disagrees with the checked-in value.  CI runs it on every push
+(``bench-smoke`` job); the full benchmark suite refreshes the JSONs
+deliberately, this guard keeps them honest in between.
 
-Like ``bench_shard``, the measurement runs in a subprocess that forces 8
+Like the benchmarks, the measurement runs in a subprocess that forces 8
 host devices before jax initializes, so the smoke works under plain CPU CI.
 """
 from __future__ import annotations
@@ -26,11 +28,18 @@ from pathlib import Path
 
 REPO = Path(__file__).resolve().parent.parent
 SHARD_JSON = REPO / "BENCH_shard.json"
+GRANULARITY_JSON = REPO / "BENCH_granularity.json"
 
 #: fields of each per-shard-count entry that are schedule-deterministic
 #: (wall_seconds, balances etc. are measurements, not invariants)
 _SHARD_FIELDS = ("rounds", "exchanged_total", "per_device_items")
 _STEAL_FIELDS = ("rounds", "donated", "stolen_executed")
+#: schedule-deterministic fields of each granularity cell's workloads
+_GRAN_FIELDS = {
+    "pagerank_ample": ("rounds", "work", "splits"),
+    "pagerank_tight": ("rounds", "work", "splits"),
+    "bfs_shard": ("rounds", "exchanged_total", "splits"),
+}
 
 
 def _recompute() -> dict:
@@ -95,14 +104,78 @@ print(json.dumps(out))
     return json.loads(proc.stdout.strip().splitlines()[-1])
 
 
+def _recompute_granularity() -> dict:
+    """Re-run bench_granularity's deterministic portion (8-device child).
+
+    Imports the sweep constants from bench_granularity so the guard can
+    never drift from the configs that produced the baseline.
+    """
+    from .bench_granularity import (GRANULARITIES, GRID_SIDE, PR_EPS,
+                                    PR_WORKERS, SCALE, SHARD_WORKERS,
+                                    TIGHT_BUDGET)
+
+    body = f"""
+import os
+os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count=8'
+os.environ.setdefault('JAX_PLATFORMS', 'cpu')
+import json
+import numpy as np
+from repro.algorithms.pagerank import pagerank_async
+from repro.core import SchedulerConfig
+from repro.graph.generators import grid2d, rmat
+from repro.runtime import build_program
+from repro.shard import run_sharded
+
+graphs = {{
+    'rmat': rmat({SCALE}, edge_factor=8, seed=1),
+    'grid': grid2d({GRID_SIDE}, {GRID_SIDE}, seed=0),
+}}
+out = {{}}
+for name, g in graphs.items():
+    entry = {{}}
+    for gr in {list(GRANULARITIES)}:
+        cell = {{}}
+        for label, budget in (('pagerank_ample', None),
+                              ('pagerank_tight', {TIGHT_BUDGET})):
+            cfg = SchedulerConfig(num_workers={PR_WORKERS}, fetch_size=1,
+                                  persistent=False, granularity=gr)
+            _, info = pagerank_async(g, cfg, eps={PR_EPS},
+                                     work_budget=budget)
+            cell[label] = {{'rounds': info['rounds'], 'work': info['work'],
+                            'splits': info['splits']}}
+        cfg = SchedulerConfig(num_workers={SHARD_WORKERS}, fetch_size=1,
+                              num_shards=8, persistent=False,
+                              granularity=gr)
+        program = build_program('bfs', g, cfg, params={{'source': 0}})
+        state, stats = run_sharded(program, g, cfg)
+        cell['bfs_shard'] = {{'rounds': stats.rounds,
+                              'exchanged_total': stats.exchanged,
+                              'splits': program.splits_of(state)}}
+        entry[str(gr)] = cell
+    out[name] = entry
+print(json.dumps(out))
+"""
+    env = dict(os.environ, PYTHONPATH=os.pathsep.join(
+        [str(REPO / "src")] + ([os.environ["PYTHONPATH"]]
+                               if "PYTHONPATH" in os.environ else [])))
+    proc = subprocess.run([sys.executable, "-c", body], capture_output=True,
+                          text=True, env=env, timeout=1800, cwd=REPO)
+    if proc.returncode != 0:
+        raise RuntimeError(
+            f"granularity smoke subprocess failed:\n{proc.stderr[-3000:]}")
+    return json.loads(proc.stdout.strip().splitlines()[-1])
+
+
 def run() -> int:
     """Returns the number of mismatches (0 = pass); prints a report."""
-    if not SHARD_JSON.exists():
-        print(f"smoke: {SHARD_JSON.name} missing — run "
-              f"'python -m benchmarks.run shard' to create the baseline")
+    missing = [p for p in (SHARD_JSON, GRANULARITY_JSON) if not p.exists()]
+    if missing:
+        for p in missing:
+            section = "shard" if p is SHARD_JSON else "granularity"
+            print(f"smoke: {p.name} missing — run "
+                  f"'python -m benchmarks.run {section}' to create the "
+                  f"baseline")
         return 1
-    baseline = json.loads(SHARD_JSON.read_text())["graphs"]
-    fresh = _recompute()
     mismatches = 0
 
     def check(path: str, want, got):
@@ -112,6 +185,8 @@ def run() -> int:
             print(f"smoke MISMATCH {path}: checked-in {want!r} != "
                   f"recomputed {got!r}")
 
+    baseline = json.loads(SHARD_JSON.read_text())["graphs"]
+    fresh = _recompute()
     for gname, entry in baseline.items():
         for s, want in entry["shards"].items():
             got = fresh[gname]["shards"][s]
@@ -122,12 +197,24 @@ def run() -> int:
             for field in _STEAL_FIELDS:
                 check(f"{gname}/steal/{label}/{field}", want[field],
                       got[field])
+
+    gran_base = json.loads(GRANULARITY_JSON.read_text())["graphs"]
+    gran_fresh = _recompute_granularity()
+    for gname, entry in gran_base.items():
+        for gr, cell in entry["g"].items():
+            got_cell = gran_fresh[gname][gr]
+            for workload, fields in _GRAN_FIELDS.items():
+                for field in fields:
+                    check(f"{gname}/g={gr}/{workload}/{field}",
+                          cell[workload][field],
+                          got_cell[workload][field])
+
     if mismatches:
-        print(f"smoke: {mismatches} round-count regression(s) vs "
-              f"{SHARD_JSON.name}")
+        print(f"smoke: {mismatches} counter regression(s) vs "
+              f"{SHARD_JSON.name} / {GRANULARITY_JSON.name}")
     else:
         print(f"smoke: OK — all deterministic counters match "
-              f"{SHARD_JSON.name}")
+              f"{SHARD_JSON.name} and {GRANULARITY_JSON.name}")
     return mismatches
 
 

@@ -22,12 +22,13 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-from ..core import (SchedulerConfig, WorkCounter, expand_merge_path,
-                    expand_per_item)
+from ..core import (ChunkCodec, SchedulerConfig, WorkCounter, chunk_degrees,
+                    chunk_seeds, coalesce_chunks, expand_merge_path,
+                    expand_per_item, flatten_chunks)
 from ..graph.csr import CSRGraph
 from ..runtime.program import AtosProgram, ProgramContext
 from ..runtime.programs import reject_unknown_params
-from .common import default_work_budget, max_degree_of
+from .common import chunking_for, default_work_budget, max_degree_of
 
 INF = jnp.int32(0x7FFFFFFF)
 
@@ -93,7 +94,11 @@ def init_state(graph: CSRGraph, source: int) -> BFSState:
 
 
 def make_wavefront_fn(graph: CSRGraph, strategy: str, work_budget: int,
-                      max_degree: int, backend: str = "jnp"):
+                      max_degree: int, backend: str = "jnp",
+                      codec: ChunkCodec | None = None,
+                      split_threshold: int | None = None,
+                      owner_block: int | None = None,
+                      formation_row_ptr=None):
     """Reusable speculative-BFS wavefront body.
 
     Closed over the graph only — the returned ``f(items, valid, state)`` is a
@@ -104,27 +109,48 @@ def make_wavefront_fn(graph: CSRGraph, strategy: str, work_budget: int,
     ``backend`` selects the merge-path LBS implementation (jnp reference vs
     the Pallas kernel) — outputs are bit-identical either way (DESIGN.md
     section 9).
+
+    ``codec`` makes the body chunk-aware (DESIGN.md section 12): popped
+    tasks decode to ``(head, width)`` row runs, the merge-path LBS balances
+    chunk degree-*sums*, and improved neighbors are re-coalesced into
+    chunks at push time (bounded by ``split_threshold`` and the shard
+    ``owner_block``; ``formation_row_ptr`` is the *global* row_ptr — pushed
+    vertices may be remote, so formation degree sums cannot come from a
+    device-local CSR slice).  The identity codec (G = 1) reproduces the
+    single-vertex body bit-for-bit.
     """
+    codec = codec or ChunkCodec(1)
+    g = codec.granularity
+    form_rp = graph.row_ptr if formation_row_ptr is None else formation_row_ptr
+
     def f(items, valid, state: BFSState):
+        safe = jnp.where(valid, items, 0)
+        heads, widths = codec.decode(safe)
         if strategy == "merge_path":      # CTA worker: task+data-parallel LB
-            ex = expand_merge_path(items, valid, graph.row_ptr, graph.col_idx,
-                                   work_budget, backend=backend)
-            # items whose rows spill past the work budget are re-queued whole
-            # (progress is guaranteed: budget >= max_degree, so the first
-            # popped item always expands fully).
-            safe = jnp.where(valid, items, 0)
-            deg = jnp.where(valid, graph.row_ptr[safe + 1] - graph.row_ptr[safe], 0)
+            ex = expand_merge_path(heads, valid, graph.row_ptr, graph.col_idx,
+                                   work_budget, backend=backend,
+                                   widths=widths, max_width=g)
+            # chunks whose rows spill past the work budget are re-queued
+            # whole (progress is guaranteed: budget >= max_degree >= any
+            # formed chunk's degree-sum, so the first popped task always
+            # expands fully).
+            deg = chunk_degrees(heads, widths, valid, graph.row_ptr)
             excl = jnp.cumsum(deg) - deg
             truncated = valid & (excl + deg > work_budget)
         else:                             # warp worker: task-parallel only
-            ex = expand_per_item(items, valid, graph.row_ptr, graph.col_idx,
-                                 max_degree)
+            flat_v, flat_valid, _ = flatten_chunks(heads, widths, valid, g)
+            ex = expand_per_item(flat_v, flat_valid, graph.row_ptr,
+                                 graph.col_idx, max_degree)
             truncated = jnp.zeros_like(valid)
-        # edges owned by truncated rows are excluded entirely: the row is
-        # re-queued whole and will relax+push on re-expansion (if we relaxed
-        # the prefix now but suppressed its pushes, the re-expansion would
-        # see "no improvement" and the neighbor would never be enqueued).
-        live = ex.valid & ~truncated[ex.owner]
+        # edges owned by truncated chunks are excluded entirely: the chunk
+        # is re-queued whole and will relax+push on re-expansion (if we
+        # relaxed the prefix now but suppressed its pushes, the re-expansion
+        # would see "no improvement" and the neighbor would never be
+        # enqueued).  (per_item never truncates; its ex.owner indexes the
+        # flattened per-vertex lanes, so the mask below is the chunk one
+        # only on the merge_path branch.)
+        live = (ex.valid & ~truncated[ex.owner] if strategy == "merge_path"
+                else ex.valid)
         cand = jnp.where(live, state.dist[ex.src] + 1, INF)
         before = state.dist[ex.nbr]
         tgt = jnp.where(live, ex.nbr, 0)
@@ -141,10 +167,16 @@ def make_wavefront_fn(graph: CSRGraph, strategy: str, work_budget: int,
             jnp.where(improved, ex.nbr, n)
         ].min(jnp.where(improved, lanes, ex.nbr.shape[0]), mode="drop")
         improved &= first_lane[ex.nbr] == lanes
-        counter = state.counter.add(jnp.sum((valid & ~truncated).astype(jnp.int32)))
-        out_items = jnp.concatenate([jnp.where(improved, ex.nbr, 0),
-                                     jnp.where(truncated, items, 0)])
-        out_mask = jnp.concatenate([improved, truncated])
+        counter = state.counter.add(jnp.sum(jnp.where(
+            valid & ~truncated, widths, 0)))
+        # push: improved (deduplicated) neighbors re-coalesce into chunks;
+        # truncated chunks are re-queued whole, unchanged.
+        out_new, new_mask, n_splits = coalesce_chunks(
+            ex.nbr, improved, codec, form_rp,
+            split_threshold=split_threshold, owner_block=owner_block)
+        counter = counter.add_splits(n_splits)
+        out_items = jnp.concatenate([out_new, jnp.where(truncated, items, 0)])
+        out_mask = jnp.concatenate([new_mask, truncated])
         return out_items, out_mask, BFSState(dist=new_dist, counter=counter)
 
     return f
@@ -161,7 +193,10 @@ def make_program(graph: CSRGraph, cfg: SchedulerConfig, *,
     per_item), ``work_budget``.  Static bounds (budget, max degree) come
     from the global graph so a sharded run traces the identical body on
     every device; ``dist`` merges by ``pmin`` — the exact union of all
-    relaxations — and the work counter by delta-psum.
+    relaxations — and the work counter by delta-psum.  ``cfg.granularity``
+    sets the chunk width G (DESIGN.md section 12): tasks are packed
+    ``(head, width)`` row runs, routed and stolen by their head vertex, and
+    the seed is a width-1 chunk.
     """
     source = int(params.pop("source", 0))
     strategy = params.pop("strategy", "merge_path")
@@ -171,19 +206,28 @@ def make_program(graph: CSRGraph, cfg: SchedulerConfig, *,
     max_degree = max_degree_of(graph)
     budget = default_work_budget(graph, cfg.wavefront, work_budget,
                                  max_degree=max_degree)
+    codec, threshold, owner_block = chunking_for(
+        graph, cfg, budget if strategy == "merge_path" else None)
 
     def make_body(local_graph: CSRGraph, ctx: ProgramContext):
         return make_wavefront_fn(local_graph, strategy, budget, max_degree,
-                                 backend=ctx.backend)
+                                 backend=ctx.backend, codec=codec,
+                                 split_threshold=threshold,
+                                 owner_block=owner_block,
+                                 formation_row_ptr=graph.row_ptr)
 
     return AtosProgram(
         name="bfs",
         init=lambda: (init_state(graph, source),
-                      jnp.array([source], jnp.int32)),
+                      jnp.asarray(chunk_seeds([source], codec,
+                                              graph.row_ptr))),
         make_body=make_body,
         result=lambda s: s.dist,
         merge={"dist": "pmin", "counter": "sum_delta"},
+        task_vertex=codec.head,
+        task_width=codec.width,
         work=lambda s: s.counter.work,
+        splits=lambda s: s.counter.splits,
         ideal_work=n,
         default_queue_capacity=queue_capacity or max(4 * n, 1024),
     )

@@ -30,11 +30,12 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-from ..core import SchedulerConfig, WorkCounter
+from ..core import (ChunkCodec, SchedulerConfig, WorkCounter, chunk_seeds,
+                    coalesce_chunks, flatten_chunks)
 from ..graph.csr import CSRGraph
 from ..runtime.program import AtosProgram, ProgramContext
 from ..runtime.programs import reject_unknown_params
-from .common import max_degree_of
+from .common import chunking_for, max_degree_of
 
 
 @jax.tree_util.register_dataclass
@@ -122,22 +123,47 @@ def coloring_bsp(
     return colors, {"iters": iters, "work": work}
 
 
-def init_state(graph: CSRGraph) -> Tuple["ColorState", jax.Array]:
-    """Job-parameterized initial state + seed tasks (an assign per vertex)."""
+def init_state(graph: CSRGraph,
+               codec: ChunkCodec | None = None,
+               owner_block: int | None = None,
+               split_threshold: int | None = None
+               ) -> Tuple["ColorState", jax.Array]:
+    """Job-parameterized initial state + seed tasks (an assign per vertex).
+
+    With a coarse ``codec`` the every-vertex frontier packs into maximal
+    ``(head, width)`` chunks — one assign-chunk task per run — encoded with
+    the usual +(task + 1) sign convention (DESIGN.md section 12).
+    """
+    import numpy as np
+
     n = graph.num_vertices
     state = ColorState(colors=jnp.full((n,), -1, jnp.int32),
                        counter=WorkCounter.zero())
-    return state, jnp.arange(1, n + 1, dtype=jnp.int32)
+    if codec is None or codec.granularity == 1:
+        return state, jnp.arange(1, n + 1, dtype=jnp.int32)
+    chunks = chunk_seeds(np.arange(n), codec, graph.row_ptr,
+                         split_threshold=split_threshold,
+                         owner_block=owner_block)
+    return state, jnp.asarray(chunks) + 1
 
 
 def make_wavefront_fn(graph: CSRGraph, fused: bool = True,
-                      max_degree: int | None = None):
+                      max_degree: int | None = None,
+                      codec: ChunkCodec | None = None,
+                      split_threshold: int | None = None,
+                      owner_block: int | None = None,
+                      formation_row_ptr=None):
     """Reusable fused assign/detect uberkernel body (Alg 6).
 
-    Task encoding: +(v+1) = assign color to v; -(v+1) = detect conflict at v.
-    A wavefront mixes both kinds (and multiple speculation depths).  The
-    returned ``f`` is a pure WavefrontFn shared by the single-tenant driver
-    (``coloring_async``) and the task server.
+    Task encoding: +(task+1) = assign, -(task+1) = detect, where ``task``
+    is a packed ``(head, width)`` chunk code (core/task.py; the raw vertex
+    id at granularity 1, reproducing the classic ±(v+1) scheme
+    bit-for-bit).  An assign chunk colors ``width`` consecutive vertices
+    and queues one detect chunk for the same run; conflicted vertices
+    re-coalesce into new assign chunks.  A wavefront mixes both kinds (and
+    multiple speculation depths).  The returned ``f`` is a pure WavefrontFn
+    shared by the single-tenant driver (``coloring_async``) and the task
+    server.
 
     ``fused=False`` makes phase B read the *pre-wavefront* colors instead of
     phase A's same-wavefront commits.  The sharded driver (repro/shard)
@@ -158,37 +184,55 @@ def make_wavefront_fn(graph: CSRGraph, fused: bool = True,
     if max_degree is None:
         max_degree = int(jnp.max(graph.degrees()))
     max_colors = max_degree + 1
+    codec = codec or ChunkCodec(1)
+    g = codec.granularity
+    form_rp = (graph.row_ptr if formation_row_ptr is None
+               else formation_row_ptr)
 
     def f(items, valid, state: ColorState):
         is_assign = valid & (items > 0)
         is_detect = valid & (items < 0)
-        vids = jnp.where(is_assign, items - 1, -items - 1)
-        vids = jnp.where(valid, vids, 0)
+        codes = jnp.where(is_assign, items - 1, -items - 1)
+        codes = jnp.where(valid, codes, 0)
+        heads, widths = codec.decode(codes)
+        # explode chunk tasks into their member vertices: lane kind (assign
+        # vs detect) is a chunk property, vertices are per member
+        vids, flat_valid, owner = flatten_chunks(heads, widths, valid, g)
+        flat_assign = flat_valid & is_assign[owner]
+        flat_detect = flat_valid & is_detect[owner]
 
         # ---- phase A: assigns (all reads see pre-wavefront colors = stale
         # speculation, exactly the GPU race the paper analyzes)
-        nbr, in_row = _gather_neighbor_colors(graph, vids, is_assign, max_degree)
+        nbr, in_row = _gather_neighbor_colors(graph, vids, flat_assign,
+                                              max_degree)
         pick = _min_free_color(state.colors, nbr, in_row, max_colors)
         # duplicate assign tasks for one vertex cannot exist (1 assign ->
-        # 1 detect -> at most 1 re-assign), so this scatter has unique targets
-        colors = state.colors.at[jnp.where(is_assign, vids, n)].set(
-            jnp.where(is_assign, pick, 0), mode="drop")
+        # 1 detect -> at most 1 re-assign, and chunk members are distinct),
+        # so this scatter has unique targets
+        colors = state.colors.at[jnp.where(flat_assign, vids, n)].set(
+            jnp.where(flat_assign, pick, 0), mode="drop")
 
         # ---- phase B: detects run on post-assign colors of THIS wavefront
         # (uberkernel fusion: later tasks see earlier tasks' commits).  The
         # unfused variant reads epoch-start colors so detection is identical
         # no matter which device processed the wavefront (shard parity).
-        nbr_d, in_row_d = _gather_neighbor_colors(graph, vids, is_detect,
+        nbr_d, in_row_d = _gather_neighbor_colors(graph, vids, flat_detect,
                                                   max_degree)
         detect_colors = colors if fused else state.colors
-        bad = _conflicts(detect_colors, vids, is_detect, nbr_d, in_row_d)
+        bad = _conflicts(detect_colors, vids, flat_detect, nbr_d, in_row_d)
 
+        # conflicted vertices re-coalesce into assign chunks (identity at
+        # G = 1: each bad vertex re-assigns alone, exactly the old stream)
+        re_assign, re_mask, n_splits = coalesce_chunks(
+            vids, bad, codec, form_rp, split_threshold=split_threshold,
+            owner_block=owner_block)
         out = jnp.concatenate([
-            jnp.where(is_assign, -(vids + 1), 0),   # assign -> queue a detect
-            jnp.where(bad, vids + 1, 0),            # conflict -> re-assign
+            jnp.where(is_assign, -(codes + 1), 0),  # assign -> queue a detect
+            jnp.where(re_mask, re_assign + 1, 0),   # conflict -> re-assign
         ])
-        mask = jnp.concatenate([is_assign, bad])
-        counter = state.counter.add(jnp.sum(is_assign.astype(jnp.int32)))
+        mask = jnp.concatenate([is_assign, re_mask])
+        counter = state.counter.add(jnp.sum(flat_assign.astype(jnp.int32)))
+        counter = counter.add_splits(n_splits)
         return out, mask, ColorState(colors=colors, counter=counter)
 
     return f
@@ -204,26 +248,35 @@ def make_program(graph: CSRGraph, cfg: SchedulerConfig, *,
     fused assign/detect uberkernel (Alg 6), the sharded topology the
     unfused one (detects read epoch-start colors), so results never depend
     on which device a same-epoch neighbor assign ran on.  Tasks are
-    sign-encoded ±(v+1); ownership follows the decoded vertex
-    (``task_vertex``).  Colors are single-writer per round, so both state
-    fields merge by delta-psum.
+    sign-encoded ±(task+1) chunk codes; ownership and occupancy follow the
+    decoded chunk head/width (``task_vertex``/``task_width``).  Colors are
+    single-writer per round, so both state fields merge by delta-psum.
     """
     reject_unknown_params("coloring", params)
     n = graph.num_vertices
     max_degree = max_degree_of(graph)
+    codec, threshold, owner_block = chunking_for(graph, cfg)
 
     def make_body(local_graph: CSRGraph, ctx: ProgramContext):
         return make_wavefront_fn(local_graph, fused=not ctx.sharded,
-                                 max_degree=max_degree)
+                                 max_degree=max_degree, codec=codec,
+                                 split_threshold=threshold,
+                                 owner_block=owner_block,
+                                 formation_row_ptr=graph.row_ptr)
+
+    def natural_code(t):
+        return jnp.abs(jnp.asarray(t, jnp.int32)) - 1
 
     return AtosProgram(
         name="coloring",
-        init=lambda: init_state(graph),
+        init=lambda: init_state(graph, codec, owner_block, threshold),
         make_body=make_body,
         result=lambda s: s.colors,
         merge={"colors": "sum_delta", "counter": "sum_delta"},
-        task_vertex=lambda t: jnp.abs(jnp.asarray(t, jnp.int32)) - 1,
+        task_vertex=lambda t: codec.head(natural_code(t)),
+        task_width=lambda t: codec.width(natural_code(t)),
         work=lambda s: s.counter.work,
+        splits=lambda s: s.counter.splits,
         ideal_work=n,
         default_queue_capacity=queue_capacity or max(4 * n, 1024),
     )

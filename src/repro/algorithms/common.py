@@ -2,9 +2,11 @@
 from __future__ import annotations
 
 from collections import OrderedDict
+from typing import Optional, Tuple
 
 import jax.numpy as jnp
 
+from ..core.task import ChunkCodec
 from ..graph.csr import CSRGraph
 
 _MAX_DEGREE_CACHE: OrderedDict = OrderedDict()
@@ -50,3 +52,31 @@ def default_work_budget(graph: CSRGraph, wavefront: int,
             8, int(float(jnp.mean(graph.degrees())) * 4)
         )
     return max(work_budget, max_degree)
+
+
+def chunking_for(graph: CSRGraph, cfg,
+                 work_budget: int | None = None
+                 ) -> Tuple[ChunkCodec, Optional[int], Optional[int]]:
+    """The granularity bundle every chunk-aware body needs.
+
+    Returns ``(codec, split_threshold, owner_block)``:
+
+      * ``codec`` — the :class:`~repro.core.task.ChunkCodec` for
+        ``cfg.granularity`` (the identity codec at G = 1);
+      * ``split_threshold`` — the effective chunk degree-sum cap at
+        formation time: the tighter of ``cfg.split_threshold`` (0 = unset)
+        and the merge-path ``work_budget``.  Capping at the budget is a
+        *liveness* bound, not a tuning choice: a chunk whose degree-sum
+        exceeded the budget would be truncated and re-queued whole forever;
+      * ``owner_block`` — the shard-ownership block size when the config
+        names a mesh (chunks must never cross it: routing keys off the
+        chunk head, and a device's CSR slice only covers its own block).
+    """
+    from ..shard.partition import block_size  # lazy: shard imports runtime
+
+    codec = ChunkCodec(cfg.granularity)
+    bounds = [b for b in (cfg.split_threshold, work_budget) if b]
+    threshold = min(bounds) if bounds else None
+    owner_block = (block_size(graph.num_vertices, cfg.num_shards)
+                   if cfg.num_shards > 1 else None)
+    return codec, threshold, owner_block

@@ -25,12 +25,15 @@ from typing import Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from ..core import SchedulerConfig, WorkCounter, expand_merge_path
+from ..core import (ChunkCodec, SchedulerConfig, WorkCounter, chunk_degrees,
+                    chunk_seeds, coalesce_chunks, expand_merge_path,
+                    flatten_chunks)
 from ..graph.csr import CSRGraph
 from ..runtime.program import AtosProgram, ProgramContext
 from ..runtime.programs import reject_unknown_params
-from .common import default_work_budget, max_degree_of
+from .common import chunking_for, default_work_budget, max_degree_of
 
 
 @jax.tree_util.register_dataclass
@@ -53,50 +56,71 @@ class PRState:
 
 
 def _push_wavefront(graph: CSRGraph, damping: float, work_budget: int,
-                    backend: str = "jnp"):
-    """Shared core: harvest residues of popped vertices, push to neighbors."""
+                    backend: str = "jnp", codec: ChunkCodec | None = None):
+    """Shared core: harvest residues of popped chunks, push to neighbors.
+
+    Chunk-aware (DESIGN.md section 12): a popped task is a ``(head, width)``
+    run of rows (core/task.py); the whole chunk is harvested or re-queued
+    as a unit, the LBS balances chunk degree-sums, and every expanded edge's
+    contribution reads its true member row's residue/degree.  The identity
+    codec (G = 1) is the original per-vertex core.
+    """
+    codec = codec or ChunkCodec(1)
+    g = codec.granularity
 
     def push(items, valid, state: PRState):
         n = state.rank.shape[0]
-        # de-duplicate within the wavefront (atomicExch semantics): keep the
-        # first occurrence of each vertex id.
+        k = items.shape[0]
         safe = jnp.where(valid, items, 0)
-        order = jnp.arange(items.shape[0], dtype=jnp.int32)
-        first_idx = jnp.full((n,), items.shape[0], jnp.int32)
-        first_idx = first_idx.at[safe].min(jnp.where(valid, order, items.shape[0]),
-                                           mode="drop")
-        is_first = valid & (first_idx[safe] == order)
+        heads, widths = codec.decode(safe)
+        # de-duplicate within the wavefront (atomicExch semantics): keep the
+        # first occurrence of each chunk head.  Chunks never overlap (the
+        # presence bit gates every enqueue per vertex), so head identity is
+        # chunk identity.
+        order = jnp.arange(k, dtype=jnp.int32)
+        first_idx = jnp.full((n,), k, jnp.int32)
+        first_idx = first_idx.at[heads].min(jnp.where(valid, order, k),
+                                            mode="drop")
+        is_first = valid & (first_idx[heads] == order)
 
-        # rows spilling past the work budget are not harvested; they are
-        # re-queued whole (same discipline as speculative BFS).
-        deg = jnp.where(is_first,
-                        graph.row_ptr[safe + 1] - graph.row_ptr[safe], 0)
+        # chunks spilling past the work budget are not harvested; they are
+        # re-queued whole (same discipline as speculative BFS; formation
+        # caps every chunk's degree-sum at the budget, so the first popped
+        # task always expands fully).
+        deg = chunk_degrees(heads, widths, is_first, graph.row_ptr)
         excl = jnp.cumsum(deg) - deg
         truncated = is_first & (excl + deg > work_budget)
         process = is_first & ~truncated
 
         # harvest: dense mask avoids duplicate-index scatter hazards
+        flat_v, flat_valid, flat_owner = flatten_chunks(heads, widths,
+                                                        valid, g)
+        proc_flat = flat_valid & process[flat_owner]
         popped = jnp.zeros((n,), bool).at[
-            jnp.where(process, safe, n)
+            jnp.where(proc_flat, flat_v, n)
         ].set(True, mode="drop")
-        res_lane = jnp.where(process, state.residue[safe], 0.0)
         rank = state.rank + jnp.where(popped, state.residue, 0.0)
         residue = jnp.where(popped, 0.0, state.residue)
         # popped vertices leave the queue; truncated ones stay (re-queued)
+        trunc_flat = flat_valid & truncated[flat_owner]
         trunc_mask = jnp.zeros((n,), bool).at[
-            jnp.where(truncated, safe, n)
+            jnp.where(trunc_flat, flat_v, n)
         ].set(True, mode="drop")
         in_queue = jnp.where(popped & ~trunc_mask, False, state.in_queue)
 
-        ex = expand_merge_path(items, process, graph.row_ptr, graph.col_idx,
-                               work_budget, backend=backend)
-        deg_f = jnp.maximum(deg, 1).astype(jnp.float32)
-        contrib = jnp.where(
-            ex.valid, damping * res_lane[ex.owner] / deg_f[ex.owner], 0.0
-        )
+        ex = expand_merge_path(heads, process, graph.row_ptr, graph.col_idx,
+                               work_budget, backend=backend,
+                               widths=widths, max_width=g)
+        # per-edge contribution from the edge's true source row: ex.src is
+        # the chunk member owning the edge, its residue read pre-harvest.
+        row_deg = jnp.maximum(
+            graph.row_ptr[ex.src + 1] - graph.row_ptr[ex.src], 1
+        ).astype(jnp.float32)
+        res_src = jnp.where(popped[ex.src], state.residue[ex.src], 0.0)
+        contrib = jnp.where(ex.valid, damping * res_src / row_deg, 0.0)
         residue = residue.at[jnp.where(ex.valid, ex.nbr, 0)].add(contrib,
                                                                  mode="drop")
-        counter = state.counter.add(jnp.sum(process.astype(jnp.int32)))
+        counter = state.counter.add(jnp.sum(jnp.where(process, widths, 0)))
         return residue, rank, in_queue, counter, truncated
 
     return push
@@ -186,6 +210,10 @@ def make_wavefront_fns(
     backend: str = "jnp",
     check_block=None,
     max_degree: int | None = None,
+    codec: ChunkCodec | None = None,
+    split_threshold: int | None = None,
+    owner_block: int | None = None,
+    formation_row_ptr=None,
 ):
     """Reusable async-PageRank wavefront bodies: ``(f, on_empty, stop)``.
 
@@ -203,11 +231,21 @@ def make_wavefront_fns(
     ``max_degree`` must then be passed explicitly (precomputed from the
     global graph): the budget's progress-guarantee floor cannot concretize
     the device-local CSR slice inside the trace.
+
+    ``codec`` (+ ``split_threshold``/``owner_block``/``formation_row_ptr``,
+    see :func:`~repro.algorithms.common.chunking_for`) makes the bodies
+    chunk-aware: the rotating re-scan's over-eps vertices — a naturally
+    run-heavy stream — coalesce into ``(head, width)`` chunk tasks at push
+    time (DESIGN.md section 12).
     """
     n = graph.num_vertices
     work_budget = default_work_budget(graph, wavefront, work_budget,
                                       max_degree=max_degree)
-    push = _push_wavefront(graph, damping, work_budget, backend=backend)
+    codec = codec or ChunkCodec(1)
+    form_rp = (graph.row_ptr if formation_row_ptr is None
+               else formation_row_ptr)
+    push = _push_wavefront(graph, damping, work_budget, backend=backend,
+                           codec=codec)
     n_check = min(n_check, n)
     if check_block is None:
         block_start, block_len = jnp.int32(0), jnp.int32(n)
@@ -226,6 +264,12 @@ def make_wavefront_fns(
         ids = block_start + (cursor + j) % jnp.maximum(block_len, 1)
         return jnp.where(j < block_len, ids, 0), j < block_len
 
+    def chunk_window(check_ids, over):
+        """Coalesce the window's over-eps vertices into chunk tasks."""
+        return coalesce_chunks(check_ids, over, codec, form_rp,
+                               split_threshold=split_threshold,
+                               owner_block=owner_block)
+
     def f(items, valid, state: PRState):
         residue, rank, in_queue, counter, truncated = push(items, valid, state)
         # rotating residual re-scan (Alg 4 lines 11-14): each wavefront checks
@@ -235,12 +279,13 @@ def make_wavefront_fns(
         over = in_window & (residue[check_ids] > eps) & ~in_queue[check_ids]
         in_queue = in_queue.at[jnp.where(over, check_ids, n)].set(
             True, mode="drop")
+        out_scan, scan_mask, n_splits = chunk_window(check_ids, over)
+        counter = counter.add_splits(n_splits)
         new_state = PRState(rank=rank, residue=residue, in_queue=in_queue,
                             check_cursor=state.check_cursor + n_check,
                             counter=counter)
-        out = jnp.concatenate([jnp.where(over, check_ids, 0),
-                               jnp.where(truncated, items, 0)])
-        mask = jnp.concatenate([over, truncated])
+        out = jnp.concatenate([out_scan, jnp.where(truncated, items, 0)])
+        mask = jnp.concatenate([scan_mask, truncated])
         return out, mask, new_state
 
     def on_empty(state: PRState):
@@ -249,12 +294,15 @@ def make_wavefront_fns(
                 & ~state.in_queue[check_ids])
         in_queue = state.in_queue.at[jnp.where(over, check_ids, n)].set(
             True, mode="drop")
+        out_scan, scan_mask, n_splits = chunk_window(check_ids, over)
         new_state = dataclasses.replace(
-            state, in_queue=in_queue, check_cursor=state.check_cursor + n_check
+            state, in_queue=in_queue,
+            check_cursor=state.check_cursor + n_check,
+            counter=state.counter.add_splits(n_splits),
         )
         pad = jnp.zeros((wavefront,), jnp.int32)
-        return (jnp.concatenate([jnp.where(over, check_ids, 0), pad]),
-                jnp.concatenate([over, jnp.zeros((wavefront,), bool)]),
+        return (jnp.concatenate([out_scan, pad]),
+                jnp.concatenate([scan_mask, jnp.zeros((wavefront,), bool)]),
                 new_state)
 
     def stop(state: PRState):
@@ -292,6 +340,7 @@ def make_program(graph: CSRGraph, cfg: SchedulerConfig, *,
     max_degree = max_degree_of(graph)
     budget = default_work_budget(graph, cfg.wavefront, work_budget,
                                  max_degree=max_degree)
+    codec, threshold, owner_block = chunking_for(graph, cfg, budget)
     n_check = min(cfg.num_workers * check_size, n)
     # the rescan blocks must match the partitioner's ownership map exactly,
     # or rescan tasks are born off-owner and break the single-writer merges
@@ -299,6 +348,9 @@ def make_program(graph: CSRGraph, cfg: SchedulerConfig, *,
     fns_cache: dict = {}
 
     def _fns(local_graph: CSRGraph, ctx: ProgramContext):
+        chunk_kw = dict(codec=codec, split_threshold=threshold,
+                        owner_block=owner_block,
+                        formation_row_ptr=graph.row_ptr)
         if ctx.sharded:
             # traced shard index — rebuild inside the shard_map, no caching
             start = jnp.asarray(ctx.shard, jnp.int32) * blk
@@ -306,14 +358,14 @@ def make_program(graph: CSRGraph, cfg: SchedulerConfig, *,
             return make_wavefront_fns(
                 local_graph, ctx.wavefront, n_check=n_check, damping=damping,
                 eps=eps, work_budget=budget, backend=ctx.backend,
-                check_block=check_block, max_degree=max_degree)
+                check_block=check_block, max_degree=max_degree, **chunk_kw)
         # body / on_empty / stop share one closure build per host context
         key = (id(local_graph.row_ptr), ctx.wavefront, ctx.backend)
         if key not in fns_cache:
             fns_cache[key] = (local_graph, make_wavefront_fns(
                 local_graph, ctx.wavefront, n_check=n_check, damping=damping,
                 eps=eps, work_budget=budget, backend=ctx.backend,
-                max_degree=max_degree))
+                max_degree=max_degree, **chunk_kw))
         return fns_cache[key][1]
 
     # stop reads only the (merged, replicated) state — build it once on the
@@ -325,9 +377,18 @@ def make_program(graph: CSRGraph, cfg: SchedulerConfig, *,
         cap = queue_capacity or max(8 * n, 1024)
         seed_count = min(n, max(1, cap // 2))
 
+    def init():
+        state, seeds = init_state(graph, damping, seed_count=seed_count)
+        # the dense seed frontier is the coarsening jackpot: consecutive
+        # vertex ids pack into maximal chunks (bounded by the split
+        # threshold and shard blocks), so the warm-up rounds shrink ~G-fold
+        return state, jnp.asarray(chunk_seeds(
+            np.asarray(seeds), codec, graph.row_ptr,
+            split_threshold=threshold, owner_block=owner_block))
+
     return AtosProgram(
         name="pagerank",
-        init=lambda: init_state(graph, damping, seed_count=seed_count),
+        init=init,
         make_body=lambda g, ctx: _fns(g, ctx)[0],
         make_on_empty=lambda g, ctx: _fns(g, ctx)[1],
         result=lambda s: s.rank,
@@ -336,7 +397,10 @@ def make_program(graph: CSRGraph, cfg: SchedulerConfig, *,
         merge={"rank": "sum_delta", "residue": "sum_delta",
                "in_queue": "or_delta", "check_cursor": "replicated",
                "counter": "sum_delta"},
+        task_vertex=codec.head,
+        task_width=codec.width,
         work=lambda s: s.counter.work,
+        splits=lambda s: s.counter.splits,
         ideal_work=n,
         default_queue_capacity=queue_capacity or max(8 * n, 1024),
     )

@@ -3,7 +3,10 @@ from .backend import (BACKENDS, default_interpret, has_tpu, resolve_backend,
                       resolve_interpret)
 from .queue import EMPTY, MultiQueue, TaskQueue, make_multiqueue, make_queue
 from .scheduler import RunStats, SchedulerConfig, discrete_run, persistent_run, run
-from .frontier import Expansion, expand_merge_path, expand_per_item
+from .frontier import (Expansion, chunk_degrees, chunk_row_of,
+                       expand_merge_path, expand_per_item)
+from .task import (MAX_GRANULARITY, ChunkCodec, chunk_seeds, coalesce_chunks,
+                   flatten_chunks)
 from .counters import WorkCounter, overwork_ratio
 
 __all__ = [
@@ -11,6 +14,9 @@ __all__ = [
     "resolve_interpret",
     "EMPTY", "MultiQueue", "TaskQueue", "make_multiqueue", "make_queue",
     "RunStats", "SchedulerConfig", "discrete_run", "persistent_run", "run",
-    "Expansion", "expand_merge_path", "expand_per_item",
+    "Expansion", "chunk_degrees", "chunk_row_of",
+    "expand_merge_path", "expand_per_item",
+    "MAX_GRANULARITY", "ChunkCodec", "chunk_seeds", "coalesce_chunks",
+    "flatten_chunks",
     "WorkCounter", "overwork_ratio",
 ]

@@ -20,14 +20,24 @@ import jax.numpy as jnp
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class WorkCounter:
-    work: jax.Array  # items processed (int32)
+    work: jax.Array  # vertices processed (int32)
+    #: chunks the push-side coalescer declined to form because their CSR
+    #: degree-sum exceeded the split threshold or they crossed a shard
+    #: boundary (core/task.coalesce_chunks) — the task-granularity dial's
+    #: engagement meter (DESIGN.md section 12).  Always 0 at granularity 1.
+    splits: jax.Array
 
     @staticmethod
     def zero() -> "WorkCounter":
-        return WorkCounter(work=jnp.int32(0))
+        return WorkCounter(work=jnp.int32(0), splits=jnp.int32(0))
 
     def add(self, n) -> "WorkCounter":
-        return WorkCounter(work=self.work + jnp.asarray(n, jnp.int32))
+        return dataclasses.replace(
+            self, work=self.work + jnp.asarray(n, jnp.int32))
+
+    def add_splits(self, n) -> "WorkCounter":
+        return dataclasses.replace(
+            self, splits=self.splits + jnp.asarray(n, jnp.int32))
 
 
 def overwork_ratio(counter: WorkCounter, ideal: int) -> float:

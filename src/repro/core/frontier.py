@@ -56,11 +56,52 @@ def searchsorted_right(sorted_arr: jax.Array, values: jax.Array) -> jax.Array:
 class Expansion(NamedTuple):
     """Flattened (source, neighbor) work units for one wavefront."""
 
-    src: jax.Array        # [W] source task per work unit (row id)
+    src: jax.Array        # [W] source row per work unit (chunk member)
     nbr: jax.Array        # [W] neighbor / column id
     owner: jax.Array      # [W] index into the popped wavefront of the source
     valid: jax.Array      # [W] bool
     total: jax.Array      # scalar int32 — true number of work units
+
+
+def chunk_degrees(heads: jax.Array, widths, valid: jax.Array,
+                  row_ptr: jax.Array) -> jax.Array:
+    """Degree-sum of each ``[head, head + width)`` chunk (0 where invalid).
+
+    ``widths=None`` is the single-row case (degree of ``head``), kept as
+    the exact pre-granularity expression so G = 1 traces are unchanged.
+    """
+    safe = jnp.where(valid, heads, 0)
+    if widths is None:
+        return jnp.where(valid, row_ptr[safe + 1] - row_ptr[safe], 0)
+    n = row_ptr.shape[0] - 1
+    end = jnp.clip(safe + jnp.asarray(widths, jnp.int32), 0, n)
+    return jnp.where(valid, row_ptr[end] - row_ptr[safe], 0)
+
+
+def chunk_row_of(row_ptr: jax.Array, head: jax.Array, rank: jax.Array,
+                 widths, max_width: int) -> jax.Array:
+    """Source row of within-chunk edge offset ``rank`` in ``[head, head+w)``.
+
+    The second, intra-chunk level of the load-balancing search: the LBS
+    distributes work units across *chunks* by degree-sum; this locates each
+    unit's member row by a ``max_width``-round compare-count against the
+    chunk's local row offsets — O(G) broadcast compares, no gather-heavy
+    binary search, the same VPU-friendly shape as the Pallas LBS kernel's
+    owner count (``kernels/frontier_expand``).  ``max_width <= 1`` is the
+    identity.  The ``j < width`` guard matters on device-local CSR slices
+    (shard/partition.py): row_ptr entries past the chunk's block are not
+    monotone there, so rows outside the chunk must never be counted.
+    """
+    if max_width <= 1:
+        return head
+    n = row_ptr.shape[0] - 1
+    widths = jnp.asarray(widths, jnp.int32)
+    base = row_ptr[head]
+    local = jnp.zeros(head.shape, jnp.int32)
+    for j in range(1, max_width):
+        before = row_ptr[jnp.clip(head + j, 0, n)] - base
+        local = local + ((j < widths) & (before <= rank)).astype(jnp.int32)
+    return jnp.clip(head + local, 0, jnp.maximum(n - 1, 0))
 
 
 def expand_merge_path(
@@ -70,6 +111,8 @@ def expand_merge_path(
     col_idx: jax.Array,
     work_budget: int,
     backend: str = "jnp",
+    widths: jax.Array | None = None,
+    max_width: int = 1,
 ) -> Expansion:
     """CTA-style expansion: load-balancing search over the wavefront.
 
@@ -82,14 +125,22 @@ def expand_merge_path(
     below, ``"pallas"`` dispatches to the TPU kernel
     (``kernels/frontier_expand/ops.frontier_expand``), ``"auto"`` picks by
     hardware.  Outputs are bit-identical across backends (tested).
+
+    With ``widths`` (and its static bound ``max_width``), item ``i`` is a
+    *chunk* of ``widths[i]`` consecutive rows headed at ``items[i]``
+    (core/task.py): the LBS balances over chunk degree-sums and each work
+    unit's true source row is recovered by :func:`chunk_row_of`, so a
+    coarse-grained wavefront still spreads its neighbor work evenly across
+    every lane — the paper's granularity x load-balancing composition.
     """
     if resolve_backend(backend) == "pallas":
         # imported lazily: kernels/ imports Expansion from this module
         from ..kernels.frontier_expand.ops import frontier_expand
 
-        return frontier_expand(items, valid, row_ptr, col_idx, work_budget)
+        return frontier_expand(items, valid, row_ptr, col_idx, work_budget,
+                               widths=widths, max_width=max_width)
     safe = jnp.where(valid, items, 0)
-    deg = jnp.where(valid, row_ptr[safe + 1] - row_ptr[safe], 0)
+    deg = chunk_degrees(items, widths, valid, row_ptr)
     scan = jnp.cumsum(deg)                       # inclusive scan of degrees
     total = scan[-1] if scan.shape[0] > 0 else jnp.int32(0)
 
@@ -97,10 +148,12 @@ def expand_merge_path(
     owner = searchsorted_right(scan, k)          # which popped item owns unit k
     owner = jnp.clip(owner, 0, items.shape[0] - 1)
     excl = scan - deg                            # exclusive scan
-    rank = k - excl[owner]                       # neighbor index within the row
-    src = safe[owner]
+    rank = k - excl[owner]                       # edge offset within the chunk
+    head = safe[owner]
+    src = (head if widths is None else
+           chunk_row_of(row_ptr, head, rank, widths[owner], max_width))
     in_range = k < total
-    edge = row_ptr[src] + rank
+    edge = row_ptr[head] + rank
     nbr = col_idx[jnp.clip(edge, 0, col_idx.shape[0] - 1)]
     return Expansion(
         src=jnp.where(in_range, src, 0),

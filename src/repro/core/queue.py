@@ -71,23 +71,59 @@ class TaskQueue:
         """
         return self.pop_upto(n, n)
 
-    def pop_upto(self, n: int, quota) -> Tuple[jax.Array, jax.Array, "TaskQueue"]:
-        """Pop up to ``min(quota, n)`` items into an ``n``-wide wavefront.
+    def pop_upto(self, n: int, quota,
+                 width_of=None) -> Tuple[jax.Array, jax.Array, "TaskQueue"]:
+        """Pop up to ``quota``'s worth of items into an ``n``-wide wavefront.
 
         ``n`` is the static buffer width (compiled shape); ``quota`` may be a
         traced scalar — the dynamic share a fairness policy granted this
         queue for the round (see server/policies.py).  Lanes beyond the quota
         are EMPTY/invalid, so the same compiled step serves every quota.
+
+        Without ``width_of`` the quota counts *slots* (one item each) — the
+        pre-granularity behavior, unchanged bit-for-bit.  With ``width_of``
+        (an item -> chunk-width function, see core/task.py) the quota counts
+        **vertices**: the pop takes the longest slot prefix whose cumulative
+        width stays within the quota, so a fairness share or a steal plan
+        expressed in units of work grants fewer slots to coarse-chunk lanes.
+        A chunk is never split by a pop — the first slot always pops when
+        the quota is positive-enough only if its whole width fits; quota 0
+        pops nothing either way.
         """
-        k = jnp.minimum(jnp.minimum(jnp.int32(n), self.size),
-                        jnp.asarray(quota, jnp.int32))
-        k = jnp.maximum(k, 0)
+        quota = jnp.asarray(quota, jnp.int32)
         idx = (self.head + jnp.arange(n, dtype=jnp.int32)) % self.capacity
         items = self.buf[idx]
-        valid = jnp.arange(n, dtype=jnp.int32) < k
+        in_queue = jnp.arange(n, dtype=jnp.int32) < jnp.minimum(
+            jnp.int32(n), self.size)
+        if width_of is None:
+            valid = in_queue & (jnp.arange(n, dtype=jnp.int32) < quota)
+        else:
+            w = jnp.where(in_queue, jnp.asarray(width_of(items), jnp.int32), 0)
+            # widths >= 1 inside the queue keep the cumsum strictly
+            # increasing over live slots, so the quota cut is a prefix.
+            valid = in_queue & (jnp.cumsum(w) <= quota)
+        k = jnp.sum(valid.astype(jnp.int32))
         items = jnp.where(valid, items, EMPTY)
         q = dataclasses.replace(self, head=self.head + k)
         return items, valid, q
+
+    def vertex_size(self, width_of=None) -> jax.Array:
+        """Occupancy in *vertices*: the sum of live slots' chunk widths.
+
+        ``width_of=None`` (or a width-1 codec) degenerates to :attr:`size`.
+        Computed by scanning the ring's live window — chunk widths are
+        carried by the task bits themselves (core/task.py), so the queue
+        needs no auxiliary state and the pre-granularity pytree layout is
+        untouched.
+        """
+        if width_of is None:
+            return self.size
+        cap = self.capacity
+        i = jnp.arange(cap, dtype=jnp.int32)
+        live = ((i - self.head) % cap) < self.size
+        return jnp.sum(jnp.where(live,
+                                 jnp.asarray(width_of(self.buf), jnp.int32),
+                                 0))
 
     def push(self, items: jax.Array, mask: jax.Array,
              backend: str = "jnp") -> "TaskQueue":
@@ -211,6 +247,22 @@ class MultiQueue:
     def lane_sizes(self) -> jax.Array:
         return self.lanes.tail - self.lanes.head
 
+    def lane_loads(self, width_of=None) -> jax.Array:
+        """Per-lane occupancy in vertices (chunk-width weighted).
+
+        The granularity-aware analogue of :meth:`lane_sizes`: fairness
+        quotas and steal plans budget *work*, and with chunked tasks
+        (core/task.py) a slot may carry several vertices.  ``width_of=None``
+        is exactly :meth:`lane_sizes`.
+        """
+        if width_of is None:
+            return self.lane_sizes()
+        cap = self.lanes.buf.shape[1]
+        i = jnp.arange(cap, dtype=jnp.int32)[None, :]
+        live = ((i - self.lanes.head[:, None]) % cap) < self.lane_sizes()[:, None]
+        w = jnp.asarray(width_of(self.lanes.buf), jnp.int32)
+        return jnp.sum(jnp.where(live, w, 0), axis=1)
+
     def lane_dropped(self) -> jax.Array:
         return self.lanes.dropped
 
@@ -231,10 +283,14 @@ class MultiQueue:
             self.with_lane(pick, lane2), rr=(pick + 1) % self.num_lanes
         )
 
-    def pop_lane(self, lane_id, n: int, quota=None):
-        """Pop up to ``min(quota, n)`` items from one named lane."""
+    def pop_lane(self, lane_id, n: int, quota=None, width_of=None):
+        """Pop up to ``quota``'s worth of items from one named lane.
+
+        ``quota`` counts slots by default, or vertices when ``width_of``
+        gives each slot's chunk width (see :meth:`TaskQueue.pop_upto`).
+        """
         items, valid, lane2 = self.lane(lane_id).pop_upto(
-            n, n if quota is None else quota
+            n, n if quota is None else quota, width_of=width_of
         )
         return items, valid, self.with_lane(lane_id, lane2)
 

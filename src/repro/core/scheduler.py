@@ -83,9 +83,9 @@ class SchedulerConfig:
     runs through a packed MultiQueue lane — the task server's engine),
     ``"sharded"`` (per-device queue replicas over a 1-D mesh, repro/shard),
     or ``"auto"`` (sharded iff ``num_shards > 1``, else single).  Together
-    with ``persistent`` it forms the 3x2 :class:`~repro.runtime.policy.
-    ExecutionPolicy` matrix every :class:`~repro.runtime.program.AtosProgram`
-    runs under unchanged.
+    with ``persistent`` and ``granularity`` it forms the 3 x 2 x G
+    :class:`~repro.runtime.policy.ExecutionPolicy` matrix every
+    :class:`~repro.runtime.program.AtosProgram` runs under unchanged.
 
     ``num_shards`` is the device-mesh axis (DESIGN.md section 10): with
     ``num_shards > 1`` the drain runs one queue replica per device of a 1-D
@@ -95,6 +95,18 @@ class SchedulerConfig:
     ``(max - min)`` queue occupancy exceeds ``steal_threshold x mean``, rich
     shards donate up to ``steal_chunk`` owned tasks to their ring successor
     before the next round; ``0.0`` disables stealing.
+
+    ``granularity`` is the task-granularity axis (DESIGN.md section 12):
+    the maximum chunk width ``G`` — how many consecutive CSR rows one queue
+    slot may carry (core/task.py).  ``1`` (default) is the pre-granularity
+    single-vertex task, bit-for-bit; larger values let seed frontiers and
+    coalescible pushes ride in coarse chunks, so one ``num_workers x
+    fetch_size`` wavefront of slots advances up to ``G`` times as many
+    vertices.  ``split_threshold`` caps a chunk's CSR degree-sum at
+    formation time (0 = bounded only by the merge-path work budget): the
+    paper's level-of-balancing dial — a low threshold keeps hub-bearing
+    chunks fine on heavy-tailed graphs, a high one lets mesh-like graphs
+    coarsen freely.
     """
 
     num_workers: int = 64        # numBlock — parallel workers per wavefront
@@ -106,6 +118,8 @@ class SchedulerConfig:
     num_shards: int = 1          # device-mesh axis (repro/shard)
     steal_threshold: float = 0.0  # occupancy-skew trigger; 0 = stealing off
     steal_chunk: int = 64        # max tasks donated per shard per round
+    granularity: int = 1         # max chunk width G (core/task.py); 1 = fine
+    split_threshold: int = 0     # chunk degree-sum cap; 0 = work-budget only
 
     @property
     def wavefront(self) -> int:

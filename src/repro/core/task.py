@@ -1,0 +1,224 @@
+"""First-class task granularity: packed ``(vertex, width)`` chunk tasks.
+
+Atos's third headline control is *task-parallel granularity* (paper
+section 3.2/5): how much work one popped task represents.  Before this
+module every task in every queue was a single int32 vertex, hardwiring the
+finest granularity; now a task is a **chunk** — ``width`` consecutive CSR
+rows starting at a head vertex — bit-packed into the same int32 queue slot:
+
+    task = (vertex << width_bits) | (width - 1),   width_bits = ceil(log2 G)
+
+where ``G`` is the configured maximum chunk width
+(:attr:`~repro.core.scheduler.SchedulerConfig.granularity`).  ``G = 1``
+packs zero width bits, so every task *is* its vertex id and the whole
+machinery degenerates bit-for-bit to the pre-granularity behavior — that
+identity is what lets granularity ride the existing int32 queues, the
+server's ``(job_id, zigzag(natural))`` packing (``server/encoding.py``
+absorbs chunk codes exactly like plain vertex ids), and the shard layer's
+EMPTY wire sentinel unchanged.  Encoded chunks are always non-negative, so
+they can never collide with :data:`~repro.core.queue.EMPTY` (tested in
+tests/test_task.py); sign-encoded task schemes (coloring's ±(task+1)) wrap
+the chunk code in their sign exactly as they wrapped the vertex id.
+
+Three tools live here:
+
+  * :class:`ChunkCodec` — encode/decode/width/head, pure int32 bit ops,
+    usable inside any trace (and on host numpy);
+  * :func:`coalesce_chunks` — the **push-side chunk former**: packs marked
+    vertex ids into aligned chunks *in place* (no sort, no host sync),
+    splitting — i.e. refusing to form — any chunk whose CSR degree-sum
+    exceeds ``split_threshold`` (the paper's granularity/level-of-balancing
+    dial: coarse chunks amortize scheduling overhead on low-variance
+    graphs, but on heavy-tailed graphs a hub-bearing chunk would swallow
+    the whole load-balancing budget, so it is kept fine-grained) or that
+    would cross a shard-ownership boundary (a chunk must be expandable
+    from one device's CSR slice and routable by its head);
+  * :func:`chunk_seeds` — host-side greedy chunker for initial frontiers.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+#: widest chunk any codec may express; 6 width bits is the most the server's
+#: 24-bit payload can spare while still addressing interesting graphs
+#: (n << width_bits must stay inside the zigzag payload — see
+#: ``server/encoding.check_job_fits``).
+MAX_GRANULARITY = 64
+
+
+@dataclasses.dataclass(frozen=True)
+class ChunkCodec:
+    """Bit-packed ``(vertex, width)`` chunk codec for one granularity ``G``.
+
+    ``G = 1`` is the exact identity codec: ``encode(v, 1) == v`` and every
+    decode reads width 1, reproducing the pre-granularity task stream
+    bit-for-bit.  Codecs are static (constructed per program from the
+    config), so all bit widths are trace-time constants.
+    """
+
+    granularity: int = 1
+
+    def __post_init__(self):
+        if not 1 <= self.granularity <= MAX_GRANULARITY:
+            raise ValueError(
+                f"granularity must be in [1, {MAX_GRANULARITY}], got "
+                f"{self.granularity}")
+
+    @property
+    def width_bits(self) -> int:
+        return (self.granularity - 1).bit_length()
+
+    @property
+    def width_mask(self) -> int:
+        return (1 << self.width_bits) - 1
+
+    # -------------------------------------------------------------- traced
+    def encode(self, vertex, width):
+        """Pack a chunk; ``width`` lanes must be in [1, granularity]."""
+        v = jnp.asarray(vertex, jnp.int32)
+        w = jnp.asarray(width, jnp.int32)
+        return (v << self.width_bits) | ((w - 1) & self.width_mask)
+
+    def head(self, task):
+        """Head vertex of a chunk task (identity when G = 1)."""
+        return jnp.asarray(task, jnp.int32) >> self.width_bits
+
+    def width(self, task):
+        """Chunk width in [1, granularity] (all-ones when G = 1)."""
+        return (jnp.asarray(task, jnp.int32) & self.width_mask) + 1
+
+    def decode(self, task):
+        return self.head(task), self.width(task)
+
+    # ---------------------------------------------------------------- host
+    def max_code(self, num_vertices: int) -> int:
+        """Largest chunk code a graph of ``num_vertices`` can produce —
+        the admission bound the packed encodings must clear."""
+        if num_vertices <= 0:
+            return 0
+        return ((num_vertices - 1) << self.width_bits) | self.width_mask
+
+
+def coalesce_chunks(vids, mask, codec: ChunkCodec, row_ptr, *,
+                    split_threshold=None, owner_block=None):
+    """Pack marked vertex ids into chunk tasks, in place.
+
+    ``vids[mask]`` are the vertices a wavefront wants to push (already
+    deduplicated by the caller).  Lanes are rewritten so that each maximal
+    set of marked vertices falling in one G-aligned window ``[bG, bG + G)``
+    that is (a) contiguous, (b) within ``split_threshold`` total degree,
+    and (c) owned by one shard becomes a single chunk task on its head
+    lane (the other member lanes are masked off); everything else stays a
+    width-1 chunk on its own lane.  Returns ``(items, out_mask, n_splits)``
+    where ``n_splits`` counts the windows that *would* have coalesced but
+    were split by the threshold or an ownership boundary — the
+    schedule-deterministic "granularity dial engaged" meter.
+
+    Alignment does the heavy lifting: no sorting, no sequential scan —
+    one scatter-min/max/add over a ``ceil(n/G)``-sized scratch, all
+    vectorized, deterministic, and a no-op (identity) at G = 1.
+    """
+    vids = jnp.asarray(vids, jnp.int32)
+    mask = jnp.asarray(mask, bool)
+    if codec.granularity == 1:
+        return jnp.where(mask, vids, 0), mask, jnp.int32(0)
+
+    g = codec.granularity
+    n = row_ptr.shape[0] - 1
+    nb = n // g + 2                       # aligned windows + overflow slot
+    k = vids.shape[0]
+    blk = jnp.where(mask, vids // g, nb - 1)   # masked lanes -> spare slot
+
+    m32 = mask.astype(jnp.int32)
+    cnt = jnp.zeros((nb,), jnp.int32).at[blk].add(m32)
+    vmin = jnp.full((nb,), jnp.int32(n)).at[blk].min(
+        jnp.where(mask, vids, n))
+    vmax = jnp.full((nb,), jnp.int32(-1)).at[blk].max(
+        jnp.where(mask, vids, -1))
+
+    contiguous = (cnt > 0) & (vmax - vmin + 1 == cnt)
+    head = jnp.clip(vmin, 0, jnp.maximum(n - 1, 0))
+    degsum = row_ptr[jnp.clip(vmin + cnt, 0, n)] - row_ptr[head]
+    fits = jnp.bool_(True) if split_threshold is None else (
+        degsum <= jnp.int32(split_threshold))
+    same_owner = jnp.bool_(True) if owner_block is None else (
+        (vmin // jnp.int32(owner_block)) == (vmax // jnp.int32(owner_block)))
+    form = contiguous & fits & same_owner
+
+    is_head = mask & form[blk] & (vids == vmin[blk])
+    single = mask & ~form[blk]
+    out_mask = is_head | single
+    width = jnp.where(is_head, cnt[blk], 1)
+    items = jnp.where(out_mask, codec.encode(jnp.where(out_mask, vids, 0),
+                                             width), 0)
+    n_splits = jnp.sum((contiguous & (cnt > 1) & ~(fits & same_owner))
+                       .astype(jnp.int32))
+    return items, out_mask, n_splits
+
+
+def chunk_seeds(vids, codec: ChunkCodec, row_ptr, *,
+                split_threshold=None, owner_block=None) -> np.ndarray:
+    """Host-side greedy chunker for an initial frontier.
+
+    Walks the seed vertex ids once (numpy; init runs on the host exactly
+    once per drain) and emits maximal chunks of consecutive ids bounded by
+    the codec width, the degree-sum ``split_threshold``, and the shard
+    ``owner_block`` boundary.  Unlike :func:`coalesce_chunks` the runs need
+    not be G-aligned — a seed frontier is dense, so greedy packing yields
+    the coarsest legal chunks.  Returns the encoded chunk array (dense,
+    every entry valid) — what ``AtosProgram.init`` hands the queue.
+    """
+    vids = np.asarray(vids, dtype=np.int64)
+    rp = np.asarray(row_ptr, dtype=np.int64)
+    g = codec.granularity
+    if g == 1 or vids.size == 0:
+        return vids.astype(np.int32)
+    chunks = []
+    head = int(vids[0])
+    width = 1
+
+    def flush():
+        chunks.append((head << codec.width_bits)
+                      | ((width - 1) & codec.width_mask))
+
+    for v in vids[1:]:
+        v = int(v)
+        extends = (
+            v == head + width
+            and width < g
+            and (split_threshold is None
+                 or rp[v + 1] - rp[head] <= split_threshold)
+            and (owner_block is None or v // owner_block == head // owner_block)
+        )
+        if extends:
+            width += 1
+        else:
+            flush()
+            head, width = v, 1
+    flush()
+    return np.asarray(chunks, dtype=np.int32)
+
+
+def flatten_chunks(heads, widths, valid, max_width: int):
+    """Explode a chunk wavefront into a per-vertex wavefront.
+
+    ``[k]`` chunks become ``[k * max_width]`` vertex lanes: lane
+    ``i * max_width + j`` carries vertex ``heads[i] + j``, valid iff chunk
+    ``i`` is valid and ``j < widths[i]``.  Returns ``(vids, flat_valid,
+    owner)`` with ``owner`` the source chunk lane — the bridge from the
+    chunked queue to per-vertex bodies (warp-style expansion, coloring's
+    neighbor gather, PageRank's harvest masks).  At ``max_width = 1`` this
+    is the identity reshape.
+    """
+    heads = jnp.asarray(heads, jnp.int32)
+    widths = jnp.asarray(widths, jnp.int32)
+    k = heads.shape[0]
+    j = jnp.arange(max_width, dtype=jnp.int32)
+    vids = (heads[:, None] + j[None, :]).reshape(-1)
+    flat_valid = (valid[:, None] & (j[None, :] < widths[:, None])).reshape(-1)
+    owner = jnp.broadcast_to(
+        jnp.arange(k, dtype=jnp.int32)[:, None], (k, max_width)).reshape(-1)
+    return jnp.where(flat_valid, vids, 0), flat_valid, owner

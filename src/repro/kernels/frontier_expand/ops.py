@@ -23,32 +23,44 @@ import jax
 import jax.numpy as jnp
 
 from ...core.backend import resolve_interpret
-from ...core.frontier import Expansion
+from ...core.frontier import Expansion, chunk_degrees, chunk_row_of
 from .kernel import lbs_pallas
 
 
-@functools.partial(jax.jit, static_argnames=("budget", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("budget", "interpret", "max_width"))
 def frontier_expand(items, valid, row_ptr, col_idx, budget: int,
-                    interpret: bool | None = None) -> Expansion:
+                    interpret: bool | None = None,
+                    widths=None, max_width: int = 1) -> Expansion:
     """Drop-in replacement for ``core.frontier.expand_merge_path`` that runs
     the merge-path search as a Pallas TPU kernel.
 
     Bit-identical to the reference by construction (same masking, same
     owner/rank definitions) — asserted by ``tests/test_kernels.py`` and,
     end-to-end, by the backend-parity tests in ``tests/test_algorithms.py``.
+
+    Chunked wavefronts (``widths`` + static ``max_width``; core/task.py)
+    feed the kernel the *chunk degree-sum* scan — the LBS itself is
+    granularity-agnostic, it balances whatever scan it is given — and each
+    work unit's member row is recovered afterwards by the shared
+    :func:`~repro.core.frontier.chunk_row_of` compare-count (O(max_width)
+    broadcast compares, the same VPU shape as the kernel's owner count), so
+    both backends stay bit-identical at every granularity.
     """
     interpret = resolve_interpret(interpret)
     safe = jnp.where(valid, items, 0)
-    deg = jnp.where(valid, row_ptr[safe + 1] - row_ptr[safe], 0)
+    deg = chunk_degrees(items, widths, valid, row_ptr)
     scan = jnp.cumsum(deg)
     total = scan[-1] if scan.shape[0] > 0 else jnp.int32(0)
 
     owner, rank = lbs_pallas(scan, budget, interpret=interpret)
     owner = jnp.clip(owner, 0, items.shape[0] - 1)
-    src = safe[owner]
+    head = safe[owner]
+    src = (head if widths is None else
+           chunk_row_of(row_ptr, head, rank, widths[owner], max_width))
     k = jnp.arange(budget, dtype=jnp.int32)
     in_range = k < total
-    edge = row_ptr[src] + rank
+    edge = row_ptr[head] + rank
     nbr = col_idx[jnp.clip(edge, 0, col_idx.shape[0] - 1)]
     return Expansion(
         src=jnp.where(in_range, src, 0),

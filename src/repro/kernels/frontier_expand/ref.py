@@ -1,4 +1,11 @@
-"""Pure-jnp oracle for the load-balancing-search kernel."""
+"""Pure-jnp oracle for the load-balancing-search kernel.
+
+The search is granularity-agnostic: ``scan`` may be the inclusive scan of
+per-row degrees (fine-grained tasks) or of per-chunk degree *sums*
+(core/task.py); ``owner`` is then the chunk index and ``rank`` the edge
+offset within the chunk, localized to a member row by
+``core.frontier.chunk_row_of``.
+"""
 from __future__ import annotations
 
 import jax

@@ -92,12 +92,24 @@ def main() -> None:
     ap.add_argument("--workers", type=int, default=64)
     ap.add_argument("--fetch", type=int, default=1)
     ap.add_argument("--exec-policy", default="auto",
-                    choices=["auto"] + [str(p) for p in POLICY_GRID],
-                    help="execution policy for the single-tenant drains "
-                         "(topology.kernel, DESIGN.md section 11): e.g. "
-                         "fused.discrete drains through a packed MultiQueue "
-                         "lane with a host loop; auto keeps the config "
-                         "defaults (single topology, persistent kernel)")
+                    help="execution policy "
+                         "('<topology>.<kernel>[.g<width>]', DESIGN.md "
+                         "sections 11-12): e.g. fused.discrete drains "
+                         "through a packed MultiQueue lane with a host "
+                         "loop, sharded.persistent.g4 adds width-4 chunk "
+                         "tasks; auto keeps the config defaults (single "
+                         "topology, persistent kernel).  Known cells: "
+                         + ", ".join(str(p) for p in POLICY_GRID))
+    ap.add_argument("--granularity", type=int, default=1,
+                    help="max task chunk width G (core/task.py, DESIGN.md "
+                         "section 12): each queue slot carries up to G "
+                         "consecutive CSR rows; 1 = classic single-vertex "
+                         "tasks.  A .g<width> suffix on --exec-policy "
+                         "overrides this.")
+    ap.add_argument("--split-threshold", type=int, default=0,
+                    help="chunk degree-sum cap at formation time (0 = "
+                         "bounded by the merge-path work budget only) — "
+                         "the paper's level-of-balancing dial")
     ap.add_argument("--backend", default="auto",
                     choices=["jnp", "pallas", "auto"],
                     help="kernel backend: jnp reference, Pallas TPU kernels "
@@ -134,14 +146,20 @@ def main() -> None:
     specs = mixed_specs(args.jobs, registry, args.eps, args.seed,
                         shards=args.shards)
 
+    granularity = args.granularity
     if args.exec_policy == "auto":
         topology, persistent = "auto", True
     else:
         policy = parse_policy(args.exec_policy)
         topology, persistent = policy.topology, policy.persistent
+        # an explicit granularity segment — including .g1 — wins over
+        # --granularity, as the flag's help promises
+        if len(args.exec_policy.split(".")) == 3:
+            granularity = policy.granularity
     config = None if args.autotune else SchedulerConfig(
         num_workers=args.workers, fetch_size=args.fetch,
-        backend=args.backend, topology=topology, persistent=persistent)
+        backend=args.backend, topology=topology, persistent=persistent,
+        granularity=granularity, split_threshold=args.split_threshold)
     autotuner = (Autotuner(cache_path=args.autotune_cache)
                  if args.autotune else None)
 

@@ -31,11 +31,13 @@ class ExecutionResult(NamedTuple):
 def _context(cfg: SchedulerConfig) -> ProgramContext:
     return ProgramContext(wavefront=cfg.wavefront,
                           num_workers=cfg.num_workers,
-                          backend=cfg.backend)
+                          backend=cfg.backend,
+                          granularity=cfg.granularity)
 
 
 def fused_lane_ops(wavefront: int, backend: str, lane_id, job_id,
-                   quota=None, aux: Optional[dict] = None) -> QueueOps:
+                   quota=None, aux: Optional[dict] = None,
+                   task_width=None) -> QueueOps:
     """QueueOps over one packed MultiQueue lane — the task server's engine.
 
     Tasks on the wire are ``(job_id, zigzag(payload))`` int32s; the pop
@@ -44,12 +46,19 @@ def fused_lane_ops(wavefront: int, backend: str, lane_id, job_id,
     serves every tenant sharing a kernel bundle (DESIGN.md section 8).
     ``aux``, if given, receives the per-pop routing-mismatch count
     (``aux["mismatch"]``) — the multi-tenant engine's wire-integrity meter.
+    ``task_width`` (a *natural*-task -> chunk-width function, core/task.py)
+    switches the quota to vertex units: the pop takes the longest slot
+    prefix whose summed chunk widths fit the grant, so coarse-chunk lanes
+    are charged for the vertices they actually advance.
     """
-    from ..server.encoding import (pack, unpack_job,
+    from ..server.encoding import (pack, packed_width, unpack_job,
                                    unpack_natural)  # lazy: server->core
 
+    width_of = None if task_width is None else packed_width(task_width)
+
     def pop(mq):
-        packed, valid, mq2 = mq.pop_lane(lane_id, wavefront, quota)
+        packed, valid, mq2 = mq.pop_lane(lane_id, wavefront, quota,
+                                         width_of=width_of)
         natural = jnp.where(valid, unpack_natural(packed), 0)
         if aux is not None:
             aux["mismatch"] = jnp.sum(
@@ -99,6 +108,7 @@ def _run_shared_core(program: AtosProgram, graph, cfg: SchedulerConfig,
         "rounds": int(stats.rounds),
         "work": program.work_of(state),
         "dropped": int(stats.dropped),
+        "splits": program.splits_of(state),
     }
     return ExecutionResult(state, stats, info)
 
@@ -117,6 +127,7 @@ def _run_sharded(program: AtosProgram, graph, cfg: SchedulerConfig,
         "rounds": sstats.rounds,
         "work": program.work_of(state),
         "dropped": sstats.dropped + sstats.route_dropped,
+        "splits": program.splits_of(state),
         "shards": len(sstats.per_device_items),
         "exchanged": sstats.exchanged,
         "donated": sstats.donated,

@@ -1,11 +1,12 @@
-"""The execution-policy axis: (topology) x (kernel strategy).
+"""The execution-policy axis: (topology) x (kernel strategy) x (granularity).
 
 Atos exposes orthogonal scheduling controls — kernel strategy
 (persistent/discrete), worker granularity, load-balancing mode — and the
 runtime layer adds the deployment topology on top:
 
-    topology:  single  | fused  | sharded
-    kernel:    persistent | discrete
+    topology:     single  | fused  | sharded
+    kernel:       persistent | discrete
+    granularity:  g1 | g2 | g4 | ... (max chunk width, core/task.py)
 
 ``single``  — one TaskQueue, one device: the classic Atos drain.
 ``fused``   — the drain runs through a packed (job_id, payload) MultiQueue
@@ -17,56 +18,98 @@ runtime layer adds the deployment topology on top:
 
 ``persistent`` wraps the drain in one ``lax.while_loop`` (zero host
 round-trips); ``discrete`` dispatches one jitted round per host-loop
-iteration.  Every :class:`~repro.runtime.program.AtosProgram` runs under all
-six combinations unchanged — that 3x2 matrix is what the parity tests
-(tests/test_runtime.py) pin down.
+iteration.
+
+``granularity`` is the paper's task-parallel granularity control
+(DESIGN.md section 12): how many consecutive CSR rows one queue slot may
+carry.  ``1`` reproduces the single-vertex task stream bit-for-bit; wider
+chunks trade scheduling overhead against load-balancing freedom.  In
+policy names it is spelled as a ``.g<width>`` suffix — omitted for the
+default width 1, so every pre-granularity policy string still parses to
+the same cell.
+
+Every :class:`~repro.runtime.program.AtosProgram` runs under every cell of
+the 3 x 2 x G matrix unchanged — the parity tests (tests/test_runtime.py)
+pin the full 6-cell grid at g = 1 and g = 4.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Tuple
 
+from ..core.task import MAX_GRANULARITY
+
 TOPOLOGIES: Tuple[str, ...] = ("single", "fused", "sharded")
 KERNELS: Tuple[str, ...] = ("persistent", "discrete")
 
 
+def _matrix_help() -> str:
+    """One shared enumeration of the policy matrix for error messages."""
+    cells = ", ".join(f"{t}.{k}" for t in TOPOLOGIES for k in KERNELS)
+    return (f"valid cells are '<topology>.<kernel>[.g<width>]' with "
+            f"topology x kernel in {{{cells}}} and an optional granularity "
+            f"suffix g1..g{MAX_GRANULARITY} (omitted = g1)")
+
+
 @dataclasses.dataclass(frozen=True)
 class ExecutionPolicy:
-    """One cell of the (topology x kernel) matrix."""
+    """One cell of the (topology x kernel x granularity) matrix."""
 
     topology: str = "single"
     kernel: str = "persistent"
+    granularity: int = 1
 
     def __post_init__(self):
         if self.topology not in TOPOLOGIES:
             raise ValueError(f"unknown topology {self.topology!r}; "
-                             f"expected one of {TOPOLOGIES}")
+                             f"expected one of {TOPOLOGIES} — "
+                             f"{_matrix_help()}")
         if self.kernel not in KERNELS:
             raise ValueError(f"unknown kernel strategy {self.kernel!r}; "
-                             f"expected one of {KERNELS}")
+                             f"expected one of {KERNELS} — "
+                             f"{_matrix_help()}")
+        if not 1 <= self.granularity <= MAX_GRANULARITY:
+            raise ValueError(
+                f"bad granularity {self.granularity!r}; expected an int in "
+                f"[1, {MAX_GRANULARITY}] — {_matrix_help()}")
 
     @property
     def persistent(self) -> bool:
         return self.kernel == "persistent"
 
     def __str__(self) -> str:
-        return f"{self.topology}.{self.kernel}"
+        base = f"{self.topology}.{self.kernel}"
+        return base if self.granularity == 1 else \
+            f"{base}.g{self.granularity}"
 
 
-#: every policy combination, row-major over (topology, kernel)
+#: every (topology, kernel) combination at the default granularity,
+#: row-major — the finite slice of the matrix tests and CLIs enumerate
+#: (granularity is unbounded; name a cell with a ``.g<width>`` suffix).
 POLICY_GRID: Tuple[ExecutionPolicy, ...] = tuple(
     ExecutionPolicy(t, k) for t in TOPOLOGIES for k in KERNELS
 )
 
 
 def parse_policy(text: str) -> ExecutionPolicy:
-    """Parse ``"fused.discrete"``-style policy names (CLI / cache keys)."""
+    """Parse ``"fused.discrete"`` / ``"sharded.persistent.g4"``-style policy
+    names (CLI / cache keys).  The granularity segment is optional and
+    defaults to 1, so pre-granularity policy strings parse unchanged."""
     parts = text.split(".")
-    if len(parts) != 2:
+    if len(parts) not in (2, 3):
         raise ValueError(
             f"bad policy {text!r}; expected '<topology>.<kernel>' like "
-            f"'single.persistent'")
-    return ExecutionPolicy(parts[0], parts[1])
+            f"'single.persistent' or '<topology>.<kernel>.g<width>' like "
+            f"'sharded.persistent.g4' — {_matrix_help()}")
+    granularity = 1
+    if len(parts) == 3:
+        seg = parts[2]
+        if not (seg.startswith("g") and seg[1:].isdigit()):
+            raise ValueError(
+                f"bad granularity segment {seg!r} in policy {text!r}; "
+                f"expected 'g<width>' like 'g4' — {_matrix_help()}")
+        granularity = int(seg[1:])
+    return ExecutionPolicy(parts[0], parts[1], granularity)
 
 
 def policy_of(cfg) -> ExecutionPolicy:
@@ -75,6 +118,8 @@ def policy_of(cfg) -> ExecutionPolicy:
     ``topology="auto"`` resolves to ``sharded`` iff ``num_shards > 1``; an
     explicit non-sharded topology with ``num_shards > 1`` is a
     contradiction and raises rather than silently dropping the mesh.
+    ``granularity`` is carried through verbatim (validated against the
+    matrix bounds by :class:`ExecutionPolicy`).
     """
     topology = cfg.topology
     if topology == "auto":
@@ -82,12 +127,15 @@ def policy_of(cfg) -> ExecutionPolicy:
     elif topology != "sharded" and cfg.num_shards > 1:
         raise ValueError(
             f"topology={topology!r} is incompatible with "
-            f"num_shards={cfg.num_shards}; use topology='sharded' (or 'auto')")
+            f"num_shards={cfg.num_shards}; use topology='sharded' (or "
+            f"'auto') — {_matrix_help()}")
     return ExecutionPolicy(topology,
-                           "persistent" if cfg.persistent else "discrete")
+                           "persistent" if cfg.persistent else "discrete",
+                           getattr(cfg, "granularity", 1))
 
 
 def config_for(cfg, policy: ExecutionPolicy):
     """A config whose resolved policy is ``policy`` (other axes unchanged)."""
     return dataclasses.replace(cfg, topology=policy.topology,
-                               persistent=policy.persistent)
+                               persistent=policy.persistent,
+                               granularity=policy.granularity)

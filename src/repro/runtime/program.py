@@ -14,7 +14,8 @@ replica-merge adapter per engine.  An ``AtosProgram`` packages all of that
     stop(state)               -> optional convergence predicate
     empty_means_done          -> does a drained queue end the run?
     merge                     -> per-field replica-merge spec (sharded runs)
-    task_vertex(task)         -> vertex id (ownership/routing/stealing)
+    task_vertex(task)         -> head vertex id (ownership/routing/stealing)
+    task_width(task)          -> chunk width (vertex-denominated occupancy)
     result(state), work(state), ideal_work
 
 The body builders receive a :class:`ProgramContext` describing *where* the
@@ -66,6 +67,7 @@ class ProgramContext(NamedTuple):
     shard: Any = None            # traced device index | None
     num_shards: int = 1
     axis_name: Optional[str] = None
+    granularity: int = 1         # max chunk width G (core/task.py)
 
     @property
     def sharded(self) -> bool:
@@ -74,6 +76,11 @@ class ProgramContext(NamedTuple):
 
 def identity_task_vertex(items: jax.Array) -> jax.Array:
     return items
+
+
+def unit_task_width(items: jax.Array) -> jax.Array:
+    """Default ``task_width``: every task is one vertex wide (G = 1)."""
+    return jnp.ones(jnp.asarray(items).shape, jnp.int32)
 
 
 # ------------------------------------------------------------- merge rules
@@ -164,8 +171,17 @@ class AtosProgram:
     #: so ignore queue size" inference (DESIGN.md section 11).
     empty_means_done: bool = True
     merge: MergeSpec = "sum_delta"
+    #: task -> *head* vertex id; with chunked tasks (core/task.py) routing,
+    #: ownership, and steal accounting all key off the chunk head (chunk
+    #: formation guarantees every member shares the head's owner).
     task_vertex: Callable[[jax.Array], jax.Array] = identity_task_vertex
+    #: task -> chunk width in vertices; drives vertex-denominated queue
+    #: occupancy, fairness quotas, and steal plans (DESIGN.md section 12).
+    task_width: Callable[[jax.Array], jax.Array] = unit_task_width
     work: Optional[Callable[[Any], jax.Array]] = None
+    #: optional state -> chunks split by the formation threshold (the
+    #: granularity dial's schedule-deterministic meter; see WorkCounter)
+    splits: Optional[Callable[[Any], jax.Array]] = None
     ideal_work: int = 0
     #: capacity hint when the caller does not size the queue explicitly
     default_queue_capacity: int = 1024
@@ -186,6 +202,11 @@ class AtosProgram:
         if self.work is None:
             return 0
         return int(self.work(state))
+
+    def splits_of(self, state) -> int:
+        if self.splits is None:
+            return 0
+        return int(self.splits(state))
 
     # ----------------------------------------------------- legacy adapters
     @property

@@ -5,7 +5,7 @@ tasks, pluggable fairness policies, backpressure/admission control, and a
 SchedulerConfig autotuner implementing the paper's selection guidelines.
 """
 from .autotune import (Autotuner, BACKEND_GRID, DEFAULT_CANDIDATES,
-                       TOPOLOGY_GRID, graph_class)
+                       GRANULARITY_GRID, TOPOLOGY_GRID, graph_class)
 from .encoding import (MAX_JOBS, PAYLOAD_BITS, pack, unpack_job,
                        unpack_natural, unzigzag, zigzag)
 from .engine import (Job, ServerResult, ServerStats, TaskServer,
@@ -15,8 +15,8 @@ from .policies import (FairnessPolicy, LongestQueueFirst, RoundRobin,
                        WeightedShare, make_policy)
 
 __all__ = [
-    "Autotuner", "BACKEND_GRID", "DEFAULT_CANDIDATES", "TOPOLOGY_GRID",
-    "graph_class",
+    "Autotuner", "BACKEND_GRID", "DEFAULT_CANDIDATES", "GRANULARITY_GRID",
+    "TOPOLOGY_GRID", "graph_class",
     "MAX_JOBS", "PAYLOAD_BITS", "pack", "unpack_job", "unpack_natural",
     "unzigzag", "zigzag",
     "Job", "ServerResult", "ServerStats", "TaskServer", "serve_sequential",

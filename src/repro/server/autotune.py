@@ -6,8 +6,8 @@ when rounds are few and fat; more workers / larger FETCH_SIZE for
 heavy-tailed frontiers, narrow wavefronts for meshes.  Instead of shipping
 those guidelines as prose, the autotuner *measures* a small candidate grid
 over ``SchedulerConfig = (persistent, num_workers, fetch_size, backend,
-topology)`` on a calibration workload and caches the winner per
-``(algorithm, graph_class)`` (DESIGN.md section 8).
+topology, granularity)`` on a calibration workload and caches the winner
+per ``(algorithm, graph_class)`` (DESIGN.md section 8).
 
 The fourth axis, ``backend`` (DESIGN.md section 9), selects the kernel
 implementation — jnp reference vs the Pallas TPU kernels
@@ -24,6 +24,15 @@ bit-identical results, so — like the backend — the tuner may pick freely on
 wall time.  ``sharded`` is excluded from the default grid (it needs a
 device mesh and competes on capacity, not calibration wall time) but tuned
 caches that record it parse fine.
+
+The sixth axis, ``granularity`` (DESIGN.md section 12), is the paper's
+task-parallel granularity control: the maximum chunk width a queue slot
+carries (core/task.py).  Results are preserved at every width (exact for
+BFS/coloring, eps-converged for PageRank), so the tuner again picks on
+wall time — coarse chunks tend to win on mesh-like graphs (fewer rounds,
+uniform degree-sums) and fine chunks on scale-free ones (hub-bearing
+chunks fight the load-balancing budget); the measured grid turns that
+guideline into a cached decision.
 
 Graph class is the paper's two-regime split: ``scale_free`` (heavy-tailed
 degrees, low diameter) vs ``mesh`` (bounded degree, high diameter), decided
@@ -75,13 +84,22 @@ BACKEND_GRID: Tuple[str, ...] = ("jnp", "pallas")
 #: not have, and its win condition is capacity, not wall time.
 TOPOLOGY_GRID: Tuple[str, ...] = ("single", "fused")
 
-#: full candidate grid: every launch shape crossed with every backend and
-#: every topology.  The single-topology jnp block keeps ``topology="auto"``
-#: (which resolves to ``single`` off-mesh) and comes first so
-#: ``DEFAULT_CANDIDATES[0] == SchedulerConfig()``.
+#: the searched task granularities (DESIGN.md section 12) — the sixth grid
+#: axis.  Chunk width is a results-preserving scheduling knob (BFS and
+#: coloring are exact at every G, PageRank converges to the same eps), so
+#: like backend and topology the tuner picks on wall time alone; the grid
+#: stays small because each extra width multiplies the calibration budget.
+GRANULARITY_GRID: Tuple[int, ...] = (1, 4)
+
+#: full candidate grid: every launch shape crossed with every backend,
+#: topology, and granularity.  The granularity-1 single-topology jnp block
+#: keeps ``topology="auto"`` (which resolves to ``single`` off-mesh) and
+#: comes first so ``DEFAULT_CANDIDATES[0] == SchedulerConfig()``.
 DEFAULT_CANDIDATES: Tuple[SchedulerConfig, ...] = tuple(
     dataclasses.replace(c, backend=b,
-                        topology="auto" if t == "single" else t)
+                        topology="auto" if t == "single" else t,
+                        granularity=g)
+    for g in GRANULARITY_GRID
     for t in TOPOLOGY_GRID
     for b in BACKEND_GRID
     for c in _BASE_GRID
@@ -105,13 +123,17 @@ def _config_key(cfg: SchedulerConfig) -> str:
     # stay valid and their trials comparable with new single candidates.
     if topology != "single":
         key += f"|topology={topology}"
+    # likewise the default granularity 1 (pre-granularity caches)
+    if cfg.granularity != 1:
+        key += f"|granularity={cfg.granularity}"
     return key
 
 
 def _config_dict(cfg: SchedulerConfig) -> dict:
     return {"num_workers": cfg.num_workers, "fetch_size": cfg.fetch_size,
             "persistent": cfg.persistent, "backend": cfg.backend,
-            "topology": policy_of(cfg).topology}
+            "topology": policy_of(cfg).topology,
+            "granularity": cfg.granularity}
 
 
 def _load_topology(stored: Optional[str]) -> str:
@@ -121,14 +143,15 @@ def _load_topology(stored: Optional[str]) -> str:
 
 
 def _config_from_dict(d: dict) -> SchedulerConfig:
-    # cache entries written before the backend / topology axes existed lack
-    # those fields; they were measured on the jnp reference's single
-    # topology.
+    # cache entries written before the backend / topology / granularity
+    # axes existed lack those fields; they were measured on the jnp
+    # reference's single topology at the fine (width-1) granularity.
     return SchedulerConfig(num_workers=int(d["num_workers"]),
                            fetch_size=int(d["fetch_size"]),
                            persistent=bool(d["persistent"]),
                            backend=str(d.get("backend", "jnp")),
-                           topology=_load_topology(d.get("topology")))
+                           topology=_load_topology(d.get("topology")),
+                           granularity=int(d.get("granularity", 1)))
 
 
 def _default_runner(algorithm: str, graph: CSRGraph,
@@ -289,7 +312,8 @@ class Autotuner:
 
 def _parse_config_key(key: str) -> SchedulerConfig:
     # pre-backend caches wrote 3-field keys, pre-topology caches 4-field
-    # ones; those runs used the jnp path's single topology.
+    # ones, pre-granularity caches omit the granularity segment; those runs
+    # used the jnp path's single topology at width-1 granularity.
     kind, workers, fetch, *rest = key.split("|")
     extras = dict(part.split("=", 1) for part in rest)
     return SchedulerConfig(
@@ -298,4 +322,5 @@ def _parse_config_key(key: str) -> SchedulerConfig:
         persistent=(kind == "persistent"),
         backend=extras.get("backend", "jnp"),
         topology=_load_topology(extras.get("topology")),
+        granularity=int(extras.get("granularity", 1)),
     )

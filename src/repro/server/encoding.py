@@ -54,13 +54,33 @@ def unpack_natural(packed: jax.Array) -> jax.Array:
     return unzigzag(jnp.asarray(packed, jnp.int32) & PAYLOAD_MASK)
 
 
-def check_job_fits(job_id: int, num_vertices: int) -> None:
-    """Host-side admission validation: the encoding must be lossless."""
+def packed_width(task_width):
+    """Lift a *natural*-task chunk-width function (core/task.py) to this
+    module's packed wire format — the one place the natural-vs-packed width
+    contract lives (used by both the fused QueueOps pop quota and the
+    engine's lane-load accounting)."""
+    return lambda p: task_width(unpack_natural(p))
+
+
+def check_job_fits(job_id: int, num_vertices: int,
+                   granularity: int = 1) -> None:
+    """Host-side admission validation: the encoding must be lossless.
+
+    ``granularity > 1`` tasks are bit-packed ``(vertex, width)`` chunk
+    codes (core/task.py), so the payload must absorb the vertex id shifted
+    by the codec's width bits — each doubling of the chunk width halves the
+    largest admissible graph.
+    """
+    from ..core.task import ChunkCodec  # lazy: server<->core layering
+
     if not (0 <= job_id < MAX_JOBS):
         raise ValueError(f"job_id {job_id} out of range [0, {MAX_JOBS})")
-    # coloring's natural tasks reach ±(n+1); BFS/PageRank stay in [0, n)
-    if num_vertices + 1 > MAX_NATURAL:
+    # coloring's natural tasks reach ±(task+1), where task is the raw
+    # vertex id at granularity 1 and a packed chunk code beyond
+    max_code = ChunkCodec(granularity).max_code(num_vertices + 1)
+    if max_code + 1 > MAX_NATURAL:
         raise ValueError(
-            f"graph too large for {PAYLOAD_BITS}-bit payload: "
-            f"n={num_vertices} > {MAX_NATURAL - 1}"
+            f"graph too large for {PAYLOAD_BITS}-bit payload at "
+            f"granularity {granularity}: n={num_vertices} needs chunk codes "
+            f"up to {max_code + 1} > {MAX_NATURAL - 1}"
         )

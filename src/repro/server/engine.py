@@ -41,6 +41,7 @@ from ..core.queue import MultiQueue, make_multiqueue
 from ..core.scheduler import SchedulerConfig, wavefront_step
 from ..runtime.api import fused_lane_ops
 from .encoding import MAX_JOBS, pack
+from .encoding import packed_width as encoding_packed_width
 from .jobs import JobRegistry, JobSpec, Program
 from .policies import FairnessPolicy, make_policy
 
@@ -59,6 +60,9 @@ class Job:
     lane: int = -1
     state: Any = None
     counters: Any = None           # device int32[2]: (items, mismatches)
+    #: packed-wire chunk-width fn (encoding.packed_width), built once at
+    #: admission; None when the program is width-1 or width-agnostic
+    width_of: Any = None
     stopped: bool = False
     telemetry: Optional[JobTelemetry] = None
     result: Optional[np.ndarray] = None
@@ -169,7 +173,7 @@ class TaskServer:
                 biggest = max(biggest, 8 * n)
         return biggest
 
-    def _step_for(self, f, stop, W: int, backend: str):
+    def _step_for(self, f, stop, W: int, backend: str, task_width=None):
         """One compiled scheduler step per distinct wavefront body.
 
         The pop->body->push spine is the shared
@@ -191,7 +195,9 @@ class TaskServer:
         cache = self.registry.step_cache
         # function objects as keys: no id-reuse after GC; backend is part of
         # the key so jnp- and pallas-backed servers never share a step.
-        key = (f, stop, W, backend)
+        # task_width switches the pop quota to vertex units (granularity >
+        # 1, DESIGN.md section 12), so it distinguishes executables too.
+        key = (f, stop, W, backend, task_width)
         if key not in cache:
             @jax.jit
             def step(mq, lane_id, state, counters, quota, job_id):
@@ -199,7 +205,8 @@ class TaskServer:
                 # scheduler step instead of a shower of eager slice ops.
                 aux = {}
                 ops = fused_lane_ops(W, backend, lane_id, job_id,
-                                     quota=quota, aux=aux)
+                                     quota=quota, aux=aux,
+                                     task_width=task_width)
                 # always_run_body: a granted lane advances even on a
                 # zero-valid pop (PageRank's in-body rescan must tick).
                 mq, state, _, n_valid = wavefront_step(
@@ -234,10 +241,15 @@ class TaskServer:
         if job.program is None:
             job.program = self.registry.build(
                 job.spec, job.job_id, cfg.wavefront, cfg.num_workers,
-                lane_capacity, backend=cfg.backend)
+                lane_capacity, backend=cfg.backend,
+                granularity=cfg.granularity,
+                split_threshold=cfg.split_threshold)
         prog = job.program
         job.state, seeds = prog.init()
         job.counters = jnp.zeros((2,), jnp.int32)
+        job.width_of = (encoding_packed_width(prog.task_width)
+                        if cfg.granularity > 1 and prog.task_width is not None
+                        else None)
         job.stopped = False
         job.lane = lane
         job.status = "active"
@@ -410,15 +422,37 @@ class TaskServer:
             backpressured = bool(boosted.any())
             prev_dropped = dropped_now
 
-            quotas = self.policy.allocate(sizes, weights, boosted, W)
+            # -- quota allocation: slot-denominated at granularity 1
+            # (bit-for-bit the pre-granularity behavior); vertex-denominated
+            # beyond (DESIGN.md section 12) — lane occupancy is chunk-width
+            # weighted and the round budget is the wavefront's vertex
+            # capacity W x G, so a coarse-chunk tenant is charged for the
+            # vertices it actually advances, not the slots it occupies.
+            granular = cfg.granularity > 1
+            if granular:
+                # one eager ring scan per occupied coarse lane per round
+                # (widths live in the task bits; empty lanes are free).
+                # Fine enough for the serving loop's O(lanes) host work —
+                # an incremental load tracker would save the scan but put
+                # a second copy of the occupancy invariant at risk.
+                loads = sizes.copy()
+                for lane, job in lane_owner.items():
+                    if job.width_of is not None and sizes[lane] > 0:
+                        loads[lane] = int(
+                            mq.lane(lane).vertex_size(job.width_of))
+                quotas = self.policy.allocate(loads, weights, boosted,
+                                              W * cfg.granularity)
+            else:
+                quotas = self.policy.allocate(sizes, weights, boosted, W)
 
             # -- fused wavefront: every granted lane advances this round
             for lane, job in lane_owner.items():
                 prog = job.program
                 quota = int(quotas[lane])
                 if quota > 0:
-                    step = self._step_for(prog.wavefront_fn, prog.stop, W,
-                                          cfg.backend)
+                    step = self._step_for(
+                        prog.wavefront_fn, prog.stop, W, cfg.backend,
+                        task_width=prog.task_width if granular else None)
                     mq, job.state, job.counters, stopped = step(
                         mq, lane, job.state, job.counters, quota,
                         job.job_id)

@@ -88,6 +88,10 @@ class Program:
     #: a drained lane does NOT finish the job — the engine keeps serving
     #: its on_empty refills until stop/max_rounds (DESIGN.md section 11).
     empty_means_done: bool = True
+    #: mirrors AtosProgram.task_width (natural task -> chunk width): feeds
+    #: the engine's vertex-denominated lane loads and pop quotas when the
+    #: server runs at granularity > 1 (DESIGN.md section 12).
+    task_width: Optional[Callable] = None
 
 
 # init-only params: they shape a job's initial state but NOT its wavefront
@@ -132,9 +136,10 @@ class JobRegistry:
 
     def build(self, spec: JobSpec, job_id: int, wavefront: int,
               num_workers: int, lane_capacity: int,
-              backend: str = "jnp") -> Program:
+              backend: str = "jnp", granularity: int = 1,
+              split_threshold: int = 0) -> Program:
         graph = self.graph(spec.graph)
-        check_job_fits(job_id, graph.num_vertices)
+        check_job_fits(job_id, graph.num_vertices, granularity=granularity)
         if num_workers <= 0 or wavefront % num_workers:
             # the reconstructed config must reproduce the engine's wavefront
             # exactly — a silent floor-division here would size the kernel
@@ -144,12 +149,14 @@ class JobRegistry:
                 f"({num_workers}) x fetch_size")
         cfg = SchedulerConfig(num_workers=num_workers,
                               fetch_size=wavefront // num_workers,
-                              backend=backend)
+                              backend=backend, granularity=granularity,
+                              split_threshold=split_threshold)
         kernel_params = tuple(sorted(
             (k, v) for k, v in spec.params.items()
             if k not in _INIT_ONLY[spec.algorithm]))
         key = (spec.algorithm, spec.graph, kernel_params,
-               wavefront, num_workers, backend)
+               wavefront, num_workers, backend, granularity,
+               split_threshold)
         if key not in self._kernels:
             # one AtosProgram per kernel key; its body, built for the fused
             # execution context, is the shared (init-independent) kernel.
@@ -157,13 +164,15 @@ class JobRegistry:
                 spec.algorithm, graph, cfg, params=dict(kernel_params),
                 queue_capacity=lane_capacity)
             ctx = ProgramContext(wavefront=wavefront,
-                                 num_workers=num_workers, backend=backend)
+                                 num_workers=num_workers, backend=backend,
+                                 granularity=granularity)
             self._kernels[key] = dict(
                 f=prog.body(graph, ctx),
                 on_empty=prog.on_empty(graph, ctx),
                 stop=prog.stop, result=prog.result,
                 ideal=prog.ideal_work,
-                empty_means_done=prog.empty_means_done)
+                empty_means_done=prog.empty_means_done,
+                task_width=prog.task_width)
         k = self._kernels[key]
         # a full-params program supplies the per-job init (never cached) —
         # and validates init-only params like the BFS source at build time.
@@ -178,4 +187,5 @@ class JobRegistry:
             work=lambda s: s.counter.work,
             ideal_work=k["ideal"],
             empty_means_done=k["empty_means_done"],
+            task_width=k["task_width"],
         )

@@ -9,8 +9,10 @@ mesh in lockstep until the global drain ends.  Fully testable on CPU via
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
 
 Since the runtime layer (DESIGN.md section 11) the driver consumes the
-unified :class:`~repro.runtime.program.AtosProgram`; ``ShardProgram`` and
-``build_program`` here are deprecation shims over it.
+unified :class:`~repro.runtime.program.AtosProgram`; program construction
+lives in :mod:`repro.runtime` (``build_program``), and the one-PR
+deprecation shim that used to forward it from here (``shard/programs.py``)
+is gone.
 """
 from .driver import (ShardCounters, ShardRunStats, discrete_run_sharded,
                      persistent_run_sharded, run_sharded)
@@ -18,7 +20,6 @@ from .exchange import (LANE_LOCAL, LANE_STOLEN, NUM_LANES, pop_wavefront,
                        route_tasks)
 from .partition import (ShardedCSR, block_bounds, block_size, owner_of,
                         partition_graph, split_seeds)
-from .programs import ShardProgram, build_program, delta_psum
 from .steal import plan_donations, rebalance
 
 __all__ = [
@@ -27,6 +28,20 @@ __all__ = [
     "LANE_LOCAL", "LANE_STOLEN", "NUM_LANES", "pop_wavefront", "route_tasks",
     "ShardedCSR", "block_bounds", "block_size", "owner_of",
     "partition_graph", "split_seeds",
-    "ShardProgram", "build_program", "delta_psum",
     "plan_donations", "rebalance",
 ]
+
+_MOVED = {
+    "ShardProgram": "repro.runtime.program.AtosProgram",
+    "build_program": "repro.runtime.build_program",
+    "delta_psum": "repro.runtime.program.delta_psum",
+}
+
+
+def __getattr__(name):
+    if name in _MOVED:
+        raise ImportError(
+            f"repro.shard.{name} was a one-PR deprecation shim and has been "
+            f"removed; import {_MOVED[name]} instead (the unified runtime "
+            f"layer, DESIGN.md section 11)")
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

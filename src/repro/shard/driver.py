@@ -4,8 +4,8 @@ Mirrors ``core/scheduler.py`` across a 1-D ``("shard",)`` mesh.  Each device
 carries a queue replica (a 2-lane :class:`~repro.core.queue.MultiQueue`:
 owned tasks + freshly stolen ones) and a full-size state replica that is
 authoritative for its vertex block and reconciled every round by the
-program's merge (``shard/programs.py``).  One **round** is, in lockstep on
-every device:
+program's declarative merge spec (``runtime/program.build_merge``).  One
+**round** is, in lockstep on every device:
 
   1. *steal*    — occupancy-skew-triggered ring donation (shard/steal.py);
   2. *pop*      — one ``num_workers x fetch_size`` wavefront, stolen first;
@@ -56,7 +56,7 @@ def _shard_context(cfg: SchedulerConfig, shard) -> ProgramContext:
     return ProgramContext(wavefront=cfg.wavefront,
                           num_workers=cfg.num_workers, backend=cfg.backend,
                           shard=shard, num_shards=cfg.num_shards,
-                          axis_name=AXIS)
+                          axis_name=AXIS, granularity=cfg.granularity)
 
 
 class ShardCounters(NamedTuple):
@@ -162,6 +162,11 @@ def _make_round(program: AtosProgram, cfg: SchedulerConfig, n: int,
     w = cfg.wavefront
     steal_on = cfg.steal_threshold > 0
     merge = build_merge(program.merge)
+    # chunked tasks (core/task.py): occupancy, donation plans, and the
+    # processed meter all count vertices, so a coarse-chunk shard is charged
+    # for the work it actually holds.  None keeps the slot-denominated
+    # pre-granularity accounting bit-for-bit.
+    width_of = program.task_width if cfg.granularity > 1 else None
 
     def round_step(f, mq: MultiQueue, state, c: ShardCounters):
         me = jax.lax.axis_index(AXIS)
@@ -171,7 +176,7 @@ def _make_round(program: AtosProgram, cfg: SchedulerConfig, n: int,
             mq, donated, triggered = rebalance(
                 mq, axis_name=AXIS, num_shards=s,
                 threshold=cfg.steal_threshold, chunk=cfg.steal_chunk,
-                backend=cfg.backend)
+                backend=cfg.backend, width_of=width_of)
 
         aux = {}
 

@@ -60,23 +60,36 @@ def rebalance(
     threshold: float,
     chunk: int,
     backend: str = "jnp",
+    width_of=None,
 ) -> Tuple[MultiQueue, jax.Array, jax.Array]:
     """One stealing step: donate surplus owned tasks to the ring successor.
 
-    Returns ``(mq', n_donated, triggered)`` for this device.  Runs
-    unconditionally every round (the SPMD loop needs a uniform collective
-    schedule); with an all-zero plan the ppermute carries only sentinels.
+    Returns ``(mq', n_donated, triggered)`` for this device (``n_donated``
+    in vertices).  Runs unconditionally every round (the SPMD loop needs a
+    uniform collective schedule); with an all-zero plan the ppermute
+    carries only sentinels.
+
+    ``width_of`` (a task -> chunk-width function, core/task.py) switches
+    the accounting to vertex units: occupancies are chunk-width weighted,
+    the donation plan moves *work* rather than slots, and the quota'd pop
+    donates whole chunks only — a chunk is never split in flight, so the
+    thief's halo expansion and the ownership meter stay exact.
     """
-    my_size = mq.lane_sizes()[LANE_LOCAL] + mq.lane_sizes()[LANE_STOLEN]
+    loads = mq.lane_loads(width_of)
+    my_size = loads[LANE_LOCAL] + loads[LANE_STOLEN]
     sizes = jax.lax.all_gather(my_size, axis_name)
     give = plan_donations(sizes, threshold, chunk)
     me = jax.lax.axis_index(axis_name)
     k = give[me]
 
-    items, valid, mq = mq.pop_lane(LANE_LOCAL, chunk, quota=k)
+    items, valid, mq = mq.pop_lane(LANE_LOCAL, chunk, quota=k,
+                                   width_of=width_of)
     buf = jnp.where(valid, items, EMPTY)
     perm = [(i, (i + 1) % num_shards) for i in range(num_shards)]
     recv = jax.lax.ppermute(buf, axis_name, perm=perm)
     mq = mq.push(LANE_STOLEN, recv, recv != EMPTY, backend=backend)
-    n_donated = jnp.sum(valid.astype(jnp.int32))
+    if width_of is None:
+        n_donated = jnp.sum(valid.astype(jnp.int32))
+    else:
+        n_donated = jnp.sum(jnp.where(valid, width_of(items), 0))
     return mq, n_donated, jnp.any(give > 0)

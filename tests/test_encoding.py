@@ -70,6 +70,16 @@ def test_check_job_fits_boundaries():
         check_job_fits(-1, 16)
 
 
+def test_check_job_fits_granularity_shrinks_the_graph_bound():
+    """Chunk codes are vertex ids shifted by the codec's width bits, so each
+    doubling of the granularity roughly halves the admissible graph."""
+    check_job_fits(0, (MAX_NATURAL >> 2) - 2, granularity=4)
+    with pytest.raises(ValueError, match="granularity 4"):
+        check_job_fits(0, MAX_NATURAL - 1, granularity=4)
+    # granularity 1 keeps the original boundary exactly
+    check_job_fits(0, MAX_NATURAL - 1, granularity=1)
+
+
 def test_zigzag_boundary_bijection():
     t = jnp.asarray([0, -1, 1, MAX_NATURAL, -MAX_NATURAL,
                      -(MAX_NATURAL + 1)], jnp.int32)

@@ -120,6 +120,117 @@ def test_multiqueue_round_robin_fairness(num_lanes, per_lane, pops):
             assert max(served) - min(served) <= 1
 
 
+# ---------------------------------------------- quota'd pops (pop_upto)
+@settings(max_examples=200, deadline=None)
+@given(st.lists(st.tuples(st.sampled_from(["push", "pop"]),
+                          st.integers(0, 7), st.integers(-1, 12)),
+                max_size=40))
+def test_pop_upto_quota_matches_deque_model(ops):
+    """pop_upto(n, quota) must serve exactly min(n, quota, size) items in
+    FIFO order for *every* quota — 0, negative, above the occupancy, and
+    across wraparound.  EMPTY-sentinel padding must never leak as valid."""
+    cap = 8
+    q = make_queue(cap)
+    model = collections.deque()
+    counter = 0
+    for kind, n, quota in ops:
+        if kind == "push":
+            vals = list(range(counter, counter + n))
+            counter += n
+            q = q.push_dense(jnp.asarray(vals, dtype=jnp.int32)) if n else q
+            for v in vals:
+                if len(model) < cap:
+                    model.append(v)
+        else:
+            if n == 0:
+                continue
+            items, valid, q = q.pop_upto(n, quota)
+            got = [int(x) for x, v in zip(np.asarray(items),
+                                          np.asarray(valid)) if v]
+            want = [model.popleft()
+                    for _ in range(min(n, max(quota, 0), len(model)))]
+            assert got == want
+            # invalid lanes are EMPTY-padded, valid ones never EMPTY
+            lanes = np.asarray(items)
+            assert (lanes[~np.asarray(valid)] == int(EMPTY)).all()
+            assert (lanes[np.asarray(valid)] != int(EMPTY)).all()
+        assert int(q.size) == len(model)
+
+
+@settings(max_examples=150, deadline=None)
+@given(st.lists(st.integers(1, 4), min_size=0, max_size=10),
+       st.lists(st.integers(-1, 30), min_size=1, max_size=8))
+def test_pop_upto_vertex_quota_takes_whole_chunk_prefix(widths, quotas):
+    """With ``width_of`` the quota counts vertices: each pop serves the
+    longest FIFO prefix of whole chunks whose summed widths fit the quota
+    (quota 0 or negative pops nothing; a quota beyond the occupancy drains
+    the queue).  Chunks are never split, and the vertex occupancy meter
+    stays consistent throughout — including across ring wraparound."""
+    from repro.core import ChunkCodec
+
+    codec = ChunkCodec(4)
+    cap = 16
+    q = make_queue(cap)
+    model = collections.deque()
+    for i, w in enumerate(widths):
+        q = q.push(codec.encode(jnp.asarray([4 * i]), jnp.asarray([w])),
+                   jnp.asarray([True]))
+        model.append((4 * i, w))
+    for quota in quotas:
+        assert int(q.vertex_size(codec.width)) == sum(w for _, w in model)
+        items, valid, q = q.pop_upto(6, quota, width_of=codec.width)
+        got = [(int(h), int(w)) for h, w, v in
+               zip(np.asarray(codec.head(items)),
+                   np.asarray(codec.width(items)), np.asarray(valid)) if v]
+        want, budget = [], max(quota, 0)
+        while model and len(want) < 6 and model[0][1] <= budget:
+            budget -= model[0][1]
+            want.append(model.popleft())
+        assert got == want
+        # wraparound exercise: re-push one popped chunk to rotate the ring
+        if got:
+            h, w = got[0]
+            q = q.push(codec.encode(jnp.asarray([h]), jnp.asarray([w])),
+                       jnp.asarray([True]))
+            model.append((h, w))
+
+
+def test_pop_upto_quota_edges_unit():
+    q = make_queue(8, jnp.arange(5))
+    items, valid, q1 = q.pop_upto(4, 0)          # quota 0: nothing
+    assert not np.asarray(valid).any()
+    assert int(q1.size) == 5
+    items, valid, q2 = q.pop_upto(4, 99)         # quota > occupancy
+    assert list(np.asarray(items)[np.asarray(valid)]) == [0, 1, 2, 3]
+    items, valid, q3 = q.pop_upto(8, -3)         # negative quota: nothing
+    assert not np.asarray(valid).any()
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.integers(1, 3), st.integers(0, 10),
+       st.lists(st.integers(-1, 9), min_size=1, max_size=6))
+def test_pop_lane_quota_isolates_lanes(num_lanes, per_lane, quotas):
+    """pop_lane's quota must only ever drain the named lane, with the same
+    min(n, quota, size) contract as pop_upto."""
+    mq = make_multiqueue(16, num_lanes)
+    model = {lane: collections.deque() for lane in range(num_lanes)}
+    for lane in range(num_lanes):
+        vals = jnp.arange(per_lane, dtype=jnp.int32) + 100 * lane
+        if per_lane:
+            mq = mq.push(lane, vals, jnp.ones((per_lane,), bool))
+            model[lane].extend(int(v) for v in vals)
+    for i, quota in enumerate(quotas):
+        lane = i % num_lanes
+        items, valid, mq = mq.pop_lane(lane, 4, quota=quota)
+        got = [int(x) for x, v in zip(np.asarray(items),
+                                      np.asarray(valid)) if v]
+        want = [model[lane].popleft()
+                for _ in range(min(4, max(quota, 0), len(model[lane])))]
+        assert got == want
+        assert list(np.asarray(mq.lane_sizes())) == \
+            [len(model[lane]) for lane in range(num_lanes)]
+
+
 @settings(max_examples=50, deadline=None)
 @given(st.integers(1, 4),
        st.lists(st.tuples(st.integers(0, 3), st.integers(0, 12)),

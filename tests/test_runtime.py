@@ -53,6 +53,41 @@ def test_policy_grid_is_complete_and_parses():
         parse_policy("persistent")
 
 
+def test_policy_granularity_axis_parses_and_prints():
+    p = parse_policy("sharded.persistent.g4")
+    assert p == ExecutionPolicy("sharded", "persistent", 4)
+    assert str(p) == "sharded.persistent.g4"
+    # granularity 1 is the default and stays invisible in the name, so
+    # pre-granularity policy strings and cache keys keep round-tripping
+    assert parse_policy("fused.discrete").granularity == 1
+    assert str(ExecutionPolicy("fused", "discrete", 1)) == "fused.discrete"
+    cfg = config_for(SchedulerConfig(), p)
+    assert cfg.granularity == 4
+    assert policy_of(cfg) == p
+
+
+def test_policy_errors_enumerate_the_full_matrix():
+    """Bad policy input must teach the full topology x kernel x granularity
+    matrix (the errors predate the third axis)."""
+    for bad in (lambda: parse_policy("mesh.persistent"),
+                lambda: parse_policy("single.eager"),
+                lambda: parse_policy("single.persistent.q4"),
+                lambda: parse_policy("single"),
+                lambda: ExecutionPolicy("single", "persistent", 0),
+                lambda: policy_of(SchedulerConfig(topology="fused",
+                                                  num_shards=4))):
+        with pytest.raises(ValueError) as e:
+            bad()
+        msg = str(e.value)
+        for cell in ("single.persistent", "single.discrete",
+                     "fused.persistent", "fused.discrete",
+                     "sharded.persistent", "sharded.discrete"):
+            assert cell in msg, (msg, cell)
+        assert "g<width>" in msg
+    with pytest.raises(ValueError, match="granularity"):
+        parse_policy("single.persistent.g0")
+
+
 def test_policy_resolution_from_config():
     assert str(policy_of(SchedulerConfig())) == "single.persistent"
     assert str(policy_of(SchedulerConfig(persistent=False,
@@ -86,50 +121,79 @@ def test_build_program_rejects_unknowns(g_grid):
                       params={"bogus": 1})
 
 
-# ----------------------------------------------- parity: one program, 6 ways
-def _cfg(policy, **kw):
+# ------------------------------- parity: one program, 6 policies x 2 widths
+# The matrix mirrors PR 4's six-cell block with the third (granularity)
+# axis: g=1 is the pre-granularity task stream bit-for-bit, g=4 packs
+# (vertex, width) chunks into the same int32 slots (DESIGN.md section 12).
+GRANULARITIES = (1, 4)
+
+
+def _cfg(policy, granularity=1, **kw):
+    policy = ExecutionPolicy(policy.topology, policy.kernel, granularity)
     return config_for(SchedulerConfig(**kw), policy)
 
 
-def test_bfs_bit_identical_under_all_six_policies(g_rmat):
+@pytest.mark.parametrize("granularity", GRANULARITIES)
+def test_bfs_bit_identical_under_all_six_policies(g_rmat, granularity):
     ref = np.asarray(bfs_bsp(g_rmat, 0)[0])
     for policy in POLICY_GRID:
-        dist, info = bfs_speculative(g_rmat, 0,
-                                     _cfg(policy, num_workers=16))
-        assert (np.asarray(dist) == ref).all(), str(policy)
+        dist, info = bfs_speculative(
+            g_rmat, 0, _cfg(policy, granularity, num_workers=16))
+        assert (np.asarray(dist) == ref).all(), (str(policy), granularity)
         assert info["dropped"] == 0, str(policy)
         assert info["work"] > 0, str(policy)
 
 
-def test_coloring_valid_under_all_six_policies(g_rmat):
+@pytest.mark.parametrize("granularity", GRANULARITIES)
+def test_coloring_valid_under_all_six_policies(g_rmat, granularity):
     # full-width wavefront: rounds stay homogeneous (all-assign or
     # all-detect), so the fused and unfused (sharded) bodies see the same
     # reads and every policy produces the identical coloring.
     W = 2 * g_rmat.num_vertices
     results = {}
     for policy in POLICY_GRID:
-        colors, info = coloring_async(g_rmat, _cfg(policy, num_workers=W))
-        assert validate_coloring(g_rmat, colors), str(policy)
+        colors, info = coloring_async(
+            g_rmat, _cfg(policy, granularity, num_workers=W))
+        assert validate_coloring(g_rmat, colors), (str(policy), granularity)
         results[str(policy)] = np.asarray(colors)
-    base = results["single.persistent"]
+    base = results[str(POLICY_GRID[0])]
     for name, colors in results.items():
-        assert (colors == base).all(), name
+        assert (colors == base).all(), (name, granularity)
 
 
-def test_pagerank_within_eps_under_all_six_policies(g_rmat):
+@pytest.mark.parametrize("granularity", GRANULARITIES)
+def test_pagerank_within_eps_under_all_six_policies(g_rmat, granularity):
     eps = 1e-5
     ref = np.asarray(pagerank_reference(g_rmat, iters=300))
     ranks = {}
     for policy in POLICY_GRID:
-        rank, info = pagerank_async(g_rmat, _cfg(policy, num_workers=16),
-                                    eps=eps)
-        assert np.abs(np.asarray(rank) - ref).max() < 1e-3, str(policy)
+        rank, info = pagerank_async(
+            g_rmat, _cfg(policy, granularity, num_workers=16), eps=eps)
+        assert np.abs(np.asarray(rank) - ref).max() < 1e-3, \
+            (str(policy), granularity)
         assert info["max_residue"] <= eps, str(policy)
         ranks[str(policy)] = np.asarray(rank)
     # the single and fused topologies drive the identical schedule (same
     # pop/push order through one lane), so their ranks agree bitwise.
     for kernel in ("persistent", "discrete"):
         assert (ranks[f"single.{kernel}"] == ranks[f"fused.{kernel}"]).all()
+
+
+def test_granularity_coarsens_the_schedule(g_grid):
+    """The dial does something: on the mesh graph a width-4 PageRank drain
+    takes materially fewer rounds than width-1 (the dense seed frontier and
+    the rotating rescan both ride in chunks), with the same converged
+    ranks.  This is the paper's coarse-tasks-win-on-mesh regime; the
+    opposite regime is pinned by benchmarks/bench_granularity.py."""
+    eps = 1e-5
+    cfgs = {gr: _cfg(POLICY_GRID[1], gr, num_workers=8)
+            for gr in GRANULARITIES}
+    rounds, ranks = {}, {}
+    for gr, cfg in cfgs.items():
+        rank, info = pagerank_async(g_grid, cfg, eps=eps)
+        rounds[gr], ranks[gr] = info["rounds"], np.asarray(rank)
+    assert rounds[4] < rounds[1], rounds
+    assert np.abs(ranks[4] - ranks[1]).max() < 1e-3
 
 
 def test_sharded_info_carries_exchange_telemetry(g_grid):

@@ -32,7 +32,8 @@ import jax.numpy as jnp
 
 from repro.core import SchedulerConfig
 from repro.graph.generators import grid2d, rmat
-from repro.shard import (block_bounds, block_size, build_program, owner_of,
+from repro.runtime import build_program
+from repro.shard import (block_bounds, block_size, owner_of,
                          partition_graph, plan_donations, run_sharded,
                          split_seeds)
 
@@ -205,6 +206,7 @@ def test_multidevice_parity_and_routing():
         from repro.core import SchedulerConfig
         from repro.graph.generators import rmat
         from repro import shard as SH
+        from repro.runtime import build_program
 
         g = rmat(7, edge_factor=8, seed=2)
         n = g.num_vertices
@@ -233,7 +235,7 @@ def test_multidevice_parity_and_routing():
         colors = {}
         for s in (1, 2, 8):
             cfg = SchedulerConfig(num_workers=W, num_shards=s)
-            prog = SH.build_program("coloring", g, cfg)
+            prog = build_program("coloring", g, cfg)
             st, stats = SH.run_sharded(prog, g, cfg)
             colors[s] = np.asarray(st.colors)
             out['color_mis_%d' % s] = stats.mis_routed + stats.dropped

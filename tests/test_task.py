@@ -1,0 +1,224 @@
+"""Packed (vertex, width) chunk tasks — core/task.py (DESIGN.md section 12).
+
+Acceptance bars:
+
+  * the codec is a bijection over its legal (vertex, width) domain, the
+    G = 1 codec is the bit-for-bit identity, and no legal encoding — plain
+    or sign-wrapped (coloring) or server-packed — ever collides with the
+    queue's EMPTY sentinel;
+  * the push-side coalescer forms exactly the aligned, contiguous,
+    threshold-respecting, owner-pure chunks and counts its splits;
+  * chunk expansion (degree-sum LBS + member-row localization) produces
+    the same (src, nbr) edge set as flattening the chunk into width-1
+    tasks, on both kernel backends, bit-identically.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import (ChunkCodec, EMPTY, MAX_GRANULARITY, chunk_seeds,
+                        coalesce_chunks, expand_merge_path, flatten_chunks)
+from repro.core.task import ChunkCodec as _CC
+from repro.graph.generators import grid2d, rmat
+
+
+@pytest.fixture(scope="module")
+def g_mesh():
+    return grid2d(8, 8, seed=0)
+
+
+@pytest.fixture(scope="module")
+def g_sf():
+    return rmat(6, edge_factor=8, seed=3)
+
+
+# ------------------------------------------------------------------- codec
+def test_identity_codec_is_bit_for_bit():
+    c = ChunkCodec(1)
+    assert c.width_bits == 0
+    v = jnp.arange(-4, 100, dtype=jnp.int32)  # negatives: coloring codes
+    assert np.array_equal(np.asarray(c.encode(v, jnp.ones_like(v))),
+                          np.asarray(v))
+    assert np.array_equal(np.asarray(c.head(v)), np.asarray(v))
+    assert (np.asarray(c.width(v)) == 1).all()
+
+
+def test_codec_bounds():
+    with pytest.raises(ValueError, match="granularity"):
+        ChunkCodec(0)
+    with pytest.raises(ValueError, match="granularity"):
+        ChunkCodec(MAX_GRANULARITY + 1)
+    assert ChunkCodec(MAX_GRANULARITY).width_bits == 6
+
+
+def test_roundtrip_and_empty_safety_property():
+    """pack∘unpack is the identity over the legal domain and the encoding
+    can never produce the EMPTY sentinel — raw, sign-wrapped (coloring's
+    ±(task+1)), or server-packed (zigzag payload is non-negative)."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    from repro.server.encoding import pack, unpack_natural
+
+    @settings(max_examples=200, deadline=None)
+    @given(st.integers(1, MAX_GRANULARITY), st.data())
+    def inner(g, data):
+        c = _CC(g)
+        # max vertex id that survives the server payload at this width
+        vmax = min((1 << 20) - 1, (1 << (23 - c.width_bits)) - 2)
+        v = data.draw(st.lists(st.integers(0, vmax), min_size=1,
+                               max_size=32))
+        w = data.draw(st.lists(st.integers(1, g), min_size=len(v),
+                               max_size=len(v)))
+        v = jnp.asarray(v, jnp.int32)
+        w = jnp.asarray(w, jnp.int32)
+        t = c.encode(v, w)
+        assert np.array_equal(np.asarray(c.head(t)), np.asarray(v))
+        assert np.array_equal(np.asarray(c.width(t)), np.asarray(w))
+        assert (np.asarray(t) >= 0).all()          # never EMPTY (< 0)
+        signed = jnp.concatenate([t + 1, -(t + 1)])  # coloring wrap
+        assert (np.asarray(signed) != int(EMPTY)).all()
+        packed = pack(3, t)
+        assert (np.asarray(packed) != int(EMPTY)).all()
+        assert np.array_equal(np.asarray(unpack_natural(packed)),
+                              np.asarray(t))
+
+    inner()
+
+
+# --------------------------------------------------------------- coalescer
+def _decode_all(codec, items, mask):
+    h, w = codec.decode(items)
+    return [(int(a), int(b)) for a, b, m in
+            zip(np.asarray(h), np.asarray(w), np.asarray(mask)) if m]
+
+
+def test_coalesce_forms_aligned_runs(g_mesh):
+    c = ChunkCodec(4)
+    vids = jnp.asarray([0, 1, 2, 3, 8, 9, 12, 20, 22, 23, 7, 7],
+                       jnp.int32)
+    mask = jnp.asarray([True] * 10 + [False] * 2)
+    items, out, splits = coalesce_chunks(vids, mask, c, g_mesh.row_ptr)
+    got = _decode_all(c, items, out)
+    # [0..3] full aligned run; [8,9] partial run; 12 single; [20,22,23]
+    # not contiguous in its window -> three singles; masked lanes dropped
+    assert got == [(0, 4), (8, 2), (12, 1), (20, 1), (22, 1), (23, 1)]
+    assert int(splits) == 0
+    # vertex conservation: widths sum to the number of marked vertices
+    _, w = c.decode(items)
+    assert int(jnp.sum(jnp.where(out, w, 0))) == 10
+
+
+def test_coalesce_split_threshold_counts(g_mesh):
+    """A window over the degree-sum cap degrades to singles and is counted
+    as one split — the granularity dial's engagement meter."""
+    c = ChunkCodec(4)
+    vids = jnp.asarray([0, 1, 2, 3], jnp.int32)
+    mask = jnp.ones((4,), bool)
+    degsum = int(g_mesh.row_ptr[4] - g_mesh.row_ptr[0])
+    items, out, splits = coalesce_chunks(vids, mask, c, g_mesh.row_ptr,
+                                         split_threshold=degsum - 1)
+    assert _decode_all(c, items, out) == [(0, 1), (1, 1), (2, 1), (3, 1)]
+    assert int(splits) == 1
+    items, out, splits = coalesce_chunks(vids, mask, c, g_mesh.row_ptr,
+                                         split_threshold=degsum)
+    assert _decode_all(c, items, out) == [(0, 4)]
+    assert int(splits) == 0
+
+
+def test_coalesce_respects_owner_block(g_mesh):
+    """A run crossing a shard-ownership boundary must not form: routing
+    keys off the chunk head and the owner's CSR slice ends at the block."""
+    c = ChunkCodec(4)
+    vids = jnp.asarray([4, 5, 6, 7], jnp.int32)
+    mask = jnp.ones((4,), bool)
+    items, out, splits = coalesce_chunks(vids, mask, c, g_mesh.row_ptr,
+                                         owner_block=6)
+    assert _decode_all(c, items, out) == [(4, 1), (5, 1), (6, 1), (7, 1)]
+    assert int(splits) == 1
+    items, out, _ = coalesce_chunks(vids, mask, c, g_mesh.row_ptr,
+                                    owner_block=8)
+    assert _decode_all(c, items, out) == [(4, 4)]
+
+
+def test_coalesce_identity_at_g1(g_mesh):
+    c = ChunkCodec(1)
+    vids = jnp.asarray([5, 9, 0, 13], jnp.int32)
+    mask = jnp.asarray([True, False, True, True])
+    items, out, splits = coalesce_chunks(vids, mask, c, g_mesh.row_ptr)
+    assert np.array_equal(np.asarray(items),
+                          np.asarray(jnp.where(mask, vids, 0)))
+    assert np.array_equal(np.asarray(out), np.asarray(mask))
+    assert int(splits) == 0
+
+
+# --------------------------------------------------------------- seeds
+def test_chunk_seeds_greedy_and_bounded(g_mesh):
+    c = ChunkCodec(4)
+    seeds = chunk_seeds(np.arange(10), c, g_mesh.row_ptr)
+    h, w = c.decode(jnp.asarray(seeds))
+    assert [(int(a), int(b)) for a, b in zip(h, w)] == \
+        [(0, 4), (4, 4), (8, 2)]
+    # owner boundary at 6: greedy runs break there
+    seeds = chunk_seeds(np.arange(10), c, g_mesh.row_ptr, owner_block=6)
+    h, w = c.decode(jnp.asarray(seeds))
+    assert [(int(a), int(b)) for a, b in zip(h, w)] == \
+        [(0, 4), (4, 2), (6, 4)]
+    # degree-sum threshold: corner vertex 0 has degree 2, inner ones 3-4
+    deg0 = int(g_mesh.row_ptr[1] - g_mesh.row_ptr[0])
+    deg1 = int(g_mesh.row_ptr[2] - g_mesh.row_ptr[1])
+    seeds = chunk_seeds(np.arange(4), c, g_mesh.row_ptr,
+                        split_threshold=deg0 + deg1)
+    h, w = c.decode(jnp.asarray(seeds))
+    assert int(w[0]) == 2 and int(h[0]) == 0
+    # G = 1: raw vertex ids, untouched
+    assert np.array_equal(chunk_seeds(np.arange(5), ChunkCodec(1),
+                                      g_mesh.row_ptr),
+                          np.arange(5, dtype=np.int32))
+
+
+# ------------------------------------------------------- chunk expansion
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_chunk_expansion_matches_flattened_oracle(g_sf, backend):
+    """Chunk degree-sum LBS + member-row localization covers exactly the
+    edge set of the equivalent width-1 expansion, on both backends."""
+    heads = jnp.asarray([0, 5, 17, 40, 0], jnp.int32)
+    widths = jnp.asarray([4, 3, 1, 4, 1], jnp.int32)
+    valid = jnp.asarray([True, True, True, True, False])
+    budget = 4 * int(jnp.max(g_sf.degrees())) * 4
+    ex = expand_merge_path(heads, valid, g_sf.row_ptr, g_sf.col_idx,
+                           budget, backend=backend, widths=widths,
+                           max_width=4)
+    fv, fm, _ = flatten_chunks(heads, widths, valid, 4)
+    ref = expand_merge_path(fv, fm, g_sf.row_ptr, g_sf.col_idx, budget,
+                            backend=backend)
+    assert int(ex.total) == int(ref.total) > 0
+    got = sorted(zip(np.asarray(ex.src)[np.asarray(ex.valid)],
+                     np.asarray(ex.nbr)[np.asarray(ex.valid)]))
+    want = sorted(zip(np.asarray(ref.src)[np.asarray(ref.valid)],
+                      np.asarray(ref.nbr)[np.asarray(ref.valid)]))
+    assert got == want
+
+
+def test_chunk_expansion_backend_parity(g_sf):
+    heads = jnp.asarray([3, 10, 30], jnp.int32)
+    widths = jnp.asarray([2, 4, 3], jnp.int32)
+    valid = jnp.ones((3,), bool)
+    budget = 256
+    a = expand_merge_path(heads, valid, g_sf.row_ptr, g_sf.col_idx, budget,
+                          backend="jnp", widths=widths, max_width=4)
+    b = expand_merge_path(heads, valid, g_sf.row_ptr, g_sf.col_idx, budget,
+                          backend="pallas", widths=widths, max_width=4)
+    for x, y in zip(a, b):
+        assert np.array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_flatten_chunks_identity_at_width1():
+    heads = jnp.asarray([7, 2, 9], jnp.int32)
+    valid = jnp.asarray([True, False, True])
+    fv, fm, fo = flatten_chunks(heads, jnp.ones((3,), jnp.int32), valid, 1)
+    assert np.array_equal(np.asarray(fv),
+                          np.asarray(jnp.where(valid, heads, 0)))
+    assert np.array_equal(np.asarray(fm), np.asarray(valid))
+    assert np.array_equal(np.asarray(fo), np.arange(3))
