@@ -2,7 +2,7 @@
 
 ``PYTHONPATH=src python -m benchmarks.run [section ...]``
 Sections: table1 table4 figs serving server kernels roofline shard
-granularity
+granularity stream
 (default: all).  Prints ``name,us_per_call,derived`` CSV.
 
 ``--smoke`` instead recomputes the schedule-deterministic counters (round
@@ -28,7 +28,7 @@ def main() -> None:
 
     from . import (bench_figs, bench_granularity, bench_kernels,
                    bench_roofline, bench_server, bench_serving, bench_shard,
-                   bench_table1, bench_table4)
+                   bench_stream, bench_table1, bench_table4)
 
     sections = {
         "table1": bench_table1.run,
@@ -40,6 +40,7 @@ def main() -> None:
         "roofline": bench_roofline.run,
         "shard": bench_shard.run,
         "granularity": bench_granularity.run,
+        "stream": bench_stream.run,
     }
     want = argv or list(sections)
     print("name,us_per_call,derived")

@@ -10,8 +10,11 @@ configurations ``bench_shard`` records in ``BENCH_shard.json`` (BFS over
 the R-MAT and grid graphs, every shard count, steal on/off) and
 ``bench_granularity`` records in ``BENCH_granularity.json`` (PageRank
 ample/tight-budget rounds + formation splits and sharded per-g exchange
-volume, every chunk width) and fails loudly when any recomputed counter
-disagrees with the checked-in value.  CI runs it on every push
+volume, every chunk width) and ``bench_stream`` records in
+``BENCH_stream.json`` (per-delta-batch rounds/work/seed counts for the
+incremental and full-recompute streaming modes, plus the sharded streaming
+parity bit) and fails loudly when any recomputed counter disagrees with
+the checked-in value.  CI runs it on every push
 (``bench-smoke`` job); the full benchmark suite refreshes the JSONs
 deliberately, this guard keeps them honest in between.
 
@@ -29,6 +32,7 @@ from pathlib import Path
 REPO = Path(__file__).resolve().parent.parent
 SHARD_JSON = REPO / "BENCH_shard.json"
 GRANULARITY_JSON = REPO / "BENCH_granularity.json"
+STREAM_JSON = REPO / "BENCH_stream.json"
 
 #: fields of each per-shard-count entry that are schedule-deterministic
 #: (wall_seconds, balances etc. are measurements, not invariants)
@@ -40,6 +44,9 @@ _GRAN_FIELDS = {
     "pagerank_tight": ("rounds", "work", "splits"),
     "bfs_shard": ("rounds", "exchanged_total", "splits"),
 }
+#: schedule-deterministic fields of each streaming per-batch record
+_STREAM_FIELDS = ("rounds", "work", "seeds", "eff")
+_STREAM_SHARD_FIELDS = ("rounds", "work", "exchanged", "parity")
 
 
 def _recompute() -> dict:
@@ -166,12 +173,72 @@ print(json.dumps(out))
     return json.loads(proc.stdout.strip().splitlines()[-1])
 
 
+def _recompute_stream() -> dict:
+    """Re-run bench_stream's deterministic portion (8-device child).
+
+    Imports the stream constants from bench_stream so the guard can never
+    drift from the configs that produced the baseline.
+    """
+    from .bench_stream import (ALGOS, BATCH_SIZE, BATCHES, EDGE_FACTOR,
+                               GRAPH_SEED, SCALE, STREAM_SEED, WORKERS)
+
+    body = f"""
+import os
+os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count=8'
+os.environ.setdefault('JAX_PLATFORMS', 'cpu')
+import json
+import numpy as np
+from repro.core import SchedulerConfig
+from repro.graph.generators import edge_delta_stream, rmat
+from repro.runtime import stream_execute
+
+base = rmat({SCALE}, edge_factor={EDGE_FACTOR}, seed={GRAPH_SEED})
+deltas = edge_delta_stream(base, {BATCHES}, {BATCH_SIZE},
+                           seed={STREAM_SEED})
+cfg = SchedulerConfig(num_workers={WORKERS}, topology='single',
+                      persistent=False)
+out = {{'algorithms': {{}}}}
+for algo, params in {list(ALGOS)!r}:
+    entry = {{}}
+    for mode, incr in (('incremental', True), ('full', False)):
+        res = stream_execute(algo, base, deltas, cfg, params=dict(params),
+                             incremental=incr)
+        entry[mode] = [{{'rounds': r.rounds, 'work': r.work,
+                         'seeds': r.seeds, 'eff': r.effective_ops}}
+                       for r in res.batches]
+    out['algorithms'][algo] = entry
+scfg = SchedulerConfig(num_workers={WORKERS}, topology='sharded',
+                       num_shards=8, persistent=False)
+sres = stream_execute('bfs', base, deltas, scfg, params={{'source': 0}})
+ref = stream_execute('bfs', base, deltas, cfg, params={{'source': 0}})
+out['sharded_bfs'] = {{
+    'rounds': sres.info['rounds'], 'work': sres.info['work'],
+    'exchanged': sres.info['exchanged'],
+    'parity': bool((np.asarray(sres.result)
+                    == np.asarray(ref.result)).all()),
+}}
+print(json.dumps(out))
+"""
+    env = dict(os.environ, PYTHONPATH=os.pathsep.join(
+        [str(REPO / "src")] + ([os.environ["PYTHONPATH"]]
+                               if "PYTHONPATH" in os.environ else [])))
+    proc = subprocess.run([sys.executable, "-c", body], capture_output=True,
+                          text=True, env=env, timeout=1800, cwd=REPO)
+    if proc.returncode != 0:
+        raise RuntimeError(
+            f"stream smoke subprocess failed:\n{proc.stderr[-3000:]}")
+    return json.loads(proc.stdout.strip().splitlines()[-1])
+
+
 def run() -> int:
     """Returns the number of mismatches (0 = pass); prints a report."""
-    missing = [p for p in (SHARD_JSON, GRANULARITY_JSON) if not p.exists()]
+    missing = [p for p in (SHARD_JSON, GRANULARITY_JSON, STREAM_JSON)
+               if not p.exists()]
     if missing:
         for p in missing:
-            section = "shard" if p is SHARD_JSON else "granularity"
+            section = {SHARD_JSON: "shard",
+                       GRANULARITY_JSON: "granularity",
+                       STREAM_JSON: "stream"}[p]
             print(f"smoke: {p.name} missing — run "
                   f"'python -m benchmarks.run {section}' to create the "
                   f"baseline")
@@ -209,12 +276,29 @@ def run() -> int:
                           cell[workload][field],
                           got_cell[workload][field])
 
+    stream_base = json.loads(STREAM_JSON.read_text())
+    stream_fresh = _recompute_stream()
+    for algo, entry in stream_base["algorithms"].items():
+        for mode in ("incremental", "full"):
+            want_rows = entry[mode]["per_batch"]
+            got_rows = stream_fresh["algorithms"][algo][mode]
+            for i, (want, got) in enumerate(zip(want_rows, got_rows)):
+                for field in _STREAM_FIELDS:
+                    check(f"stream/{algo}/{mode}/batch{i}/{field}",
+                          want[field], got[field])
+    for field in _STREAM_SHARD_FIELDS:
+        check(f"stream/sharded_bfs/{field}",
+              stream_base["sharded_bfs"][field],
+              stream_fresh["sharded_bfs"][field])
+
     if mismatches:
         print(f"smoke: {mismatches} counter regression(s) vs "
-              f"{SHARD_JSON.name} / {GRANULARITY_JSON.name}")
+              f"{SHARD_JSON.name} / {GRANULARITY_JSON.name} / "
+              f"{STREAM_JSON.name}")
     else:
         print(f"smoke: OK — all deterministic counters match "
-              f"{SHARD_JSON.name} and {GRANULARITY_JSON.name}")
+              f"{SHARD_JSON.name}, {GRANULARITY_JSON.name} and "
+              f"{STREAM_JSON.name}")
     return mismatches
 
 

@@ -216,6 +216,13 @@ def make_program(graph: CSRGraph, cfg: SchedulerConfig, *,
                                  owner_block=owner_block,
                                  formation_row_ptr=graph.row_ptr)
 
+    def dirty_seeds(applied, state):
+        from ..stream.incremental import bfs_dirty_seeds  # lazy: stream layer
+
+        return bfs_dirty_seeds(applied, state, codec=codec,
+                               split_threshold=threshold,
+                               owner_block=owner_block)
+
     return AtosProgram(
         name="bfs",
         init=lambda: (init_state(graph, source),
@@ -230,6 +237,7 @@ def make_program(graph: CSRGraph, cfg: SchedulerConfig, *,
         splits=lambda s: s.counter.splits,
         ideal_work=n,
         default_queue_capacity=queue_capacity or max(4 * n, 1024),
+        dirty_seeds=dirty_seeds,
     )
 
 

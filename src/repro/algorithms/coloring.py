@@ -251,8 +251,20 @@ def make_program(graph: CSRGraph, cfg: SchedulerConfig, *,
     sign-encoded ±(task+1) chunk codes; ownership and occupancy follow the
     decoded chunk head/width (``task_vertex``/``task_width``).  Colors are
     single-writer per round, so both state fields merge by delta-psum.
+
+    ``params``: ``dirty`` picks the streaming (repro/stream) incremental
+    rule — ``"conflicts"`` (default) keeps carried colors and recolors only
+    the losing endpoints of inserted same-colored edges (valid coloring,
+    minimal work, but a *different* valid coloring than a from-scratch
+    drain); ``"recolor"`` disables the rule, so delta batches trigger the
+    conservative full reseed (bit-identical to from-scratch).
     """
+    dirty = params.pop("dirty", "conflicts")
     reject_unknown_params("coloring", params)
+    if dirty not in ("conflicts", "recolor"):
+        raise ValueError(
+            f"coloring dirty mode must be 'conflicts' or 'recolor', "
+            f"got {dirty!r}")
     n = graph.num_vertices
     max_degree = max_degree_of(graph)
     codec, threshold, owner_block = chunking_for(graph, cfg)
@@ -267,6 +279,13 @@ def make_program(graph: CSRGraph, cfg: SchedulerConfig, *,
     def natural_code(t):
         return jnp.abs(jnp.asarray(t, jnp.int32)) - 1
 
+    def conflict_seeds(applied, state):
+        from ..stream.incremental import coloring_dirty_seeds  # lazy
+
+        return coloring_dirty_seeds(applied, state, codec=codec,
+                                    split_threshold=threshold,
+                                    owner_block=owner_block)
+
     return AtosProgram(
         name="coloring",
         init=lambda: init_state(graph, codec, owner_block, threshold),
@@ -279,6 +298,7 @@ def make_program(graph: CSRGraph, cfg: SchedulerConfig, *,
         splits=lambda s: s.counter.splits,
         ideal_work=n,
         default_queue_capacity=queue_capacity or max(4 * n, 1024),
+        dirty_seeds=conflict_seeds if dirty == "conflicts" else None,
     )
 
 

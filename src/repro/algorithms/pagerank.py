@@ -377,6 +377,14 @@ def make_program(graph: CSRGraph, cfg: SchedulerConfig, *,
         cap = queue_capacity or max(8 * n, 1024)
         seed_count = min(n, max(1, cap // 2))
 
+    def dirty_seeds(applied, state):
+        from ..stream.incremental import pagerank_dirty_seeds  # lazy
+
+        return pagerank_dirty_seeds(applied, state, damping=damping,
+                                    eps=eps, codec=codec,
+                                    split_threshold=threshold,
+                                    owner_block=owner_block)
+
     def init():
         state, seeds = init_state(graph, damping, seed_count=seed_count)
         # the dense seed frontier is the coarsening jackpot: consecutive
@@ -403,6 +411,7 @@ def make_program(graph: CSRGraph, cfg: SchedulerConfig, *,
         splits=lambda s: s.counter.splits,
         ideal_work=n,
         default_queue_capacity=queue_capacity or max(8 * n, 1024),
+        dirty_seeds=dirty_seeds,
     )
 
 

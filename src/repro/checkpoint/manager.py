@@ -33,9 +33,20 @@ def _flatten_with_paths(tree):
 
 
 class CheckpointManager:
-    def __init__(self, directory: str, keep: int = 3):
+    """``prefix`` namespaces the step directories (``<prefix>_<step>/``).
+
+    Retention (``keep``) applies per prefix: a drain-snapshot manager
+    (``prefix="snap"``, repro/stream) and a train-checkpoint manager
+    (default ``"step"``) can share one directory without either's GC
+    clobbering the other's retention window.
+    """
+
+    def __init__(self, directory: str, keep: int = 3, prefix: str = "step"):
+        if not re.fullmatch(r"[A-Za-z][A-Za-z0-9._-]*", prefix):
+            raise ValueError(f"bad checkpoint prefix {prefix!r}")
         self.dir = directory
         self.keep = keep
+        self.prefix = prefix
         os.makedirs(directory, exist_ok=True)
         self._thread: Optional[threading.Thread] = None
 
@@ -57,8 +68,8 @@ class CheckpointManager:
             self._thread = None
 
     def _write(self, step: int, host_tree: Any, orig_tree: Any):
-        tmp = os.path.join(self.dir, f"step_{step}.tmp")
-        final = os.path.join(self.dir, f"step_{step}")
+        tmp = os.path.join(self.dir, f"{self.prefix}_{step}.tmp")
+        final = os.path.join(self.dir, f"{self.prefix}_{step}")
         if os.path.exists(tmp):
             shutil.rmtree(tmp)
         os.makedirs(tmp)
@@ -81,14 +92,14 @@ class CheckpointManager:
     def _gc(self):
         steps = self.all_steps()
         for s in steps[:-self.keep] if self.keep else []:
-            shutil.rmtree(os.path.join(self.dir, f"step_{s}"),
+            shutil.rmtree(os.path.join(self.dir, f"{self.prefix}_{s}"),
                           ignore_errors=True)
 
     # ---------------------------------------------------------- restore
     def all_steps(self):
         steps = []
         for name in os.listdir(self.dir):
-            m = re.fullmatch(r"step_(\d+)", name)
+            m = re.fullmatch(rf"{re.escape(self.prefix)}_(\d+)", name)
             if m and os.path.exists(os.path.join(self.dir, name,
                                                  "manifest.json")):
                 steps.append(int(m.group(1)))
@@ -101,7 +112,7 @@ class CheckpointManager:
     def restore(self, step: int, like: Any, shardings: Any = None) -> Any:
         """Restore into the structure of ``like``; reshard onto ``shardings``
         (same pytree structure) if given — this is the elastic path."""
-        d = os.path.join(self.dir, f"step_{step}")
+        d = os.path.join(self.dir, f"{self.prefix}_{step}")
         with open(os.path.join(d, "manifest.json")) as f:
             manifest = json.load(f)["arrays"]
         paths_like = _flatten_with_paths(like)

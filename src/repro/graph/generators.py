@@ -56,3 +56,65 @@ def erdos(n: int, m: int, seed: int = 0) -> CSRGraph:
     src = rng.integers(0, n, size=m)
     dst = rng.integers(0, n, size=m)
     return from_edges(n, src, dst, symmetrize=True)
+
+
+def edge_delta_stream(graph: CSRGraph, num_batches: int, batch_size: int,
+                      seed: int = 0, insert_frac: float = 0.5) -> list:
+    """Deterministic seeded stream of mixed insert/delete delta batches.
+
+    Walks the evolving *undirected* edge set starting from ``graph``: each
+    batch deletes ``~(1 - insert_frac) * batch_size`` existing pairs
+    (sampled without replacement) and inserts ``~insert_frac * batch_size``
+    currently-absent pairs (rejection-sampled, no self-loops), then emits
+    both directions of every pair as one canonical
+    :class:`~repro.stream.deltas.EdgeDelta` — so replaying the stream keeps
+    the graph symmetric, matching the generators above.  Same
+    ``(graph, num_batches, batch_size, seed, insert_frac)`` -> the same
+    batches, bit for bit (the CI benches and tests rely on this).
+    """
+    from ..stream.deltas import make_delta  # lazy: stream imports graph
+
+    if not 0.0 <= insert_frac <= 1.0:
+        raise ValueError(f"insert_frac must be in [0, 1], got {insert_frac}")
+    n = graph.num_vertices
+    rng = np.random.default_rng(seed)
+    rp = np.asarray(graph.row_ptr, dtype=np.int64)
+    ci = np.asarray(graph.col_idx, dtype=np.int64)
+    src = np.repeat(np.arange(n, dtype=np.int64), np.diff(rp))
+    # undirected pair keys u*n+v with u < v (self-loops never in the CSR)
+    u, v = np.minimum(src, ci), np.maximum(src, ci)
+    present = set((u * n + v).tolist())
+
+    n_ins = int(round(batch_size * insert_frac))
+    n_del = batch_size - n_ins
+    batches = []
+    for _ in range(num_batches):
+        dels = np.empty(0, dtype=np.int64)
+        if n_del and present:
+            pool = np.sort(np.fromiter(present, dtype=np.int64))
+            dels = rng.choice(pool, size=min(n_del, pool.size),
+                              replace=False)
+            present.difference_update(dels.tolist())
+        ins: list = []
+        attempts = 0
+        while len(ins) < n_ins and attempts < 64:
+            a = rng.integers(0, n, size=2 * (n_ins - len(ins)))
+            b = rng.integers(0, n, size=a.size)
+            lo, hi = np.minimum(a, b), np.maximum(a, b)
+            cand = (lo * n + hi)[lo != hi]
+            for k in cand.tolist():
+                if k not in present and len(ins) < n_ins:
+                    present.add(k)
+                    ins.append(k)
+            attempts += 1
+        keys = np.concatenate([dels, np.asarray(ins, dtype=np.int64)])
+        flags = np.concatenate([np.zeros(dels.size, bool),
+                                np.ones(len(ins), bool)])
+        lo, hi = keys // n, keys % n
+        batches.append(make_delta(
+            n,
+            np.concatenate([lo, hi]),
+            np.concatenate([hi, lo]),
+            np.concatenate([flags, flags]),
+        ))
+    return batches

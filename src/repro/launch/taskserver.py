@@ -34,14 +34,27 @@ def build_registry(scale: int, grid_side: int, seed: int) -> JobRegistry:
 
 
 def mixed_specs(n_jobs: int, registry: JobRegistry, eps: float,
-                seed: int, shards: int = 1) -> list[JobSpec]:
+                seed: int, shards: int = 1,
+                stream: int = 0, stream_batch: int = 32,
+                snapshot_every: int = 0, checkpoint_dir: str | None = None,
+                resume: bool = False) -> list[JobSpec]:
     """Round-robin over algorithms x graphs, sources spread over vertices.
 
     With ``shards > 1`` the BFS jobs become sharded single-tenant jobs (the
     exchange-heavy workload benefits most from the mesh) while PageRank and
     coloring stay in the fused multi-tenant rounds — one batch exercising
     both serving modes.
+
+    With ``stream > 0`` the BFS jobs become *streaming* jobs: each gets a
+    deterministic seeded delta log (``graph/generators.edge_delta_stream``,
+    ``stream`` batches of ``stream_batch`` edge ops) committed batch by
+    batch with incremental recompute between drains; snapshot/resume
+    posture per ``snapshot_every`` / ``checkpoint_dir`` / ``resume``
+    (per-job subdirectories under ``checkpoint_dir``).
     """
+    from ..graph.generators import edge_delta_stream
+    from ..stream import StreamSpec
+
     specs = []
     graphs = registry.graph_names
     for i in range(n_jobs):
@@ -53,9 +66,20 @@ def mixed_specs(n_jobs: int, registry: JobRegistry, eps: float,
             params["source"] = (seed + 7919 * i) % n
         elif algorithm == "pagerank":
             params["eps"] = eps
+        stream_spec = None
+        if stream > 0 and algorithm == "bfs":
+            deltas = edge_delta_stream(registry.graph(gname), stream,
+                                       stream_batch, seed=seed + i)
+            job_dir = (f"{checkpoint_dir}/job_{i}"
+                       if checkpoint_dir else None)
+            stream_spec = StreamSpec(
+                deltas=tuple(deltas),
+                snapshot_every=snapshot_every if job_dir else 0,
+                checkpoint_dir=job_dir, resume=resume and job_dir is not None)
         specs.append(JobSpec(algorithm, gname, params,
                              weight=1.0 + (i % 3),
-                             shards=shards if algorithm == "bfs" else 1))
+                             shards=shards if algorithm == "bfs" else 1,
+                             stream=stream_spec))
     return specs
 
 
@@ -80,6 +104,24 @@ def print_telemetry(result) -> None:
     if s.sharded_jobs:
         print(f"sharded phases: {s.sharded_jobs} jobs, "
               f"{s.sharded_rounds} device rounds")
+    if s.streaming_jobs:
+        print(f"streaming phases: {s.streaming_jobs} jobs, "
+              f"{s.stream_batches} delta batches")
+
+
+def print_stream_records(server) -> None:
+    """Per-batch breakdown of every streaming job's drains."""
+    for job in server._jobs:
+        if job.stream_result is None:
+            continue
+        res = job.stream_result
+        print(f"streaming job {job.job_id}: {res.info['batches_run']} "
+              f"batches (incremental={res.info['incremental']})")
+        for r in res.batches:
+            mode = "incr" if r.incremental else "full"
+            print(f"  batch {r.batch:>3} [{mode}] ops={r.effective_ops:>4} "
+                  f"seeds={r.seeds:>5} rounds={r.rounds:>5} "
+                  f"work={r.work:>7}")
 
 
 def main() -> None:
@@ -121,6 +163,25 @@ def main() -> None:
                          "over an N-device ('shard',) mesh (repro/shard); "
                          "needs N visible devices — on CPU set XLA_FLAGS="
                          "--xla_force_host_platform_device_count=N")
+    ap.add_argument("--stream", type=int, default=0, metavar="N",
+                    help="turn the BFS jobs into streaming jobs over N "
+                         "delta batches (repro/stream): each batch commits "
+                         "edge inserts/deletes against the job's graph and "
+                         "incrementally recomputes from the dirty frontier")
+    ap.add_argument("--stream-batch", type=int, default=32, metavar="K",
+                    help="edge operations per delta batch (mixed "
+                         "inserts/deletes, both directions emitted)")
+    ap.add_argument("--snapshot-every", type=int, default=0, metavar="R",
+                    help="write a crash-consistent mid-drain snapshot every "
+                         "R rounds of a streaming drain (0 = batch "
+                         "boundaries only; needs --checkpoint-dir)")
+    ap.add_argument("--checkpoint-dir", default=None,
+                    help="directory for streaming snapshots (per-job "
+                         "subdirectories); enables snapshots and --resume")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume each streaming job from its newest "
+                         "snapshot under --checkpoint-dir (bit-identical "
+                         "to the uninterrupted run)")
     ap.add_argument("--scale", type=int, default=8,
                     help="R-MAT scale (2**scale vertices)")
     ap.add_argument("--grid-side", type=int, default=16)
@@ -142,9 +203,17 @@ def main() -> None:
         from .mesh import require_devices
 
         require_devices(args.shards, purpose=f"--shards {args.shards}")
+    if args.resume and not args.checkpoint_dir:
+        ap.error("--resume requires --checkpoint-dir")
+    if args.snapshot_every and not args.checkpoint_dir:
+        ap.error("--snapshot-every requires --checkpoint-dir")
     registry = build_registry(args.scale, args.grid_side, args.seed)
     specs = mixed_specs(args.jobs, registry, args.eps, args.seed,
-                        shards=args.shards)
+                        shards=args.shards, stream=args.stream,
+                        stream_batch=args.stream_batch,
+                        snapshot_every=args.snapshot_every,
+                        checkpoint_dir=args.checkpoint_dir,
+                        resume=args.resume)
 
     granularity = args.granularity
     if args.exec_policy == "auto":
@@ -171,6 +240,8 @@ def main() -> None:
           f"(policy={args.policy})")
     result = server.run()
     print_telemetry(result)
+    if args.stream > 0:
+        print_stream_records(server)
 
     if args.compare_sequential:
         seq_config = config

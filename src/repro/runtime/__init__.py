@@ -20,7 +20,7 @@ __all__ = [
     "config_for", "parse_policy", "policy_of",
     "AtosProgram", "MERGE_RULES", "ProgramContext", "build_merge",
     "delta_psum", "identity_task_vertex",
-    "ExecutionResult", "execute", "fused_lane_ops",
+    "ExecutionResult", "execute", "fused_lane_ops", "stream_execute",
     "algorithms", "build_program",
 ]
 
@@ -28,6 +28,7 @@ _LAZY = {
     "ExecutionResult": "api",
     "execute": "api",
     "fused_lane_ops": "api",
+    "stream_execute": "api",
     "algorithms": "programs",
     "build_program": "programs",
 }

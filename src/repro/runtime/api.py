@@ -71,32 +71,57 @@ def fused_lane_ops(wavefront: int, backend: str, lane_id, job_id,
     return QueueOps(pop=pop, push=push, size=lambda mq: mq.size)
 
 
-def _run_shared_core(program: AtosProgram, graph, cfg: SchedulerConfig,
-                     policy: ExecutionPolicy, queue_capacity: Optional[int],
-                     trace: Optional[list]):
-    """single / fused topologies: same step core, different QueueOps."""
-    state, seeds = program.init()
+def shared_queue_capacity(program: AtosProgram,
+                          queue_capacity: Optional[int]) -> int:
+    """The single/fused capacity rule — deterministic, so a snapshot restore
+    (repro/stream) rebuilds an identically-shaped queue template."""
+    return queue_capacity or program.default_queue_capacity
+
+
+def _shared_setup(program: AtosProgram, graph, cfg: SchedulerConfig,
+                  policy: ExecutionPolicy, queue_capacity: Optional[int],
+                  *, init=None, queue=None):
+    """Build the drain bundle for the single / fused topologies.
+
+    Returns ``(queue, state, ops, step, cond, dropped_of)`` — everything a
+    driver needs to run :func:`~repro.core.scheduler.wavefront_step` to a
+    fixed point.  ``init=(state, seeds)`` overrides ``program.init()`` (the
+    streaming driver passes the dirty-seed reseed here); ``queue`` bypasses
+    seed placement entirely (snapshot restore hands back a mid-drain queue).
+    """
+    state, seeds = program.init() if init is None else init
     seeds = jnp.asarray(seeds, jnp.int32)
-    capacity = queue_capacity or program.default_queue_capacity
+    capacity = shared_queue_capacity(program, queue_capacity)
     ctx = _context(cfg)
     f = program.body(graph, ctx)
     on_empty = program.on_empty(graph, ctx)
 
     if policy.topology == "single":
-        queue = make_queue(capacity, seeds)
+        if queue is None:
+            queue = make_queue(capacity, seeds)
         ops = taskqueue_ops(cfg)
         dropped_of = lambda q: q.dropped
     else:  # fused: the degenerate one-lane, one-tenant server drain
         from ..server.encoding import check_job_fits, pack
         if graph is not None:
             check_job_fits(0, graph.num_vertices)
-        queue = make_multiqueue(capacity, 1).push(
-            0, pack(0, seeds), jnp.ones(seeds.shape, bool))
+        if queue is None:
+            queue = make_multiqueue(capacity, 1).push(
+                0, pack(0, seeds), jnp.ones(seeds.shape, bool))
         ops = fused_lane_ops(cfg.wavefront, cfg.backend, lane_id=0, job_id=0)
         dropped_of = lambda mq: jnp.sum(mq.lanes.dropped)
 
     cond = continuation(ops, cfg, program.stop, program.empty_means_done)
     step = lambda carry: wavefront_step(f, on_empty, ops, carry)
+    return queue, state, ops, step, cond, dropped_of
+
+
+def _run_shared_core(program: AtosProgram, graph, cfg: SchedulerConfig,
+                     policy: ExecutionPolicy, queue_capacity: Optional[int],
+                     trace: Optional[list]):
+    """single / fused topologies: same step core, different QueueOps."""
+    queue, state, ops, step, cond, dropped_of = _shared_setup(
+        program, graph, cfg, policy, queue_capacity)
     carry0 = (queue, state, jnp.int32(0), jnp.int32(0))
     if policy.persistent:
         queue, state, rounds, processed = persistent_drive(step, cond, carry0)
@@ -161,3 +186,46 @@ def execute(
                             route_width, mesh)
     return _run_shared_core(program, graph, cfg, policy, queue_capacity,
                             trace)
+
+
+def stream_execute(
+    algorithm,
+    graph,
+    deltas,
+    cfg: SchedulerConfig,
+    *,
+    params: Optional[dict] = None,
+    queue_capacity: Optional[int] = None,
+    incremental: bool = True,
+    snapshot_every: int = 0,
+    checkpoint_dir: Optional[str] = None,
+    keep: int = 3,
+    resume: bool = False,
+    route_width: Optional[int] = None,
+    mesh=None,
+    snapshot_hook=None,
+):
+    """Run ``algorithm`` as a long-lived streaming job over a mutating graph.
+
+    Batch 0 drains the base ``graph``; each subsequent batch commits one
+    :class:`~repro.stream.deltas.EdgeDelta` from ``deltas``, re-seeds only
+    the dirtied frontier (the program's ``dirty_seeds`` rule, unless
+    ``incremental=False`` forces the full-recompute baseline), and drains
+    again — under any of the six execution policies ``cfg`` resolves to.
+    ``snapshot_every > 0`` (with ``checkpoint_dir``) writes crash-consistent
+    mid-drain snapshots every that-many rounds; ``resume=True`` continues
+    from the newest one.  ``algorithm`` is a registered program name (the
+    program must be *rebuilt* per batch — its body closes over the graph —
+    so an :class:`AtosProgram` instance is accepted only as a name carrier).
+    Returns a :class:`~repro.stream.driver.StreamResult`.
+    """
+    from ..stream.driver import run_stream  # lazy: stream imports runtime
+
+    if isinstance(algorithm, AtosProgram):
+        algorithm = algorithm.name
+    return run_stream(
+        algorithm, graph, deltas, cfg, params=params,
+        queue_capacity=queue_capacity, incremental=incremental,
+        snapshot_every=snapshot_every, checkpoint_dir=checkpoint_dir,
+        keep=keep, resume=resume, route_width=route_width, mesh=mesh,
+        snapshot_hook=snapshot_hook)

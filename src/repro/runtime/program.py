@@ -16,6 +16,7 @@ replica-merge adapter per engine.  An ``AtosProgram`` packages all of that
     merge                     -> per-field replica-merge spec (sharded runs)
     task_vertex(task)         -> head vertex id (ownership/routing/stealing)
     task_width(task)          -> chunk width (vertex-denominated occupancy)
+    dirty_seeds(delta, state) -> optional incremental re-seed (repro/stream)
     result(state), work(state), ideal_work
 
 The body builders receive a :class:`ProgramContext` describing *where* the
@@ -185,6 +186,15 @@ class AtosProgram:
     ideal_work: int = 0
     #: capacity hint when the caller does not size the queue explicitly
     default_queue_capacity: int = 1024
+    #: optional streaming hook (repro/stream): ``dirty_seeds(applied, state)
+    #: -> (state', seeds)`` re-seeds only the frontier invalidated by a
+    #: committed edge-delta batch.  ``applied`` is a
+    #: :class:`~repro.stream.ingest.AppliedDelta` whose ``new_graph`` is the
+    #: graph this program was built on; ``state`` is the previous drain's
+    #: final state (shapes match: deltas change edges, never the vertex
+    #: count).  ``None`` means "no incremental rule": the stream driver
+    #: falls back to a conservative full reseed via ``init()``.
+    dirty_seeds: Optional[Callable[[Any, Any], Tuple[Any, jax.Array]]] = None
 
     # ------------------------------------------------------------- helpers
     def body(self, graph, ctx: ProgramContext):

@@ -66,6 +66,8 @@ class Job:
     stopped: bool = False
     telemetry: Optional[JobTelemetry] = None
     result: Optional[np.ndarray] = None
+    #: streaming jobs only: the full per-batch StreamResult (repro/stream)
+    stream_result: Any = None
 
 
 @dataclasses.dataclass
@@ -78,6 +80,8 @@ class ServerStats:
     wavefront: int = 0
     sharded_jobs: int = 0          # jobs served as device-wide sharded phases
     sharded_rounds: int = 0        # device rounds spent in those phases
+    streaming_jobs: int = 0        # jobs served as streaming phases
+    stream_batches: int = 0        # delta batches drained in those phases
 
     @property
     def occupancy(self) -> float:
@@ -346,6 +350,60 @@ class TaskServer:
                  job.job_id, sstats.rounds, sstats.exchanged,
                  sstats.donated, sstats.occupancy_balance)
 
+    # ------------------------------------------------------ streaming jobs
+    def _run_streaming(self, job: Job, cfg: SchedulerConfig,
+                       stats: ServerStats) -> None:
+        """Serve one streaming job (``spec.stream``) as a dedicated phase.
+
+        A streaming job mutates its graph between drains, so it cannot
+        share the fused wavefront (every other lane's kernel is compiled
+        against the registry's immutable CSR); like sharded jobs it runs as
+        a serialized phase — ``run_stream`` over the spec's delta log, with
+        the spec's snapshot/resume posture (repro/stream).  ``shards > 1``
+        makes each per-batch drain a device-wide sharded one.
+        """
+        from ..stream.driver import run_stream
+
+        spec = job.spec
+        stream = spec.stream
+        graph = self.registry.graph(spec.graph)
+        scfg = (dataclasses.replace(cfg, num_shards=spec.shards,
+                                    topology="sharded")
+                if spec.shards > 1 else
+                dataclasses.replace(cfg, topology="single"))
+        log.info("streaming job %d (%s on %s): %d delta batches",
+                 job.job_id, spec.algorithm, spec.graph, len(stream.deltas))
+        res = run_stream(
+            spec.algorithm, graph, stream.deltas, scfg,
+            params=dict(spec.params), queue_capacity=self._lane_capacity,
+            incremental=stream.incremental,
+            snapshot_every=stream.snapshot_every,
+            checkpoint_dir=stream.checkpoint_dir, resume=stream.resume)
+        job.result = np.asarray(res.result)
+        job.stream_result = res
+        tel = JobTelemetry(
+            job_id=job.job_id, algorithm=spec.algorithm, graph=spec.graph,
+            wavefront=scfg.wavefront * max(spec.shards, 1),
+            ideal_work=0)
+        tel.admitted_round = tel.completed_round = 0
+        tel.rounds_active = res.info["rounds"]
+        tel.items_processed = res.info["processed"]
+        tel.work = res.info["work"]
+        tel.dropped = res.info["dropped"]
+        job.telemetry = tel
+        if self.strict_drops and tel.dropped > 0:
+            raise RuntimeError(
+                f"streaming job {job.job_id} ({spec.algorithm} on "
+                f"{spec.graph}) dropped {tel.dropped} tasks to queue "
+                f"overflow — its result would be silently wrong.  Raise "
+                f"lane_capacity (or pass strict_drops=False).")
+        job.status = "done"
+        stats.streaming_jobs += 1
+        stats.stream_batches += len(res.batches)
+        log.info("streaming job %d done: %d batches, %d rounds, work=%d",
+                 job.job_id, len(res.batches), res.info["rounds"],
+                 res.info["work"])
+
     # ------------------------------------------------------------------ run
     def run(self) -> ServerResult:
         """Drain every submitted job; returns per-job results + telemetry.
@@ -360,8 +418,11 @@ class TaskServer:
         stats = ServerStats(wavefront=W)
         t0 = time.perf_counter()
         for job in self._jobs:
-            if (job.status == "pending" and job.spec is not None
-                    and job.spec.shards > 1):
+            if job.status != "pending" or job.spec is None:
+                continue
+            if job.spec.stream is not None:
+                self._run_streaming(job, cfg, stats)
+            elif job.spec.shards > 1:
                 self._run_sharded(job, cfg, stats)
         mq = make_multiqueue(lane_capacity, self.num_lanes)
         pending = deque(j for j in self._jobs if j.status == "pending")

@@ -59,6 +59,12 @@ class JobSpec:
     params: Dict[str, Any] = dataclasses.field(default_factory=dict)
     weight: float = 1.0
     shards: int = 1                # >1 = sharded single-tenant job
+    #: optional :class:`~repro.stream.driver.StreamSpec`: the job is a
+    #: *streaming* job — a delta log is committed batch-by-batch against
+    #: its graph with incremental recompute between drains.  Served as a
+    #: dedicated phase (like sharded jobs), not as a fused lane; combine
+    #: with ``shards > 1`` for a sharded streaming drain.
+    stream: Optional[Any] = None
 
     def __post_init__(self):
         if self.algorithm not in ALGORITHMS:
@@ -68,6 +74,9 @@ class JobSpec:
             raise ValueError("job weight must be positive")
         if self.shards < 1:
             raise ValueError("job shards must be >= 1")
+        if self.stream is not None and not hasattr(self.stream, "deltas"):
+            raise ValueError(
+                "JobSpec.stream must be a repro.stream.StreamSpec")
 
 
 @dataclasses.dataclass(frozen=True)

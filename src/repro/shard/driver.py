@@ -137,6 +137,19 @@ def _make_queues(capacity: int, num_shards: int, seed_buf, seed_counts):
     return MultiQueue(lanes=lanes, rr=jnp.zeros((num_shards,), jnp.int32))
 
 
+def seed_queues(program: AtosProgram, seeds, num_vertices: int,
+                num_shards: int, capacity: int) -> MultiQueue:
+    """Owner-split ``seeds`` into stacked per-device queue replicas.
+
+    Public piece of ``run_sharded``'s setup, used by the streaming driver
+    (repro/stream) to place a dirty-seed frontier — or an empty one, as the
+    snapshot-restore template — without re-running ``program.init()``.
+    """
+    seed_buf, seed_counts = split_seeds(seeds, num_vertices, num_shards,
+                                        task_vertex=program.task_vertex)
+    return _make_queues(capacity, num_shards, seed_buf, seed_counts)
+
+
 def _local_view(tree):
     """Strip the leading per-device axis shard_map leaves on every leaf."""
     return jax.tree.map(lambda x: x[0], tree)
@@ -369,11 +382,20 @@ def run_sharded(
     route_width: Optional[int] = None,
     mesh=None,
     trace: Optional[list] = None,
+    initial_queues: Optional[MultiQueue] = None,
+    initial_state: Any = None,
+    final_queues: Optional[list] = None,
 ) -> Tuple[Any, ShardRunStats]:
     """Drain ``program`` over a ``cfg.num_shards``-device mesh.
 
     Returns ``(final_state, ShardRunStats)``.  The final state is the merged
     (replicated) global state — ``program.result(state)`` is the answer.
+
+    ``initial_state`` / ``initial_queues`` resume a drain from an explicit
+    carry instead of ``program.init()`` (the streaming driver's dirty-seed
+    re-seeds and snapshot restores; build queues via :func:`seed_queues`).
+    ``final_queues``, if a list, receives the stacked end-of-drain queue
+    pytree so a segmented caller can carry it into the next call.
     """
     s = cfg.num_shards
     if mesh is None:
@@ -381,11 +403,14 @@ def run_sharded(
     n = graph.num_vertices
     steal_on = cfg.steal_threshold > 0
     parts = partition_graph(graph, s, halo=steal_on)
-    state0, seeds = program.init()
-    seed_buf, seed_counts = split_seeds(seeds, n, s,
-                                        task_vertex=program.task_vertex)
     capacity = queue_capacity or max(4 * n, 1024)
-    mq0 = _make_queues(capacity, s, seed_buf, seed_counts)
+    if initial_state is None or initial_queues is None:
+        init_state, seeds = program.init()
+        if initial_state is None:
+            initial_state = init_state
+        if initial_queues is None:
+            initial_queues = seed_queues(program, seeds, n, s, capacity)
+    state0, mq0 = initial_state, initial_queues
 
     if cfg.persistent:
         mq_st, state, c_st = persistent_run_sharded(
@@ -411,4 +436,6 @@ def run_sharded(
         per_device_donated=c.donated,
         final_sizes=np.asarray(_queue_sizes(mq_st)),
     )
+    if final_queues is not None:
+        final_queues.append(mq_st)
     return state, stats

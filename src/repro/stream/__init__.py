@@ -1,0 +1,26 @@
+"""Streaming-graph subsystem: delta ingestion, incremental recompute, and
+crash-consistent mid-drain checkpoint/resume (DESIGN.md §13).
+
+Front doors: :func:`repro.runtime.stream_execute` (programmatic),
+``launch/taskserver --stream`` (CLI), ``server/jobs.JobSpec(stream=...)``
+(multi-tenant).  The pieces:
+
+  * :mod:`deltas`      — canonical edge-delta batches (validate + dedup)
+  * :mod:`ingest`      — commit a batch against the CSR / sharded CSR
+  * :mod:`incremental` — per-algorithm dirty-seed rules
+  * :mod:`snapshot`    — crash-consistent mid-drain snapshots
+  * :mod:`driver`      — the batch-by-batch streaming drain loop
+"""
+from .deltas import EdgeDelta, make_delta, symmetrized
+from .driver import (BatchRecord, StreamResult, StreamSpec, run_stream)
+from .incremental import reseed
+from .ingest import AppliedDelta, apply_delta, replay, reshard
+from .snapshot import SnapshotManager, graph_fingerprint
+
+__all__ = [
+    "EdgeDelta", "make_delta", "symmetrized",
+    "AppliedDelta", "apply_delta", "replay", "reshard",
+    "reseed",
+    "SnapshotManager", "graph_fingerprint",
+    "BatchRecord", "StreamResult", "StreamSpec", "run_stream",
+]

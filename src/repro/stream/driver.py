@@ -1,0 +1,330 @@
+"""The streaming drain driver: delta batches x incremental recompute x
+crash-consistent snapshots (DESIGN.md §13).
+
+``run_stream`` turns any registered :class:`~repro.runtime.program.
+AtosProgram` into a long-running job over a mutating graph.  The timeline
+is a sequence of **batches**: batch 0 drains the base graph from
+``program.init()``; each batch ``b >= 1`` commits ``deltas[b-1]`` against
+the current CSR (``stream/ingest``), re-seeds via the program's
+``dirty_seeds`` rule (``stream/incremental``; or the conservative full
+reseed), rebuilds the program on the new graph — its body closes over the
+CSR — and drains again under whatever execution policy the config
+resolves to.  The per-batch drains reuse the existing engines unchanged:
+``runtime/api._shared_setup`` for the single/fused topologies,
+``shard.run_sharded`` for the device mesh.
+
+Snapshots segment a drain at round boundaries: rounds and processed
+counts live *in the carry*, so a segmented drain takes exactly the same
+steps as an unsegmented one, and a resumed run — replay the delta log,
+rebuild the program, restore the carry, keep the same segment schedule —
+is bit-identical to the uninterrupted run (tests/test_checkpoint_fault.py
+proves this under SIGKILL).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.queue import make_multiqueue, make_queue
+from ..core.scheduler import SchedulerConfig, persistent_drive
+from ..runtime.api import _shared_setup, shared_queue_capacity
+from ..runtime.policy import policy_of
+from ..runtime.programs import build_program
+from .deltas import EdgeDelta
+from .incremental import reseed
+from .ingest import apply_delta, replay
+from .snapshot import SnapshotManager
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamSpec:
+    """Streaming attachment for a server job (``server/jobs.JobSpec``)."""
+
+    deltas: Tuple[EdgeDelta, ...]
+    incremental: bool = True
+    snapshot_every: int = 0
+    checkpoint_dir: Optional[str] = None
+    resume: bool = False
+
+    def __post_init__(self):
+        object.__setattr__(self, "deltas", tuple(self.deltas))
+        if self.snapshot_every < 0:
+            raise ValueError("snapshot_every must be >= 0")
+        if ((self.snapshot_every > 0 or self.resume)
+                and not self.checkpoint_dir):
+            raise ValueError(
+                "snapshot_every/resume require a checkpoint_dir")
+
+
+@dataclasses.dataclass
+class BatchRecord:
+    """Per-batch outcome (work/rounds are schedule-deterministic)."""
+
+    batch: int
+    incremental: bool     # did a dirty-seed rule produce the seeds?
+    seeds: int            # seed tasks enqueued for this batch's drain
+    effective_ops: int    # delta ops that actually changed the edge set
+    rounds: int
+    processed: int
+    work: int             # program work-counter delta over this batch
+    splits: int
+    dropped: int
+
+
+@dataclasses.dataclass
+class StreamResult:
+    state: Any            # final program state (last batch's graph)
+    result: Any           # program.result(state)
+    batches: List[BatchRecord]
+    info: dict
+
+
+def _drive_shared(step, cond, carry, persistent: bool, every: int, cb):
+    """Drive a single/fused carry to its fixed point, calling ``cb(carry)``
+    at every ``every``-th round (0 = never).  Rounds live in ``carry[2]``,
+    so the boundaries are absolute round numbers — a resumed drain lands on
+    the same boundaries the uninterrupted one did."""
+    if persistent:
+        if every <= 0:
+            return persistent_drive(step, cond, carry)
+        seg = jax.jit(lambda c, limit: jax.lax.while_loop(
+            lambda cc: cond(cc) & (cc[2] < limit), step, c))
+        while bool(cond(carry)):
+            carry = seg(carry, jnp.int32(int(carry[2]) + every))
+            cb(carry)
+        return carry
+    round_jit = jax.jit(step)
+    while bool(cond(carry)):
+        carry = round_jit(carry)
+        if every > 0 and int(carry[2]) % every == 0:
+            cb(carry)
+    return carry
+
+
+def _drive_sharded(program, graph, cfg: SchedulerConfig, capacity: int,
+                   mq, state, rounds: int, processed: int, every: int, cb,
+                   route_width, mesh):
+    """Segmented sharded drain: each segment is one ``run_sharded`` call
+    with its round budget clamped to the next snapshot boundary.  The
+    host-side continuation replicates the in-loop ``keep_going`` exactly
+    (queue mass for ``empty_means_done`` programs, then ``stop``)."""
+    from .. import shard as _shard
+    from ..shard.driver import _queue_sizes
+
+    extra = {"exchanged": 0, "donated": 0, "steal_rounds": 0,
+             "mis_routed": 0, "route_dropped": 0}
+
+    def more() -> bool:
+        if rounds >= cfg.max_rounds:
+            return False
+        if program.empty_means_done and \
+                int(np.asarray(_queue_sizes(mq)).sum()) == 0:
+            return False
+        if program.stop is not None and bool(program.stop(state)):
+            return False
+        return True
+
+    while more():
+        budget = cfg.max_rounds - rounds
+        if every > 0:
+            at_boundary = rounds % every
+            budget = min(budget, every - at_boundary if at_boundary else every)
+        scfg = dataclasses.replace(cfg, max_rounds=budget)
+        fq: list = []
+        state, st = _shard.run_sharded(
+            program, graph, scfg, queue_capacity=capacity,
+            route_width=route_width, mesh=mesh,
+            initial_queues=mq, initial_state=state, final_queues=fq)
+        mq = fq[0]
+        rounds += st.rounds
+        processed += st.items_processed
+        extra["exchanged"] += st.exchanged
+        extra["donated"] += st.donated
+        extra["steal_rounds"] += st.steal_rounds
+        extra["mis_routed"] += st.mis_routed
+        extra["route_dropped"] += st.route_dropped
+        if every > 0:
+            cb(mq, state, rounds, processed)
+        if st.rounds == 0:  # defensive: never spin on a no-progress segment
+            break
+    dropped = int(np.asarray(mq.lanes.dropped).sum()) + extra["route_dropped"]
+    return mq, state, rounds, processed, dropped, extra
+
+
+def run_stream(
+    algorithm: str,
+    graph,
+    deltas,
+    cfg: SchedulerConfig,
+    *,
+    params: Optional[dict] = None,
+    queue_capacity: Optional[int] = None,
+    incremental: bool = True,
+    snapshot_every: int = 0,
+    checkpoint_dir: Optional[str] = None,
+    keep: int = 3,
+    resume: bool = False,
+    route_width: Optional[int] = None,
+    mesh=None,
+    snapshot_hook=None,
+) -> StreamResult:
+    """Run ``algorithm`` over ``graph`` + a delta log, batch by batch.
+
+    See :func:`repro.runtime.api.stream_execute` (the front door) for the
+    argument contract.  ``snapshot_hook(tick, batch)``, if given, fires
+    after every committed snapshot — the fault-injection tests kill the
+    process inside it.  On resume, records for batches that completed
+    before the restored snapshot are not re-synthesized; the final state
+    and result are nevertheless bit-identical to an uninterrupted run.
+    """
+    policy = policy_of(cfg)
+    deltas = list(deltas)
+    params = dict(params or {})
+    total = len(deltas) + 1
+    snap = SnapshotManager(checkpoint_dir, keep=keep) if checkpoint_dir \
+        else None
+    if (snapshot_every > 0 or resume) and snap is None:
+        raise ValueError("snapshot_every/resume require a checkpoint_dir")
+
+    tick = 0
+    start_batch = 0
+    resume_tick = None
+    if resume:
+        resume_tick = snap.latest()
+        if resume_tick is not None:
+            start_batch = snap.peek(resume_tick)["batch"]
+            tick = resume_tick + 1
+    resumed = resume_tick is not None
+
+    cur_graph = replay(graph, deltas[:start_batch]) if start_batch else graph
+    state = None
+    records: List[BatchRecord] = []
+    totals = {"rounds": 0, "processed": 0, "work": 0, "dropped": 0}
+    program = None
+
+    for b in range(start_batch, total):
+        restoring = resumed and b == start_batch
+        applied = None
+        if b > 0 and not restoring:
+            applied = apply_delta(cur_graph, deltas[b - 1])
+            cur_graph = applied.new_graph
+        # the body closes over the CSR, so the program is rebuilt per batch
+        # (fresh chunk codec, budgets, and dirty-seed closure for the
+        # committed graph)
+        program = build_program(algorithm, cur_graph, cfg,
+                                params=dict(params),
+                                queue_capacity=queue_capacity)
+        was_incremental = bool(b > 0 and incremental
+                               and program.dirty_seeds is not None)
+        n = cur_graph.num_vertices
+        sharded = policy.topology == "sharded"
+        capacity = (queue_capacity or max(4 * n, 1024)) if sharded else \
+            shared_queue_capacity(program, queue_capacity)
+
+        restored = None
+        if restoring:
+            state_template, _ = program.init()
+            if sharded:
+                from ..shard.driver import seed_queues
+                q_template = seed_queues(program, jnp.zeros((0,), jnp.int32),
+                                         n, cfg.num_shards, capacity)
+            elif policy.topology == "single":
+                q_template = make_queue(capacity)
+            else:
+                q_template = make_multiqueue(capacity, 1)
+            tree = snap.restore(resume_tick, queue_template=q_template,
+                                state_template=state_template,
+                                graph=cur_graph, num_deltas=b)
+            cur = {k: int(v) for k, v in tree["cursor"].items()}
+            restored = (tree["queue"], cur["rounds"], cur["processed"])
+            state = tree["state"]
+            seeds = jnp.zeros((0,), jnp.int32)
+            seeds_count, eff = cur["seeds"], cur["eff"]
+            pre_work, pre_splits = cur["pre_work"], cur["pre_splits"]
+        else:
+            if b == 0:
+                state, seeds = program.init()
+                eff = 0
+            else:
+                state, seeds = reseed(program, applied, state,
+                                      incremental=incremental)
+                eff = applied.num_effective
+            seeds = jnp.asarray(seeds, jnp.int32)
+            seeds_count = int(seeds.shape[0])
+            pre_work = program.work_of(state)
+            pre_splits = program.splits_of(state)
+
+        def save_snapshot(queue_tree, st, r, p):
+            nonlocal tick
+            snap.save(tick, cursor={
+                "batch": b, "rounds": r, "processed": p,
+                "pre_work": pre_work, "pre_splits": pre_splits,
+                "seeds": seeds_count, "eff": eff,
+            }, graph=cur_graph, num_deltas=b, queue=queue_tree, state=st)
+            t, tick = tick, tick + 1
+            if snapshot_hook is not None:
+                snapshot_hook(t, b)
+
+        every = snapshot_every if snap is not None else 0
+        if not sharded:
+            init_arg = (state, seeds)
+            queue_in = restored[0] if restored is not None else None
+            queue, state0, ops, step, cond, dropped_of = _shared_setup(
+                program, cur_graph, cfg, policy, queue_capacity,
+                init=init_arg, queue=queue_in)
+            r0 = restored[1] if restored is not None else 0
+            p0 = restored[2] if restored is not None else 0
+            carry = (queue, state0, jnp.int32(r0), jnp.int32(p0))
+            if snap is not None and restored is None:
+                save_snapshot(carry[0], carry[1], 0, 0)
+            cb = (lambda c: save_snapshot(c[0], c[1], int(c[2]), int(c[3])))
+            carry = _drive_shared(step, cond, carry, policy.persistent,
+                                  every, cb)
+            queue, state, rounds_a, processed_a = carry
+            rounds, processed = int(rounds_a), int(processed_a)
+            dropped = int(dropped_of(queue))
+            extra = {}
+        else:
+            from ..shard.driver import seed_queues
+            if restored is None:
+                mq = seed_queues(program, seeds, n, cfg.num_shards, capacity)
+                r0 = p0 = 0
+            else:
+                mq, r0, p0 = restored
+            if snap is not None and restored is None:
+                save_snapshot(mq, state, 0, 0)
+            _, state, rounds, processed, dropped, extra = _drive_sharded(
+                program, cur_graph, cfg, capacity, mq, state, r0, p0, every,
+                lambda q, st, r, p: save_snapshot(q, st, r, p),
+                route_width, mesh)
+
+        records.append(BatchRecord(
+            batch=b, incremental=was_incremental, seeds=seeds_count,
+            effective_ops=eff, rounds=rounds, processed=processed,
+            work=program.work_of(state) - pre_work,
+            splits=program.splits_of(state) - pre_splits,
+            dropped=dropped,
+        ))
+        totals["rounds"] += rounds
+        totals["processed"] += processed
+        totals["work"] += records[-1].work
+        totals["dropped"] += dropped
+        for k, v in extra.items():
+            totals[k] = totals.get(k, 0) + v
+
+    if snap is not None:
+        snap.wait()
+    info = dict(totals)
+    info.update({
+        "batches": total,
+        "batches_run": total - start_batch,
+        "resumed_at": start_batch if resumed else None,
+        "incremental": incremental,
+        "topology": policy.topology,
+    })
+    return StreamResult(state=state, result=program.result(state),
+                        batches=records, info=info)

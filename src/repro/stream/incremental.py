@@ -1,0 +1,200 @@
+"""Incremental recompute rules: which seeds does a delta batch dirty?
+
+Each rule is a host-side function ``(applied, state, ...) -> (state',
+seeds)``; the algorithm factories close it over their chunking bundle and
+install it as ``AtosProgram.dirty_seeds``, so the stream driver never
+branches on the algorithm.  Seeds are ordinary chunk-coded tasks
+(``core/task.chunk_seeds``) — the incremental drain rides the existing
+queue/frontier/chunk machinery unchanged (DESIGN.md §13).
+
+Rules (correctness arguments in DESIGN.md §13):
+
+* **BFS** — inserts: seed the finite-dist source endpoints of inserted
+  edges (their relaxation cascades any improvement).  Deletes: compute the
+  invalidation level ``L`` = min level of a deleted tree edge's target
+  (``dist[v] == dist[u] + 1``); all levels ``< L`` are provably still
+  exact, so reset every ``dist >= L`` to INF and seed the finite-dist
+  boundary (vertices with an INF out-neighbor).  Monotone re-relaxation
+  from exact-or-INF upper bounds reproduces the from-scratch hop distances
+  bit-for-bit (they are unique).
+* **PageRank** — the push invariant ``residue = (1-d)·1 + d·AᵀD⁻¹rank -
+  rank`` *defines* residue given rank, so restore it densely on the new
+  graph from the carried rank: only vertices whose in-neighborhood (or
+  degree) changed move off ``<= eps``.  Deleted edges can leave *negative*
+  residues the positive-push drain would never clean (its stop is
+  ``max(residue) <= eps`` and the rescan enqueues ``> eps`` only), so
+  negative mass is decayed host-side by the same harvest/push sweep the
+  dense BSP kernel uses (mass shrinks ×damping per sweep).  Seeds = the
+  ``> eps`` frontier; the drained result matches a from-scratch drain
+  within the usual eps slack.
+* **Coloring** — ``"conflicts"`` mode keeps the carried colors and seeds
+  one assign task per *losing* endpoint of every inserted same-colored
+  edge (the ``(hash, id)`` priority tie-break the conflict kernel uses);
+  deletes never invalidate a proper coloring.  The result is a valid
+  coloring for strictly less work than recoloring, but not bit-identical
+  to a from-scratch drain — ``"recolor"`` mode (``dirty_seeds=None``,
+  i.e. the conservative full reseed) is the bit-identical option.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.task import ChunkCodec, chunk_seeds
+from .ingest import AppliedDelta
+
+BFS_INF = 0x7FFFFFFF
+
+
+def reseed(program, applied: AppliedDelta, state,
+           incremental: bool = True) -> Tuple[Any, Any]:
+    """The stream driver's dispatch: the program's incremental rule when it
+    has one (and the caller wants it), else the conservative full reseed
+    via ``init()`` — always correct, never cheaper."""
+    if incremental and program.dirty_seeds is not None:
+        return program.dirty_seeds(applied, state)
+    return program.init()
+
+
+def _csr_host(graph):
+    rp = np.asarray(graph.row_ptr, dtype=np.int64)
+    ci = np.asarray(graph.col_idx, dtype=np.int64)
+    return rp, ci
+
+
+def _chunked(verts: np.ndarray, codec: ChunkCodec, row_ptr,
+             split_threshold, owner_block) -> np.ndarray:
+    """Sorted unique dirty vertices -> chunk-coded seed tasks."""
+    verts = np.unique(np.asarray(verts, dtype=np.int64)).astype(np.int32)
+    return np.asarray(chunk_seeds(verts, codec, row_ptr,
+                                  split_threshold=split_threshold,
+                                  owner_block=owner_block))
+
+
+# ---------------------------------------------------------------------- BFS
+def bfs_dirty_seeds(applied: AppliedDelta, state, *, codec: ChunkCodec,
+                    split_threshold, owner_block):
+    """Monotone re-relaxation with bounded invalidation (see module doc)."""
+    import dataclasses
+
+    g = applied.new_graph
+    n = g.num_vertices
+    rp, ci = _csr_host(g)
+    dist = np.asarray(state.dist).astype(np.int64)
+
+    invalidated = False
+    if applied.del_src.size:
+        du = dist[applied.del_src]
+        dv = dist[applied.del_dst]
+        # an edge can lie on a shortest path only if dv == du + 1 exactly
+        on_tree = (du < BFS_INF) & (dv == du + 1)
+        if on_tree.any():
+            L = int(dv[on_tree].min())
+            dist = np.where(dist >= L, BFS_INF, dist)
+            invalidated = True
+
+    seed_mask = np.zeros(n, dtype=bool)
+    if invalidated:
+        # boundary of the intact region: finite vertices that can relax
+        # into the reset (INF) region on the NEW graph
+        src = np.repeat(np.arange(n, dtype=np.int64), np.diff(rp))
+        to_inf = dist[ci] == BFS_INF
+        has_inf_nbr = np.bincount(src[to_inf], minlength=n) > 0
+        seed_mask |= (dist < BFS_INF) & has_inf_nbr
+    if applied.ins_src.size:
+        iu = applied.ins_src[dist[applied.ins_src] < BFS_INF]
+        seed_mask[iu] = True
+
+    seeds = _chunked(np.flatnonzero(seed_mask), codec, rp,
+                     split_threshold, owner_block)
+    new_state = dataclasses.replace(
+        state, dist=jnp.asarray(dist.astype(np.int32)))
+    return new_state, jnp.asarray(seeds, jnp.int32)
+
+
+# ----------------------------------------------------------------- PageRank
+def pagerank_dirty_seeds(applied: AppliedDelta, state, *, damping: float,
+                         eps: float, codec: ChunkCodec, split_threshold,
+                         owner_block, max_sweeps: int = 400):
+    """Invariant restoration + negative-residue decay (see module doc)."""
+    import dataclasses
+
+    g = applied.new_graph
+    n = g.num_vertices
+    rp, ci = _csr_host(g)
+    src = np.repeat(np.arange(n, dtype=np.int64), np.diff(rp))
+    rank = np.asarray(state.rank, dtype=np.float64)
+    deg = np.maximum(np.diff(rp), 1).astype(np.float64)
+
+    # residue := (1-d)·1 + d·Σ_{u->v} rank[u]/deg(u) − rank[v] on the NEW
+    # graph — the exact error of the carried rank as a solution here.
+    contrib = damping * rank / deg
+    residue = (1.0 - damping) + np.bincount(
+        ci, weights=contrib[src], minlength=n) - rank
+
+    # decay negative mass (deleted in-edges): harvest into rank, push the
+    # damped share along out-edges; total |negative| shrinks ×damping per
+    # sweep, so convergence to eps is geometric.
+    for _ in range(max_sweeps):
+        neg = residue < -eps
+        if not neg.any():
+            break
+        res_neg = np.where(neg, residue, 0.0)
+        rank = rank + res_neg
+        residue = np.where(neg, 0.0, residue)
+        residue += np.bincount(ci, weights=(damping * res_neg / deg)[src],
+                               minlength=n)
+
+    rank32 = rank.astype(np.float32)
+    residue32 = residue.astype(np.float32)
+    over = residue32 > eps
+    seeds = _chunked(np.flatnonzero(over), codec, rp,
+                     split_threshold, owner_block)
+    new_state = dataclasses.replace(
+        state,
+        rank=jnp.asarray(rank32),
+        residue=jnp.asarray(residue32),
+        in_queue=jnp.asarray(over),
+    )
+    return new_state, jnp.asarray(seeds, jnp.int32)
+
+
+# ----------------------------------------------------------------- coloring
+def _priority_host(v: np.ndarray) -> np.ndarray:
+    """numpy mirror of ``algorithms.coloring._priority`` (uint32 wraps)."""
+    v = v.astype(np.uint32)
+    h = (v * np.uint32(2654435761)) ^ np.uint32(0x9E3779B9)
+    h = (h ^ (h >> np.uint32(13))) * np.uint32(0x85EBCA6B)
+    return h ^ (h >> np.uint32(16))
+
+
+def coloring_dirty_seeds(applied: AppliedDelta, state, *, codec: ChunkCodec,
+                         split_threshold, owner_block):
+    """Conflict-endpoint recoloring (``"conflicts"`` mode; see module doc)."""
+    g = applied.new_graph
+    rp, _ = _csr_host(g)
+    colors = np.asarray(state.colors)
+
+    dirty = []
+    u, v = applied.ins_src, applied.ins_dst
+    if u.size:
+        conflict = (colors[u] >= 0) & (colors[u] == colors[v])
+        if conflict.any():
+            cu, cv = u[conflict], v[conflict]
+            pu, pv = _priority_host(cu), _priority_host(cv)
+            # the endpoint with the HIGHER (hash, id) priority recolors —
+            # exactly _conflicts's "neighbor wins ties by lower priority"
+            u_loses = (pv < pu) | ((pv == pu) & (cv < cu))
+            dirty.append(np.where(u_loses, cu, cv))
+    uncolored = np.flatnonzero(colors < 0)  # defensive: partial prior state
+    if uncolored.size:
+        dirty.append(uncolored)
+
+    verts = (np.concatenate(dirty) if dirty
+             else np.empty(0, dtype=np.int64))
+    # assign tasks: +(chunk code + 1) — the coloring sign convention
+    seeds = _chunked(verts, codec, rp, split_threshold, owner_block) + 1 \
+        if verts.size else np.empty(0, dtype=np.int32)
+    return state, jnp.asarray(seeds, jnp.int32)

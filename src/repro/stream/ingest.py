@@ -1,0 +1,99 @@
+"""Delta ingestion: commit an :class:`EdgeDelta` batch against a CSR graph.
+
+The CSR is the canonical edge set — sorted unique directed ``(src, dst)``
+pairs with self-loops dropped (``graph/csr.from_edges``).  Application is
+set algebra on the int64 pair keys: effective inserts are the batch's
+inserts not already present, effective deletes its deletes that are;
+inserting an existing edge or deleting an absent one is a no-op (which is
+what makes canonical batches idempotent).  The rebuilt graph goes through
+``from_edges`` itself, so a streamed graph is bit-identical to building
+the post-delta edge list from scratch — the round-trip property the
+hypothesis suite checks against a dense-adjacency oracle.
+
+Sharded rebuild: the per-device :class:`~repro.shard.partition.ShardedCSR`
+keeps the *global* vertex index space, and ownership is a pure function of
+``(n, num_shards)`` — deltas change edges, never ``n`` — so
+:func:`reshard` (= ``partition_graph`` on the committed graph) *is* the
+owner-aware rebuild: every row lands on the shard that owned it before the
+delta, and the ring-predecessor steal halos are rebuilt from the fresh
+edge slices (DESIGN.md §13).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from ..graph.csr import CSRGraph, from_edges
+from .deltas import EdgeDelta
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class AppliedDelta:
+    """A committed batch: the graphs on both sides plus the *effective*
+    ops (no-ops filtered out) — what the dirty-seed rules key off."""
+
+    old_graph: CSRGraph
+    new_graph: CSRGraph
+    ins_src: np.ndarray   # int32 [ki] effective inserts
+    ins_dst: np.ndarray
+    del_src: np.ndarray   # int32 [kd] effective deletes
+    del_dst: np.ndarray
+
+    @property
+    def num_effective(self) -> int:
+        return int(self.ins_src.size + self.del_src.size)
+
+
+def _edge_keys(graph: CSRGraph) -> np.ndarray:
+    """Sorted int64 ``src * n + dst`` keys of the CSR's directed edges."""
+    n = graph.num_vertices
+    rp = np.asarray(graph.row_ptr, dtype=np.int64)
+    ci = np.asarray(graph.col_idx, dtype=np.int64)
+    src = np.repeat(np.arange(n, dtype=np.int64), np.diff(rp))
+    return src * n + ci  # CSR order = sorted by (src, dst) already
+
+
+def apply_delta(graph: CSRGraph, delta: EdgeDelta) -> AppliedDelta:
+    """Commit one canonical batch; returns the :class:`AppliedDelta`."""
+    n = graph.num_vertices
+    if delta.num_vertices != n:
+        raise ValueError(
+            f"delta is for {delta.num_vertices} vertices, graph has {n}")
+    old_keys = _edge_keys(graph)
+    dkeys = delta.src.astype(np.int64) * n + delta.dst.astype(np.int64)
+    ins_keys = dkeys[delta.insert]
+    del_keys = dkeys[~delta.insert]
+    eff_ins = ins_keys[~np.isin(ins_keys, old_keys)]
+    eff_del = del_keys[np.isin(del_keys, old_keys)]
+    new_keys = np.union1d(np.setdiff1d(old_keys, eff_del), eff_ins)
+    new_graph = from_edges(n, new_keys // n, new_keys % n)
+    return AppliedDelta(
+        old_graph=graph,
+        new_graph=new_graph,
+        ins_src=(eff_ins // n).astype(np.int32),
+        ins_dst=(eff_ins % n).astype(np.int32),
+        del_src=(eff_del // n).astype(np.int32),
+        del_dst=(eff_del % n).astype(np.int32),
+    )
+
+
+def replay(graph: CSRGraph, deltas) -> CSRGraph:
+    """Fold a delta-log prefix into the graph (deterministic: the resume
+    path rebuilds the batch-``b`` graph by replaying ``deltas[:b]``)."""
+    for d in deltas:
+        graph = apply_delta(graph, d).new_graph
+    return graph
+
+
+def reshard(graph: CSRGraph, num_shards: int, halo: bool = True):
+    """Owner-aware sharded rebuild of a committed graph.
+
+    Thin, named front door over ``partition_graph``: ownership blocks are a
+    function of ``(n, num_shards)`` only, so re-partitioning the post-delta
+    graph preserves every row's owner and rebuilds the steal halos — the
+    invariant the streaming sharded drain relies on.
+    """
+    from ..shard.partition import partition_graph  # lazy: shard -> runtime
+
+    return partition_graph(graph, num_shards, halo=halo)

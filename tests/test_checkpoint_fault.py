@@ -1,5 +1,10 @@
 """Checkpoint/restart + fault-tolerance behaviour."""
+import json
 import os
+import signal
+import subprocess
+import sys
+import textwrap
 import time
 
 import jax
@@ -9,6 +14,8 @@ import pytest
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.distributed.fault import StepMonitor, run_with_restarts
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def _tree():
@@ -93,3 +100,97 @@ def test_step_monitor_flags_stragglers():
     time.sleep(0.2)
     assert mon.stop(99)
     assert mon.straggler_steps == [99]
+
+
+# --------------------------------------------- prefixed checkpoint files
+def test_prefix_isolates_retention(tmp_path):
+    """Two managers with different prefixes share a directory without
+    touching each other's files — the streaming subsystem's drain
+    snapshots (prefix='snap') coexist with training checkpoints."""
+    steps = CheckpointManager(str(tmp_path), keep=2)           # "step"
+    snaps = CheckpointManager(str(tmp_path), keep=2, prefix="snap")
+    for s in [1, 2, 3]:
+        steps.save(s, _tree())
+    for s in [10, 11, 12]:
+        snaps.save(s, _tree())
+    assert steps.all_steps() == [2, 3]
+    assert snaps.all_steps() == [11, 12]
+    # each restores its own files
+    out = snaps.restore(12, _tree())
+    np.testing.assert_array_equal(
+        np.asarray(out["step"]), np.asarray(_tree()["step"]))
+
+
+def test_prefix_validated(tmp_path):
+    with pytest.raises(ValueError):
+        CheckpointManager(str(tmp_path), prefix="../evil")
+    with pytest.raises(ValueError):
+        CheckpointManager(str(tmp_path), prefix="")
+
+
+# ------------------------------------------- SIGKILL a streaming drain
+_STREAM_CHILD = """
+    import json
+    import os
+    import signal
+    import numpy as np
+    from repro.core import SchedulerConfig
+    from repro.graph.generators import edge_delta_stream, rmat
+    from repro.runtime import stream_execute
+
+    base = rmat(6, edge_factor=6, seed=5)
+    deltas = edge_delta_stream(base, 3, 12, seed=6)
+    cfg = SchedulerConfig(num_workers=32, topology="single",
+                          persistent=False)
+    kill_at = int(os.environ.get("KILL_AT_TICK", "-1"))
+
+    def hook(tick, batch):
+        if tick == kill_at:
+            os.kill(os.getpid(), signal.SIGKILL)
+
+    res = stream_execute(
+        "bfs", base, deltas, cfg, params={"source": 2},
+        snapshot_every=2, checkpoint_dir=os.environ["SNAP_DIR"],
+        keep=100, resume=os.environ.get("RESUME") == "1",
+        snapshot_hook=hook)
+    print(json.dumps({
+        "result": np.asarray(res.result).tolist(),
+        "resumed_at": res.info["resumed_at"],
+        "batches_run": res.info["batches_run"],
+    }))
+"""
+
+
+def _stream_child(snap_dir, kill_at=-1, resume=False):
+    prog = ("import os\n"
+            "os.environ.setdefault('JAX_PLATFORMS', 'cpu')\n"
+            + textwrap.dedent(_STREAM_CHILD))
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"),
+               SNAP_DIR=str(snap_dir), KILL_AT_TICK=str(kill_at),
+               RESUME="1" if resume else "0")
+    return subprocess.run([sys.executable, "-c", prog],
+                          capture_output=True, text=True, env=env,
+                          timeout=900)
+
+
+def test_sigkill_mid_drain_resume_bit_exact(tmp_path):
+    """SIGKILL a streaming drain inside its snapshot hook; the resumed
+    process must reproduce the uninterrupted run's result bit for bit."""
+    ref_dir = tmp_path / "ref"
+    out = _stream_child(ref_dir)
+    assert out.returncode == 0, out.stderr[-3000:]
+    ref = json.loads(out.stdout.strip().splitlines()[-1])
+    assert ref["resumed_at"] is None
+
+    crash_dir = tmp_path / "crash"
+    killed = _stream_child(crash_dir, kill_at=3)
+    assert killed.returncode == -signal.SIGKILL
+    # the atomic commit left a loadable snapshot behind
+    assert any(p.startswith("snap_") for p in os.listdir(crash_dir))
+
+    resumed = _stream_child(crash_dir, resume=True)
+    assert resumed.returncode == 0, resumed.stderr[-3000:]
+    got = json.loads(resumed.stdout.strip().splitlines()[-1])
+    assert got["resumed_at"] is not None
+    assert got["batches_run"] < ref["batches_run"]
+    assert got["result"] == ref["result"]

@@ -1,0 +1,479 @@
+"""Streaming-graph subsystem (DESIGN.md section 13).
+
+Four tiers:
+
+  * delta canonicalization + ingestion units and hypothesis properties
+    (idempotency, insert-then-delete cancellation, CSR rebuild vs a dense
+    adjacency-matrix oracle) — pure host math, always run;
+  * the seeded delta-stream generator's determinism and symmetry contract;
+  * the incremental-vs-from-scratch parity matrix: after every delta batch
+    the streamed state must match a cold run on the final graph — BFS and
+    coloring(recolor) bit-identical, PageRank within the eps slack,
+    coloring(conflicts) a *valid* (cheaper) coloring — across the
+    single/sharded topologies and granularities 1 and 4;
+  * snapshot/resume determinism in-process, plus one real 8-device
+    sharded streaming run in a subprocess (same idiom as tests/test_shard).
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import SchedulerConfig
+from repro.graph.csr import from_edges
+from repro.graph.generators import edge_delta_stream, erdos, grid2d, rmat
+from repro.runtime import build_program, execute, stream_execute
+from repro.stream import (EdgeDelta, StreamSpec, apply_delta, make_delta,
+                          replay, reshard, symmetrized)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# ---------------------------------------------------------- delta units
+def test_make_delta_validates():
+    with pytest.raises(ValueError, match="out of range"):
+        make_delta(4, [0], [7], [True])
+    with pytest.raises(ValueError, match="self-loop"):
+        make_delta(4, [2], [2], [True])
+    with pytest.raises(ValueError, match="disagree"):
+        make_delta(4, [0, 1], [1], [True])
+    with pytest.raises(ValueError, match="positive"):
+        make_delta(0, [], [], [])
+
+
+def test_make_delta_last_wins_and_sorted():
+    # (1,2) appears three times: insert, delete, insert -> nets to insert;
+    # (0,3) delete stands; output sorted by (src, dst)
+    d = make_delta(5,
+                   [1, 0, 1, 1], [2, 3, 2, 2],
+                   [True, False, False, True])
+    assert d.num_ops == 2
+    assert d.src.tolist() == [0, 1]
+    assert d.dst.tolist() == [3, 2]
+    assert d.insert.tolist() == [False, True]
+    assert d.num_inserts == 1 and d.num_deletes == 1
+
+
+def test_symmetrized_mirrors_every_op():
+    d = symmetrized(make_delta(6, [1, 4], [2, 3], [True, False]))
+    pairs = set(zip(d.src.tolist(), d.dst.tolist(), d.insert.tolist()))
+    assert pairs == {(1, 2, True), (2, 1, True), (3, 4, False), (4, 3, False)}
+
+
+def test_apply_delta_noops_filtered():
+    g = from_edges(4, [0, 1], [1, 0])
+    # inserting an existing edge and deleting an absent one are both no-ops
+    a = apply_delta(g, make_delta(4, [0, 2], [1, 3], [True, False]))
+    assert a.num_effective == 0
+    np.testing.assert_array_equal(np.asarray(a.new_graph.row_ptr),
+                                  np.asarray(g.row_ptr))
+    np.testing.assert_array_equal(np.asarray(a.new_graph.col_idx),
+                                  np.asarray(g.col_idx))
+
+
+def test_apply_delta_rejects_vertex_mismatch():
+    g = from_edges(4, [0], [1])
+    with pytest.raises(ValueError, match="vertices"):
+        apply_delta(g, make_delta(5, [0], [1], [True]))
+
+
+def test_replay_prefix_matches_stepwise():
+    g = erdos(24, 60, seed=1)
+    deltas = edge_delta_stream(g, 3, 10, seed=7)
+    step = g
+    for d in deltas:
+        step = apply_delta(step, d).new_graph
+    rep = replay(g, deltas)
+    np.testing.assert_array_equal(np.asarray(rep.row_ptr),
+                                  np.asarray(step.row_ptr))
+    np.testing.assert_array_equal(np.asarray(rep.col_idx),
+                                  np.asarray(step.col_idx))
+
+
+def test_reshard_preserves_ownership_blocks():
+    from repro.shard import block_bounds
+
+    g = erdos(32, 90, seed=2)
+    d = edge_delta_stream(g, 1, 16, seed=3)[0]
+    new_g = apply_delta(g, d).new_graph
+    sh = reshard(new_g, 4)
+    # same n -> same ownership blocks; each shard's slice of the global
+    # [n+1] row_ptr re-covers its owned rows' post-delta degrees
+    deg = np.diff(np.asarray(new_g.row_ptr))
+    for dev in range(4):
+        lo, hi = block_bounds(dev, new_g.num_vertices, 4)
+        deg_local = np.diff(np.asarray(sh.row_ptr[dev]))[lo:hi]
+        np.testing.assert_array_equal(deg_local, deg[lo:hi])
+
+
+# ------------------------------------------------- hypothesis properties
+def _dense(graph):
+    n = graph.num_vertices
+    rp = np.asarray(graph.row_ptr)
+    ci = np.asarray(graph.col_idx)
+    adj = np.zeros((n, n), dtype=bool)
+    src = np.repeat(np.arange(n), np.diff(rp))
+    adj[src, ci] = True
+    return adj
+
+
+def test_delta_properties_vs_dense_oracle():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @st.composite
+    def graph_and_ops(draw):
+        n = draw(st.integers(min_value=2, max_value=12))
+        m = draw(st.integers(min_value=0, max_value=30))
+        pairs = st.tuples(st.integers(0, n - 1), st.integers(0, n - 1))
+        edges = [e for e in draw(st.lists(pairs, max_size=m))
+                 if e[0] != e[1]]
+        ops = draw(st.lists(st.tuples(st.integers(0, n - 1),
+                                      st.integers(0, n - 1),
+                                      st.booleans()), max_size=20))
+        ops = [o for o in ops if o[0] != o[1]]
+        return n, edges, ops
+
+    @settings(max_examples=60, deadline=None)
+    @given(graph_and_ops())
+    def check(case):
+        n, edges, ops = case
+        src = np.array([e[0] for e in edges], dtype=np.int64)
+        dst = np.array([e[1] for e in edges], dtype=np.int64)
+        g = from_edges(n, src, dst)
+        d = make_delta(n, [o[0] for o in ops], [o[1] for o in ops],
+                       [o[2] for o in ops])
+
+        # dense oracle: apply the *original* op list in order
+        adj = _dense(g)
+        for s, t, ins in ops:
+            adj[s, t] = ins
+        new_g = apply_delta(g, d).new_graph
+        np.testing.assert_array_equal(_dense(new_g), adj)
+
+        # idempotency: canonical batches are functions edge -> final op
+        twice = apply_delta(new_g, d).new_graph
+        np.testing.assert_array_equal(np.asarray(twice.row_ptr),
+                                      np.asarray(new_g.row_ptr))
+        np.testing.assert_array_equal(np.asarray(twice.col_idx),
+                                      np.asarray(new_g.col_idx))
+
+        # insert-then-delete within one batch cancels (nets to delete)
+        if ops:
+            s, t, _ = ops[0]
+            cancel = make_delta(n, [s, s], [t, t], [True, False])
+            assert cancel.num_ops == 1 and not bool(cancel.insert[0])
+
+    check()
+
+
+# ------------------------------------------------------ delta generator
+def test_edge_delta_stream_deterministic_and_symmetric():
+    g = rmat(5, edge_factor=4, seed=0)
+    a = edge_delta_stream(g, 3, 12, seed=9)
+    b = edge_delta_stream(g, 3, 12, seed=9)
+    c = edge_delta_stream(g, 3, 12, seed=10)
+    assert len(a) == 3
+    for da, db in zip(a, b):
+        np.testing.assert_array_equal(da.src, db.src)
+        np.testing.assert_array_equal(da.dst, db.dst)
+        np.testing.assert_array_equal(da.insert, db.insert)
+    assert any(x.src.tolist() != y.src.tolist() for x, y in zip(a, c))
+    for d in a:
+        # both directions of every pair, same operation
+        fwd = set(zip(d.src.tolist(), d.dst.tolist(), d.insert.tolist()))
+        assert fwd == {(t, s, i) for s, t, i in fwd}
+        # deletes touch existing edges, inserts genuinely new pairs
+        assert d.num_ops > 0
+
+
+def test_edge_delta_stream_keeps_graph_symmetric():
+    g = grid2d(6, 6)
+    cur = replay(g, edge_delta_stream(g, 4, 10, seed=3))
+    adj = _dense(cur)
+    np.testing.assert_array_equal(adj, adj.T)
+
+
+# ----------------------------------------------------- parity matrix
+# topology x granularity cells; persistent/discrete alternates so both
+# kernel strategies are exercised without doubling the matrix. Sharded
+# cells run the full shard_map machinery on a 1-device mesh (valid, and
+# in-process); the real 8-device run is the subprocess test below.
+PARITY_CELLS = [
+    ("single", 1, True), ("single", 4, False),
+    ("sharded", 1, False), ("sharded", 4, True),
+]
+
+
+def _cfg(topology, g, persistent):
+    return SchedulerConfig(num_workers=32, topology=topology,
+                           persistent=persistent, granularity=g,
+                           num_shards=1 if topology != "sharded" else 1)
+
+
+def _scratch(algorithm, graph, cfg, params):
+    prog = build_program(algorithm, graph, cfg, params=dict(params))
+    res = execute(prog, graph, cfg)
+    return prog, res.state
+
+
+@pytest.mark.parametrize("topology,g,persistent", PARITY_CELLS)
+def test_bfs_stream_parity(topology, g, persistent):
+    base = rmat(6, edge_factor=6, seed=1)
+    deltas = edge_delta_stream(base, 3, 12, seed=4)
+    cfg = _cfg(topology, g, persistent)
+    params = {"source": 3}
+    res = stream_execute("bfs", base, deltas, cfg, params=params)
+    final_graph = replay(base, deltas)
+    prog, state = _scratch("bfs", final_graph, cfg, params)
+    np.testing.assert_array_equal(np.asarray(res.result),
+                                  np.asarray(prog.result(state)))
+    assert res.info["dropped"] == 0
+    assert len(res.batches) == 4
+    assert all(r.incremental for r in res.batches[1:])
+
+
+@pytest.mark.parametrize("topology,g,persistent", PARITY_CELLS)
+def test_pagerank_stream_parity(topology, g, persistent):
+    base = rmat(6, edge_factor=6, seed=2)
+    deltas = edge_delta_stream(base, 2, 10, seed=5)
+    eps = 1e-5
+    cfg = _cfg(topology, g, persistent)
+    res = stream_execute("pagerank", base, deltas, cfg,
+                         params={"eps": eps})
+    final_graph = replay(base, deltas)
+    prog, state = _scratch("pagerank", final_graph, cfg, {"eps": eps})
+    ref = np.asarray(prog.result(state), dtype=np.float64)
+    got = np.asarray(res.result, dtype=np.float64)
+    # both runs stop at residue < eps; they agree to the eps slack
+    assert np.abs(got - ref).max() < 10 * eps
+    assert all(r.incremental for r in res.batches[1:])
+
+
+@pytest.mark.parametrize("topology,g,persistent", PARITY_CELLS)
+def test_coloring_recolor_stream_bit_identical(topology, g, persistent):
+    from repro.algorithms.coloring import validate_coloring
+
+    base = rmat(6, edge_factor=6, seed=3)
+    deltas = edge_delta_stream(base, 2, 10, seed=6)
+    cfg = _cfg(topology, g, persistent)
+    # recolor mode disables the dirty-seed rule -> conservative full
+    # reseed every batch -> bit-identical to a cold run on the final graph
+    res = stream_execute("coloring", base, deltas, cfg,
+                         params={"dirty": "recolor"})
+    final_graph = replay(base, deltas)
+    prog, state = _scratch("coloring", final_graph, cfg, {})
+    np.testing.assert_array_equal(np.asarray(res.result),
+                                  np.asarray(prog.result(state)))
+    assert validate_coloring(final_graph, res.result)
+    assert not any(r.incremental for r in res.batches)
+
+
+def test_coloring_conflicts_stream_valid_and_cheaper():
+    from repro.algorithms.coloring import validate_coloring
+
+    base = rmat(7, edge_factor=6, seed=4)
+    deltas = edge_delta_stream(base, 3, 16, seed=7)
+    cfg = _cfg("single", 1, True)
+    inc = stream_execute("coloring", base, deltas, cfg)  # default: conflicts
+    full = stream_execute("coloring", base, deltas, cfg, incremental=False)
+    final_graph = replay(base, deltas)
+    assert validate_coloring(final_graph, inc.result)
+    assert validate_coloring(final_graph, full.result)
+    # repair work (re-color conflict losers only) << full recolor work
+    inc_w = sum(r.work for r in inc.batches[1:])
+    full_w = sum(r.work for r in full.batches[1:])
+    assert inc_w < full_w
+    assert all(r.incremental for r in inc.batches[1:])
+    assert not any(r.incremental for r in full.batches)
+
+
+def test_full_reseed_matches_incremental_bfs():
+    """incremental=False is the correctness baseline: both must equal the
+    from-scratch run, hence each other."""
+    base = grid2d(10, 10)
+    deltas = edge_delta_stream(base, 2, 8, seed=8)
+    cfg = _cfg("single", 1, False)
+    inc = stream_execute("bfs", base, deltas, cfg, params={"source": 0})
+    full = stream_execute("bfs", base, deltas, cfg, params={"source": 0},
+                          incremental=False)
+    np.testing.assert_array_equal(np.asarray(inc.result),
+                                  np.asarray(full.result))
+    assert not any(r.incremental for r in full.batches)
+
+
+def test_fused_topology_stream_parity():
+    base = rmat(6, edge_factor=6, seed=5)
+    deltas = edge_delta_stream(base, 2, 10, seed=9)
+    cfg = SchedulerConfig(num_workers=32, topology="fused", persistent=True)
+    res = stream_execute("bfs", base, deltas, cfg, params={"source": 1})
+    final_graph = replay(base, deltas)
+    prog, state = _scratch("bfs", final_graph, cfg, {"source": 1})
+    np.testing.assert_array_equal(np.asarray(res.result),
+                                  np.asarray(prog.result(state)))
+
+
+# ------------------------------------------------- snapshot / resume
+def test_snapshot_resume_bit_identical(tmp_path):
+    base = rmat(6, edge_factor=6, seed=6)
+    deltas = edge_delta_stream(base, 3, 12, seed=11)
+    cfg = _cfg("single", 1, False)
+    params = {"source": 2}
+    ref = stream_execute("bfs", base, deltas, cfg, params=params)
+
+    # run with snapshots, then resume from an *older* snapshot by
+    # truncating the directory to simulate a crash after tick K
+    d = str(tmp_path / "snaps")
+    full = stream_execute("bfs", base, deltas, cfg, params=params,
+                          snapshot_every=2, checkpoint_dir=d, keep=100)
+    ticks = sorted(int(p.split("_")[1]) for p in os.listdir(d)
+                   if p.startswith("snap_"))
+    assert len(ticks) >= 3
+    for t in ticks[len(ticks) // 2:]:  # drop the newer half
+        import shutil
+        shutil.rmtree(os.path.join(d, f"snap_{t}"))
+    res = stream_execute("bfs", base, deltas, cfg, params=params,
+                         snapshot_every=2, checkpoint_dir=d, keep=100,
+                         resume=True)
+    assert res.info["resumed_at"] is not None
+    np.testing.assert_array_equal(np.asarray(res.result),
+                                  np.asarray(ref.result))
+    np.testing.assert_array_equal(np.asarray(res.result),
+                                  np.asarray(full.result))
+
+
+def test_snapshot_resume_sharded(tmp_path):
+    base = rmat(6, edge_factor=6, seed=7)
+    deltas = edge_delta_stream(base, 2, 10, seed=12)
+    cfg = _cfg("sharded", 1, True)
+    params = {"source": 0}
+    ref = stream_execute("bfs", base, deltas, cfg, params=params)
+    d = str(tmp_path / "snaps")
+    stream_execute("bfs", base, deltas, cfg, params=params,
+                   snapshot_every=2, checkpoint_dir=d, keep=100)
+    # resume from the second-newest snapshot
+    ticks = sorted(int(p.split("_")[1]) for p in os.listdir(d)
+                   if p.startswith("snap_"))
+    import shutil
+    shutil.rmtree(os.path.join(d, f"snap_{ticks[-1]}"))
+    res = stream_execute("bfs", base, deltas, cfg, params=params,
+                         snapshot_every=2, checkpoint_dir=d, keep=100,
+                         resume=True)
+    np.testing.assert_array_equal(np.asarray(res.result),
+                                  np.asarray(ref.result))
+
+
+def test_snapshot_fingerprint_guards_graph_identity(tmp_path):
+    from repro.stream import SnapshotManager, graph_fingerprint
+
+    g1 = grid2d(5, 5)
+    g2 = grid2d(6, 6)
+    mgr = SnapshotManager(str(tmp_path))
+    state = {"x": jnp.arange(4, dtype=jnp.int32)}
+    queue = {"q": jnp.zeros(3, jnp.int32)}
+    cursor = {k: 0 for k in ("batch", "rounds", "processed", "pre_work",
+                             "pre_splits", "seeds", "eff")}
+    mgr.save(0, cursor=cursor, graph=g1, num_deltas=0,
+             queue=queue, state=state)
+    assert mgr.peek(0)["batch"] == 0
+    fp = graph_fingerprint(g1, 0)
+    assert mgr.peek(0)["fingerprint"] == {k: int(v) for k, v in fp.items()}
+    with pytest.raises(ValueError, match="fingerprint"):
+        mgr.restore(0, queue_template=queue, state_template=state,
+                    graph=g2, num_deltas=0)
+    out = mgr.restore(0, queue_template=queue, state_template=state,
+                      graph=g1, num_deltas=0)
+    np.testing.assert_array_equal(np.asarray(out["state"]["x"]),
+                                  np.asarray(state["x"]))
+
+
+def test_stream_spec_validation():
+    with pytest.raises(ValueError, match="checkpoint_dir"):
+        StreamSpec(deltas=(), resume=True)
+    with pytest.raises(ValueError, match="checkpoint_dir"):
+        StreamSpec(deltas=(), snapshot_every=4)
+    s = StreamSpec(deltas=[make_delta(4, [0], [1], [True])])
+    assert isinstance(s.deltas, tuple) and len(s.deltas) == 1
+
+
+# ------------------------------------------------- server integration
+def test_server_streaming_job_parity():
+    from repro.server import JobRegistry, JobSpec, TaskServer
+
+    base = grid2d(8, 8)
+    deltas = edge_delta_stream(base, 2, 8, seed=13)
+    reg = JobRegistry()
+    reg.register_graph("g", base)
+    server = TaskServer(reg, num_lanes=2)
+    server.submit(JobSpec("bfs", "g", {"source": 0},
+                          stream=StreamSpec(deltas=tuple(deltas))))
+    server.submit(JobSpec("coloring", "g"))  # fused batch job alongside
+    result = server.run()
+    assert result.stats.streaming_jobs == 1
+    assert result.stats.stream_batches == 3
+
+    cfg = SchedulerConfig(num_workers=64, topology="single")
+    final_graph = replay(base, deltas)
+    prog, state = _scratch("bfs", final_graph, cfg, {"source": 0})
+    job = server._jobs[0]
+    np.testing.assert_array_equal(np.asarray(job.result),
+                                  np.asarray(prog.result(state)))
+
+
+# --------------------------------------------- 8-device subprocess
+def _run(body: str, timeout=900) -> dict:
+    prog = ("import os\n"
+            "os.environ['XLA_FLAGS'] = "
+            "'--xla_force_host_platform_device_count=8'\n"
+            "os.environ.setdefault('JAX_PLATFORMS', 'cpu')\n"
+            + textwrap.dedent(body))
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    out = subprocess.run([sys.executable, "-c", prog], capture_output=True,
+                         text=True, env=env, timeout=timeout)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def test_multidevice_stream_parity():
+    """8-shard streaming BFS: bit-identical to the single-topology stream
+    AND to a cold sharded run on the final graph."""
+    res = _run("""
+        import json
+        import numpy as np
+        from repro.core import SchedulerConfig
+        from repro.graph.generators import edge_delta_stream, rmat
+        from repro.runtime import build_program, execute, stream_execute
+        from repro.stream import replay
+
+        base = rmat(7, edge_factor=8, seed=2)
+        deltas = edge_delta_stream(base, 2, 16, seed=3)
+        params = {"source": 0}
+
+        scfg = SchedulerConfig(num_workers=32, topology="sharded",
+                               num_shards=8)
+        sres = stream_execute("bfs", base, deltas, scfg, params=params)
+
+        cfg1 = SchedulerConfig(num_workers=32, topology="single")
+        r1 = stream_execute("bfs", base, deltas, cfg1, params=params)
+
+        final = replay(base, deltas)
+        prog = build_program("bfs", final, scfg, params=dict(params))
+        cold = execute(prog, final, scfg)
+
+        print(json.dumps({
+            "vs_single": bool((np.asarray(sres.result)
+                               == np.asarray(r1.result)).all()),
+            "vs_cold": bool((np.asarray(sres.result)
+                             == np.asarray(prog.result(cold.state))).all()),
+            "dropped": int(sres.info["dropped"]),
+            "mis": int(sres.info.get("mis_routed", 0)),
+        }))
+    """)
+    assert res["vs_single"] and res["vs_cold"]
+    assert res["dropped"] == 0 and res["mis"] == 0
