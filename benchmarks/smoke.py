@@ -13,8 +13,11 @@ ample/tight-budget rounds + formation splits and sharded per-g exchange
 volume, every chunk width) and ``bench_stream`` records in
 ``BENCH_stream.json`` (per-delta-batch rounds/work/seed counts for the
 incremental and full-recompute streaming modes, plus the sharded streaming
-parity bit) and fails loudly when any recomputed counter disagrees with
-the checked-in value.  CI runs it on every push
+parity bit) and ``bench_megakernel`` records in ``BENCH_megakernel.json``
+(rounds / launches-per-drain / work for every algorithm x kernel-strategy
+cell — the megakernel's launches == 1 collapse and its bit-parity with the
+persistent drain) and fails loudly when any recomputed counter disagrees
+with the checked-in value.  CI runs it on every push
 (``bench-smoke`` job); the full benchmark suite refreshes the JSONs
 deliberately, this guard keeps them honest in between.
 
@@ -33,6 +36,7 @@ REPO = Path(__file__).resolve().parent.parent
 SHARD_JSON = REPO / "BENCH_shard.json"
 GRANULARITY_JSON = REPO / "BENCH_granularity.json"
 STREAM_JSON = REPO / "BENCH_stream.json"
+MEGAKERNEL_JSON = REPO / "BENCH_megakernel.json"
 
 #: fields of each per-shard-count entry that are schedule-deterministic
 #: (wall_seconds, balances etc. are measurements, not invariants)
@@ -47,6 +51,9 @@ _GRAN_FIELDS = {
 #: schedule-deterministic fields of each streaming per-batch record
 _STREAM_FIELDS = ("rounds", "work", "seeds", "eff")
 _STREAM_SHARD_FIELDS = ("rounds", "work", "exchanged", "parity")
+#: schedule-deterministic fields of each (algorithm x kernel) cell —
+#: launches is the megakernel's headline invariant (1 per drain)
+_MEGA_FIELDS = ("rounds", "launches", "work")
 
 
 def _recompute() -> dict:
@@ -230,15 +237,66 @@ print(json.dumps(out))
     return json.loads(proc.stdout.strip().splitlines()[-1])
 
 
+def _recompute_megakernel() -> dict:
+    """Re-run bench_megakernel's deterministic portion in a subprocess.
+
+    Imports the sweep constants from bench_megakernel so the guard can
+    never drift from the configs that produced the baseline.
+    """
+    from .bench_megakernel import (ALGOS, EDGE_FACTOR, GRAPH_SEED, KERNELS,
+                                   SCALE, WORKERS)
+
+    body = f"""
+import os
+os.environ.setdefault('JAX_PLATFORMS', 'cpu')
+import json
+import numpy as np
+from repro.core import SchedulerConfig
+from repro.graph.generators import rmat
+from repro.runtime import (ExecutionPolicy, build_program, config_for,
+                           execute)
+
+g = rmat({SCALE}, edge_factor={EDGE_FACTOR}, seed={GRAPH_SEED})
+out = {{'algorithms': {{}}}}
+for algo, params in {list(ALGOS)!r}:
+    entry = {{}}
+    results = {{}}
+    for kernel in {list(KERNELS)}:
+        cfg = config_for(SchedulerConfig(num_workers={WORKERS}),
+                         ExecutionPolicy('single', kernel))
+        program = build_program(algo, g, cfg, params=dict(params))
+        state, stats, info = execute(program, g, cfg)
+        results[kernel] = np.asarray(program.result(state))
+        entry[kernel] = {{'rounds': info['rounds'],
+                          'launches': info['launches'],
+                          'work': info['work']}}
+    entry['parity_vs_persistent'] = bool(
+        (results['megakernel'] == results['persistent']).all())
+    out['algorithms'][algo] = entry
+print(json.dumps(out))
+"""
+    env = dict(os.environ, PYTHONPATH=os.pathsep.join(
+        [str(REPO / "src")] + ([os.environ["PYTHONPATH"]]
+                               if "PYTHONPATH" in os.environ else [])))
+    proc = subprocess.run([sys.executable, "-c", body], capture_output=True,
+                          text=True, env=env, timeout=1800, cwd=REPO)
+    if proc.returncode != 0:
+        raise RuntimeError(
+            f"megakernel smoke subprocess failed:\n{proc.stderr[-3000:]}")
+    return json.loads(proc.stdout.strip().splitlines()[-1])
+
+
 def run() -> int:
     """Returns the number of mismatches (0 = pass); prints a report."""
-    missing = [p for p in (SHARD_JSON, GRANULARITY_JSON, STREAM_JSON)
+    missing = [p for p in (SHARD_JSON, GRANULARITY_JSON, STREAM_JSON,
+                           MEGAKERNEL_JSON)
                if not p.exists()]
     if missing:
         for p in missing:
             section = {SHARD_JSON: "shard",
                        GRANULARITY_JSON: "granularity",
-                       STREAM_JSON: "stream"}[p]
+                       STREAM_JSON: "stream",
+                       MEGAKERNEL_JSON: "megakernel"}[p]
             print(f"smoke: {p.name} missing — run "
                   f"'python -m benchmarks.run {section}' to create the "
                   f"baseline")
@@ -291,14 +349,25 @@ def run() -> int:
               stream_base["sharded_bfs"][field],
               stream_fresh["sharded_bfs"][field])
 
+    mega_base = json.loads(MEGAKERNEL_JSON.read_text())["algorithms"]
+    mega_fresh = _recompute_megakernel()["algorithms"]
+    from .bench_megakernel import KERNELS as _MEGA_KERNELS
+    for algo, entry in mega_base.items():
+        for kernel in _MEGA_KERNELS:
+            for field in _MEGA_FIELDS:
+                check(f"megakernel/{algo}/{kernel}/{field}",
+                      entry[kernel][field],
+                      mega_fresh[algo][kernel][field])
+        check(f"megakernel/{algo}/parity_vs_persistent",
+              entry["parity_vs_persistent"],
+              mega_fresh[algo]["parity_vs_persistent"])
+
+    names = (f"{SHARD_JSON.name} / {GRANULARITY_JSON.name} / "
+             f"{STREAM_JSON.name} / {MEGAKERNEL_JSON.name}")
     if mismatches:
-        print(f"smoke: {mismatches} counter regression(s) vs "
-              f"{SHARD_JSON.name} / {GRANULARITY_JSON.name} / "
-              f"{STREAM_JSON.name}")
+        print(f"smoke: {mismatches} counter regression(s) vs {names}")
     else:
-        print(f"smoke: OK — all deterministic counters match "
-              f"{SHARD_JSON.name}, {GRANULARITY_JSON.name} and "
-              f"{STREAM_JSON.name}")
+        print(f"smoke: OK — all deterministic counters match {names}")
     return mismatches
 
 

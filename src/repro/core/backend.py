@@ -23,6 +23,16 @@ Values:
 Backend choice is a *performance* axis only: every dispatch site is required
 (and tested) to produce bit-identical results across backends, so the
 autotuner may measure both and pick freely (server/autotune.py).
+
+One additional value exists *internally*: ``STREAM`` (``"stream"``), the
+expansion backend the runtime substitutes for megakernel bodies
+(``kernel="megakernel"``, DESIGN.md §14).  It is not user-facing — inside
+the fused drain kernel the CSR lives in HBM and neighbor slices are
+DMA-streamed through a double-buffered VMEM scratch
+(``kernels/drain_loop/csr_stream``) instead of flat-gathered, still
+bit-identical to the jnp reference.  ``resolve_backend`` rejects it like
+any other unknown value; ``core.frontier.expand_merge_path`` dispatches it
+before resolution, and the same interpret-mode fallback applies off-TPU.
 """
 from __future__ import annotations
 
@@ -32,6 +42,12 @@ import jax
 
 #: the public axis values, in the order they appear in CLIs and docs.
 BACKENDS = ("jnp", "pallas", "auto")
+
+#: internal expansion-backend value for megakernel bodies (see module doc);
+#: never a valid ``SchedulerConfig.backend`` — the runtime injects it into
+#: the :class:`~repro.runtime.program.ProgramContext` it builds for
+#: ``kernel="megakernel"`` drains.
+STREAM = "stream"
 
 
 @functools.lru_cache(maxsize=1)

@@ -32,7 +32,7 @@ from typing import NamedTuple, Tuple
 import jax
 import jax.numpy as jnp
 
-from .backend import resolve_backend
+from .backend import STREAM, resolve_backend
 
 
 def searchsorted_right(sorted_arr: jax.Array, values: jax.Array) -> jax.Array:
@@ -133,6 +133,16 @@ def expand_merge_path(
     coarse-grained wavefront still spreads its neighbor work evenly across
     every lane — the paper's granularity x load-balancing composition.
     """
+    if backend == STREAM:
+        # internal megakernel value (checked before resolve_backend, which
+        # rejects it): the same LBS schedule, but neighbor slices are
+        # DMA-streamed HBM->VMEM inside the fused drain kernel
+        # (kernels/drain_loop/csr_stream; imported lazily — it imports
+        # Expansion and the schedule helpers from this module)
+        from ..kernels.drain_loop.csr_stream import expand_stream
+
+        return expand_stream(items, valid, row_ptr, col_idx, work_budget,
+                             widths=widths, max_width=max_width)
     if resolve_backend(backend) == "pallas":
         # imported lazily: kernels/ imports Expansion from this module
         from ..kernels.frontier_expand.ops import frontier_expand

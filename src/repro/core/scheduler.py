@@ -15,6 +15,11 @@ host->device dispatch:
     barrier).  The stop predicate is folded *into* the jitted step
     (DESIGN.md section 11), so the host never evaluates ``stop(state)``
     eagerly per round.
+  * ``megakernel_drive`` — the literal persistent kernel (DESIGN.md
+    section 14): the whole drain loop is fused into a single Pallas kernel
+    launch (``kernels/drain_loop``) that owns the queue buffers and
+    DMA-streams CSR row slices in-kernel; selected by
+    ``SchedulerConfig(kernel="megakernel")`` through the runtime layer.
 
 Both drivers run the same *wavefront step*: pop ``num_workers x fetch_size``
 tasks, apply the application function f, push the produced tasks.  Since the
@@ -96,6 +101,17 @@ class SchedulerConfig:
     shards donate up to ``steal_chunk`` owned tasks to their ring successor
     before the next round; ``0.0`` disables stealing.
 
+    ``kernel`` names the kernel strategy explicitly (DESIGN.md section 14):
+    ``"persistent"`` / ``"discrete"`` are the two strategies ``persistent``
+    has always toggled between; ``"megakernel"`` fuses the whole drain loop
+    into a single Pallas kernel launch (``kernels/drain_loop``) with
+    in-kernel DMA-streamed CSR expansion — bit-identical results, one
+    kernel entry per drain instead of one per round.  The default
+    ``"auto"`` defers to the legacy ``persistent`` bool so every existing
+    config resolves exactly as before; configs naming ``"megakernel"``
+    should keep ``persistent=True`` (the device-resident strategy it
+    degrades to wherever only the bool is consulted).
+
     ``granularity`` is the task-granularity axis (DESIGN.md section 12):
     the maximum chunk width ``G`` — how many consecutive CSR rows one queue
     slot may carry (core/task.py).  ``1`` (default) is the pre-granularity
@@ -120,6 +136,7 @@ class SchedulerConfig:
     steal_chunk: int = 64        # max tasks donated per shard per round
     granularity: int = 1         # max chunk width G (core/task.py); 1 = fine
     split_threshold: int = 0     # chunk degree-sum cap; 0 = work-budget only
+    kernel: str = "auto"         # persistent | discrete | megakernel | auto
 
     @property
     def wavefront(self) -> int:
@@ -203,6 +220,21 @@ def continuation(ops: QueueOps, cfg: SchedulerConfig, stop,
 def persistent_drive(step, cond, carry0):
     """Whole drain in one ``lax.while_loop`` (zero host round-trips)."""
     return jax.lax.while_loop(cond, step, carry0)
+
+
+def megakernel_drive(step, cond, carry0, *, limit=None, interpret=None):
+    """Whole drain in ONE fused Pallas kernel launch (DESIGN.md §14).
+
+    The third kernel strategy: where :func:`persistent_drive` still
+    re-enters the expand/push kernels every round of its while-loop, the
+    megakernel evaluates the identical loop jaxpr *inside* a single
+    ``pallas_call`` — bit-identical by construction, one kernel entry per
+    drain.  ``limit`` bounds the segment for the streaming snapshot layer.
+    Imported lazily: kernels/ imports this module's types.
+    """
+    from ..kernels.drain_loop.ops import megakernel_drive as _drive
+
+    return _drive(step, cond, carry0, limit=limit, interpret=interpret)
 
 
 def discrete_drive(step, cond, ops: QueueOps, carry0, trace=None):

@@ -1,0 +1,32 @@
+"""The persistent Pallas megakernel: one launch per drain (DESIGN.md §14).
+
+The paper's persistent strategy keeps workers resident in a single kernel
+that claims tasks until the queue is globally empty.  Our ``persistent``
+kernel value approximates that with a jitted ``lax.while_loop`` — zero
+host round-trips, but every round still re-enters the expand/push kernels.
+This package fuses the *whole* drain loop — claim → expand → apply → push →
+global-empty check — into one ``pallas_call``:
+
+  * :func:`~repro.kernels.drain_loop.kernel.fused_drain_pallas` traces any
+    ``(step, cond, carry)`` while-loop into a jaxpr, hoists its closed-over
+    constants (the CSR arrays, budgets, codecs) into explicit kernel
+    inputs, and evaluates it inside a single kernel body;
+  * :mod:`~repro.kernels.drain_loop.csr_stream` feeds the in-kernel
+    expansion: per-chunk CSR row slices are DMA'd HBM→VMEM through a
+    double-buffered scratch so the copy of round ``i+1`` overlaps the
+    gather of round ``i``;
+  * :func:`~repro.kernels.drain_loop.ops.megakernel_drive` is the driver
+    the scheduler dispatches to for ``ExecutionPolicy(kernel="megakernel")``
+    — with an optional round ``limit`` so the streaming snapshot layer can
+    segment a drain at the exact same boundaries as the other strategies.
+
+Like every kernel in this tree it compiles on TPU and falls back to
+interpret mode elsewhere (``core.backend.resolve_interpret``), so the
+parity/property/fault tests exercise the real fused loop on any host.
+"""
+from .csr_stream import expand_stream, stream_row_slices
+from .kernel import fused_drain_pallas
+from .ops import megakernel_drive
+
+__all__ = ["expand_stream", "fused_drain_pallas", "megakernel_drive",
+           "stream_row_slices"]

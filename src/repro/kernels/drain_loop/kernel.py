@@ -1,0 +1,76 @@
+"""``fused_drain_pallas`` — run a whole while-loop inside one pallas_call.
+
+The megakernel problem is *generality*: the drain's step function is an
+arbitrary program body (BFS relaxations, PageRank residue scatters,
+coloring conflict checks) closing over arbitrary graph state, and Pallas
+kernels may not capture traced constants.  ``jax.closure_convert`` does
+not help — it hoists only inexact-dtype (differentiable) constants, and a
+CSR graph is int32.  So we hoist by hand:
+
+  1. flatten the carry pytree and trace ``while_loop(cond, step, ·)`` over
+     the leaves with ``jax.make_jaxpr`` — every closed-over array
+     (row_ptr, col_idx, budgets, chunk codecs) lands in ``jaxpr.consts``;
+  2. pass ``consts + carry leaves`` as explicit kernel operands (0-d
+     scalars lifted to shape ``(1,)`` — TPU refs are >= 1-d);
+  3. the kernel body re-evaluates the jaxpr with ``jax.core.eval_jaxpr``
+     on the loaded values and stores the loop's outputs.
+
+Because the kernel evaluates the *identical jaxpr* the persistent driver
+would hand to ``lax.while_loop``, the fused drain is bit-identical to the
+persistent strategy by construction — the parity matrix in
+tests/test_megakernel.py pins that, and the property battery drives the
+claim/push protocol through this same entry point.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ...core.backend import resolve_interpret
+
+
+def fused_drain_pallas(step, cond, carry0, *, interpret=None):
+    """Run ``while cond(c): c = step(c)`` to its fixed point in ONE kernel.
+
+    ``carry0`` may be any pytree of arrays (the drain carry is
+    ``(queue, state, rounds, processed)``; the property tests thread
+    scripted op tapes through here).  ``step``/``cond`` may close over
+    anything traceable — constants are hoisted into kernel operands.
+    Returns the final carry with the input tree structure.  ``interpret``
+    follows the repo-wide rule: ``None`` = interpret iff no TPU attached.
+    """
+    flat0, treedef = jax.tree.flatten(carry0)
+    flat0 = [jnp.asarray(x) for x in flat0]
+
+    def flat_drain(*leaves):
+        carry = jax.tree.unflatten(treedef, list(leaves))
+        out = jax.lax.while_loop(cond, step, carry)
+        return tuple(jax.tree.leaves(out))
+
+    closed = jax.make_jaxpr(flat_drain)(*flat0)
+    consts = [jnp.asarray(c) for c in closed.consts]
+    inputs = consts + flat0
+    # TPU refs are >= 1-d; lift 0-d scalars (round counters, cursors) and
+    # reshape back on load so the jaxpr sees its original avals.
+    lifted = [x.reshape(1) if x.ndim == 0 else x for x in inputs]
+    out_avals = closed.out_avals
+    n_in, n_const = len(lifted), len(consts)
+
+    def kernel(*refs):
+        in_refs, out_refs = refs[:n_in], refs[n_in:]
+        vals = [r[...].reshape(x.shape) for r, x in zip(in_refs, inputs)]
+        outs = jax.core.eval_jaxpr(closed.jaxpr, vals[:n_const],
+                                   *vals[n_const:])
+        for o_ref, o in zip(out_refs, outs):
+            o_ref[...] = o.reshape(o_ref.shape)
+
+    outs = pl.pallas_call(
+        kernel,
+        out_shape=tuple(
+            jax.ShapeDtypeStruct(a.shape if a.ndim else (1,), a.dtype)
+            for a in out_avals),
+        interpret=resolve_interpret(interpret),
+    )(*lifted)
+    outs = [o.reshape(a.shape) for o, a in zip(outs, out_avals)]
+    return jax.tree.unflatten(treedef, outs)

@@ -1,0 +1,30 @@
+"""``megakernel_drive`` — the drain driver behind ``kernel="megakernel"``.
+
+The third point of the kernel-strategy axis (persistent | discrete |
+megakernel): where ``persistent_drive`` hands the step/cond pair to
+``lax.while_loop`` and ``discrete_drive`` to a host loop, this driver
+hands them to :func:`~repro.kernels.drain_loop.kernel.fused_drain_pallas`
+— the whole drain becomes ONE kernel launch.
+
+``limit`` serves the streaming snapshot layer (stream/driver.py): a
+segmented megakernel drain folds ``rounds < limit`` into the loop
+condition, so segment boundaries are absolute round numbers and a resumed
+drain takes exactly the same steps as an uninterrupted one — the same
+invariant the persistent segments rely on, proved under SIGKILL by
+tests/test_megakernel.py.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernel import fused_drain_pallas
+
+
+def megakernel_drive(step, cond, carry0, *, limit=None, interpret=None):
+    """Drive ``carry0 = (queue, state, rounds, processed)`` to its fixed
+    point (or to round ``limit``) in a single fused kernel launch."""
+    if limit is not None:
+        limit = jnp.int32(limit)
+        inner = cond
+        cond = lambda c: inner(c) & (c[2] < limit)
+    return fused_drain_pallas(step, cond, carry0, interpret=interpret)

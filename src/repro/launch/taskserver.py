@@ -136,11 +136,14 @@ def main() -> None:
     ap.add_argument("--exec-policy", default="auto",
                     help="execution policy "
                          "('<topology>.<kernel>[.g<width>]', DESIGN.md "
-                         "sections 11-12): e.g. fused.discrete drains "
+                         "sections 11-12, 14): e.g. fused.discrete drains "
                          "through a packed MultiQueue lane with a host "
                          "loop, sharded.persistent.g4 adds width-4 chunk "
-                         "tasks; auto keeps the config defaults (single "
-                         "topology, persistent kernel).  Known cells: "
+                         "tasks, single.megakernel fuses the whole drain "
+                         "loop into ONE Pallas kernel launch (compiled on "
+                         "TPU, interpret mode elsewhere); auto keeps the "
+                         "config defaults (single topology, persistent "
+                         "kernel).  Known cells: "
                          + ", ".join(str(p) for p in POLICY_GRID))
     ap.add_argument("--granularity", type=int, default=1,
                     help="max task chunk width G (core/task.py, DESIGN.md "
@@ -217,10 +220,11 @@ def main() -> None:
 
     granularity = args.granularity
     if args.exec_policy == "auto":
-        topology, persistent = "auto", True
+        topology, kernel, persistent = "auto", "auto", True
     else:
         policy = parse_policy(args.exec_policy)
-        topology, persistent = policy.topology, policy.persistent
+        topology, kernel = policy.topology, policy.kernel
+        persistent = policy.persistent
         # an explicit granularity segment — including .g1 — wins over
         # --granularity, as the flag's help promises
         if len(args.exec_policy.split(".")) == 3:
@@ -228,7 +232,8 @@ def main() -> None:
     config = None if args.autotune else SchedulerConfig(
         num_workers=args.workers, fetch_size=args.fetch,
         backend=args.backend, topology=topology, persistent=persistent,
-        granularity=granularity, split_threshold=args.split_threshold)
+        kernel=kernel, granularity=granularity,
+        split_threshold=args.split_threshold)
     autotuner = (Autotuner(cache_path=args.autotune_cache)
                  if args.autotune else None)
 

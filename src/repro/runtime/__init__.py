@@ -4,7 +4,8 @@ Applications declare *what* a task does once — an :class:`AtosProgram`
 (wavefront body, stop condition, rescan hook, replica-merge spec) — and an
 :class:`ExecutionPolicy` decides *how* it is scheduled: topology
 (``single | fused | sharded``) crossed with kernel strategy
-(``persistent | discrete``).  :func:`execute` is the front door.
+(``persistent | discrete | megakernel``).  :func:`execute` is the front
+door.
 
 ``execute`` / ``build_program`` are imported lazily: the algorithm modules
 import :mod:`repro.runtime.program` for the protocol types, and an eager

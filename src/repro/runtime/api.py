@@ -10,14 +10,16 @@ drivers, the autotuner, benchmarks, tests) never branch on topology.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Any, NamedTuple, Optional
 
 import jax.numpy as jnp
 
+from ..core.backend import STREAM
 from ..core.queue import make_multiqueue, make_queue
 from ..core.scheduler import (QueueOps, RunStats, SchedulerConfig,
-                              continuation, discrete_drive, persistent_drive,
-                              taskqueue_ops, wavefront_step)
+                              continuation, discrete_drive, megakernel_drive,
+                              persistent_drive, taskqueue_ops, wavefront_step)
 from .policy import ExecutionPolicy, policy_of
 from .program import AtosProgram, ProgramContext
 
@@ -93,6 +95,14 @@ def _shared_setup(program: AtosProgram, graph, cfg: SchedulerConfig,
     seeds = jnp.asarray(seeds, jnp.int32)
     capacity = shared_queue_capacity(program, queue_capacity)
     ctx = _context(cfg)
+    mega = policy.kernel == "megakernel"
+    if mega:
+        # the megakernel body expands through the in-kernel DMA stream
+        # (backend.STREAM, kernels/drain_loop/csr_stream); its queue ops run
+        # on the jnp reference — a nested compaction kernel inside the fused
+        # drain would add launch structure without changing a bit.
+        ctx = ctx._replace(backend=STREAM)
+        cfg = dataclasses.replace(cfg, backend="jnp")
     f = program.body(graph, ctx)
     on_empty = program.on_empty(graph, ctx)
 
@@ -123,7 +133,9 @@ def _run_shared_core(program: AtosProgram, graph, cfg: SchedulerConfig,
     queue, state, ops, step, cond, dropped_of = _shared_setup(
         program, graph, cfg, policy, queue_capacity)
     carry0 = (queue, state, jnp.int32(0), jnp.int32(0))
-    if policy.persistent:
+    if policy.kernel == "megakernel":
+        queue, state, rounds, processed = megakernel_drive(step, cond, carry0)
+    elif policy.persistent:
         queue, state, rounds, processed = persistent_drive(step, cond, carry0)
     else:
         queue, state, rounds, processed = discrete_drive(step, cond, ops,
@@ -134,6 +146,11 @@ def _run_shared_core(program: AtosProgram, graph, cfg: SchedulerConfig,
         "work": program.work_of(state),
         "dropped": int(stats.dropped),
         "splits": program.splits_of(state),
+        # kernel-entry events per drain: persistent/discrete re-enter the
+        # expand/push kernels every round (one host dispatch per round for
+        # discrete; one while-loop iteration per round for persistent);
+        # the megakernel is ONE launch for the whole drain (DESIGN.md §14)
+        "launches": 1 if policy.kernel == "megakernel" else int(rounds),
     }
     return ExecutionResult(state, stats, info)
 
@@ -176,7 +193,9 @@ def execute(
     """Drain ``program`` under the config's resolved execution policy.
 
     Returns ``(final_state, RunStats, info)``; ``info`` carries the
-    per-topology telemetry (exchange/steal meters for sharded runs).
+    per-topology telemetry (exchange/steal meters for sharded runs; for
+    single/fused runs ``info["launches"]`` counts kernel-entry events per
+    drain — O(rounds) for persistent/discrete, 1 for the megakernel).
     ``trace`` is honored by the discrete kernel strategy only: per-round
     ``(size, items)`` tuples (single/fused) or telemetry dicts (sharded).
     """

@@ -5,7 +5,7 @@ Atos exposes orthogonal scheduling controls — kernel strategy
 runtime layer adds the deployment topology on top:
 
     topology:     single  | fused  | sharded
-    kernel:       persistent | discrete
+    kernel:       persistent | discrete | megakernel
     granularity:  g1 | g2 | g4 | ... (max chunk width, core/task.py)
 
 ``single``  — one TaskQueue, one device: the classic Atos drain.
@@ -18,7 +18,12 @@ runtime layer adds the deployment topology on top:
 
 ``persistent`` wraps the drain in one ``lax.while_loop`` (zero host
 round-trips); ``discrete`` dispatches one jitted round per host-loop
-iteration.
+iteration; ``megakernel`` fuses the whole drain loop into a single Pallas
+kernel launch with in-kernel DMA-streamed CSR expansion
+(``kernels/drain_loop``, DESIGN.md §14) — bit-identical results, ONE
+kernel entry per drain.  ``sharded.megakernel`` is the one invalid cell:
+the sharded round is a cross-device collective (routed all_to_all
+exchange) that cannot run inside a single device-resident kernel.
 
 ``granularity`` is the paper's task-parallel granularity control
 (DESIGN.md section 12): how many consecutive CSR rows one queue slot may
@@ -28,9 +33,10 @@ policy names it is spelled as a ``.g<width>`` suffix — omitted for the
 default width 1, so every pre-granularity policy string still parses to
 the same cell.
 
-Every :class:`~repro.runtime.program.AtosProgram` runs under every cell of
-the 3 x 2 x G matrix unchanged — the parity tests (tests/test_runtime.py)
-pin the full 6-cell grid at g = 1 and g = 4.
+Every :class:`~repro.runtime.program.AtosProgram` runs under every valid
+cell of the 3 x 3 x G matrix unchanged — the parity tests
+(tests/test_runtime.py, tests/test_megakernel.py) pin the full 8-cell grid
+(3 x 3 minus ``sharded.megakernel``) at g = 1 and g = 4.
 """
 from __future__ import annotations
 
@@ -40,12 +46,20 @@ from typing import Tuple
 from ..core.task import MAX_GRANULARITY
 
 TOPOLOGIES: Tuple[str, ...] = ("single", "fused", "sharded")
-KERNELS: Tuple[str, ...] = ("persistent", "discrete")
+KERNELS: Tuple[str, ...] = ("persistent", "discrete", "megakernel")
+
+
+def _valid_cell(topology: str, kernel: str) -> bool:
+    """``sharded.megakernel`` is the single invalid (topology, kernel) pair:
+    the sharded round's routed exchange is a cross-device collective, and a
+    megakernel is by definition one device-resident launch."""
+    return not (topology == "sharded" and kernel == "megakernel")
 
 
 def _matrix_help() -> str:
     """One shared enumeration of the policy matrix for error messages."""
-    cells = ", ".join(f"{t}.{k}" for t in TOPOLOGIES for k in KERNELS)
+    cells = ", ".join(f"{t}.{k}" for t in TOPOLOGIES for k in KERNELS
+                      if _valid_cell(t, k))
     return (f"valid cells are '<topology>.<kernel>[.g<width>]' with "
             f"topology x kernel in {{{cells}}} and an optional granularity "
             f"suffix g1..g{MAX_GRANULARITY} (omitted = g1)")
@@ -68,6 +82,13 @@ class ExecutionPolicy:
             raise ValueError(f"unknown kernel strategy {self.kernel!r}; "
                              f"expected one of {KERNELS} — "
                              f"{_matrix_help()}")
+        if not _valid_cell(self.topology, self.kernel):
+            raise ValueError(
+                "sharded.megakernel is not a valid cell: the megakernel "
+                "fuses one device's whole drain into a single kernel "
+                "launch, but the sharded topology routes tasks between "
+                "devices every round (a collective that cannot run inside "
+                f"a resident kernel) — {_matrix_help()}")
         if not 1 <= self.granularity <= MAX_GRANULARITY:
             raise ValueError(
                 f"bad granularity {self.granularity!r}; expected an int in "
@@ -75,7 +96,11 @@ class ExecutionPolicy:
 
     @property
     def persistent(self) -> bool:
-        return self.kernel == "persistent"
+        """True for the device-resident strategies (``persistent`` and
+        ``megakernel``): code that only knows the legacy bool treats a
+        megakernel drain as persistent-style, which is the safe
+        degradation (one launch, zero host round-trips)."""
+        return self.kernel != "discrete"
 
     def __str__(self) -> str:
         base = f"{self.topology}.{self.kernel}"
@@ -83,11 +108,13 @@ class ExecutionPolicy:
             f"{base}.g{self.granularity}"
 
 
-#: every (topology, kernel) combination at the default granularity,
+#: every valid (topology, kernel) combination at the default granularity,
 #: row-major — the finite slice of the matrix tests and CLIs enumerate
 #: (granularity is unbounded; name a cell with a ``.g<width>`` suffix).
+#: 8 cells: 3 x 3 minus the invalid ``sharded.megakernel``.
 POLICY_GRID: Tuple[ExecutionPolicy, ...] = tuple(
     ExecutionPolicy(t, k) for t in TOPOLOGIES for k in KERNELS
+    if _valid_cell(t, k)
 )
 
 
@@ -118,6 +145,9 @@ def policy_of(cfg) -> ExecutionPolicy:
     ``topology="auto"`` resolves to ``sharded`` iff ``num_shards > 1``; an
     explicit non-sharded topology with ``num_shards > 1`` is a
     contradiction and raises rather than silently dropping the mesh.
+    ``kernel="auto"`` (the config default) defers to the legacy
+    ``persistent`` bool, so every pre-megakernel config resolves exactly
+    as before; an explicit kernel name wins over the bool.
     ``granularity`` is carried through verbatim (validated against the
     matrix bounds by :class:`ExecutionPolicy`).
     """
@@ -129,13 +159,21 @@ def policy_of(cfg) -> ExecutionPolicy:
             f"topology={topology!r} is incompatible with "
             f"num_shards={cfg.num_shards}; use topology='sharded' (or "
             f"'auto') — {_matrix_help()}")
-    return ExecutionPolicy(topology,
-                           "persistent" if cfg.persistent else "discrete",
-                           getattr(cfg, "granularity", 1))
+    kernel = getattr(cfg, "kernel", "auto")
+    if kernel == "auto":
+        kernel = "persistent" if cfg.persistent else "discrete"
+    return ExecutionPolicy(topology, kernel, getattr(cfg, "granularity", 1))
 
 
 def config_for(cfg, policy: ExecutionPolicy):
-    """A config whose resolved policy is ``policy`` (other axes unchanged)."""
+    """A config whose resolved policy is ``policy`` (other axes unchanged).
+
+    Both kernel fields are written: the explicit ``kernel`` name (which
+    :func:`policy_of` reads back) and the legacy ``persistent`` bool
+    (True for both device-resident strategies) for code that predates the
+    three-valued axis.
+    """
     return dataclasses.replace(cfg, topology=policy.topology,
+                               kernel=policy.kernel,
                                persistent=policy.persistent,
                                granularity=policy.granularity)

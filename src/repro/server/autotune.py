@@ -25,6 +25,13 @@ wall time.  ``sharded`` is excluded from the default grid (it needs a
 device mesh and competes on capacity, not calibration wall time) but tuned
 caches that record it parse fine.
 
+The kernel-strategy axis gained a third value in DESIGN.md section 14:
+``megakernel`` candidates (``MEGAKERNEL_GRID``) fuse the whole drain into
+one Pallas launch.  Results stay bit-identical, so the tuner again picks
+on wall time — on TPU the fused loop removes every per-round kernel entry;
+on CPU it pays the Pallas interpreter and loses honestly, exactly like the
+``pallas`` backend candidates.
+
 The sixth axis, ``granularity`` (DESIGN.md section 12), is the paper's
 task-parallel granularity control: the maximum chunk width a queue slot
 carries (core/task.py).  Results are preserved at every width (exact for
@@ -95,6 +102,20 @@ GRANULARITY_GRID: Tuple[int, ...] = (1, 4)
 #: topology, and granularity.  The granularity-1 single-topology jnp block
 #: keeps ``topology="auto"`` (which resolves to ``single`` off-mesh) and
 #: comes first so ``DEFAULT_CANDIDATES[0] == SchedulerConfig()``.
+#: the megakernel kernel strategy (DESIGN.md section 14) joins the search
+#: as a small dedicated block rather than a full cross: inside the fused
+#: drain the expansion always DMA-streams CSR slices and the queue ops run
+#: on the jnp reference, so crossing it with the ``backend`` axis would
+#: only duplicate cells.  ``persistent=True`` is the documented mirror for
+#: code that reads the legacy bool.
+MEGAKERNEL_GRID: Tuple[SchedulerConfig, ...] = tuple(
+    SchedulerConfig(num_workers=w, kernel="megakernel",
+                    topology="auto" if t == "single" else t, granularity=g)
+    for g in GRANULARITY_GRID
+    for t in TOPOLOGY_GRID
+    for w in (16, 64)
+)
+
 DEFAULT_CANDIDATES: Tuple[SchedulerConfig, ...] = tuple(
     dataclasses.replace(c, backend=b,
                         topology="auto" if t == "single" else t,
@@ -103,7 +124,7 @@ DEFAULT_CANDIDATES: Tuple[SchedulerConfig, ...] = tuple(
     for t in TOPOLOGY_GRID
     for b in BACKEND_GRID
     for c in _BASE_GRID
-)
+) + MEGAKERNEL_GRID
 
 
 def graph_class(graph: CSRGraph) -> str:
@@ -115,7 +136,10 @@ def graph_class(graph: CSRGraph) -> str:
 
 
 def _config_key(cfg: SchedulerConfig) -> str:
-    kind = "persistent" if cfg.persistent else "discrete"
+    # the key's leading segment is the resolved kernel-strategy name; the
+    # legacy two names keep their exact pre-megakernel spelling so every
+    # cached trial written before the third strategy existed stays valid.
+    kind = policy_of(cfg).kernel
     key = (f"{kind}|workers={cfg.num_workers}|fetch={cfg.fetch_size}"
            f"|backend={cfg.backend}")
     topology = policy_of(cfg).topology
@@ -133,7 +157,8 @@ def _config_dict(cfg: SchedulerConfig) -> dict:
     return {"num_workers": cfg.num_workers, "fetch_size": cfg.fetch_size,
             "persistent": cfg.persistent, "backend": cfg.backend,
             "topology": policy_of(cfg).topology,
-            "granularity": cfg.granularity}
+            "granularity": cfg.granularity,
+            "kernel": cfg.kernel}
 
 
 def _load_topology(stored: Optional[str]) -> str:
@@ -151,7 +176,8 @@ def _config_from_dict(d: dict) -> SchedulerConfig:
                            persistent=bool(d["persistent"]),
                            backend=str(d.get("backend", "jnp")),
                            topology=_load_topology(d.get("topology")),
-                           granularity=int(d.get("granularity", 1)))
+                           granularity=int(d.get("granularity", 1)),
+                           kernel=str(d.get("kernel", "auto")))
 
 
 def _default_runner(algorithm: str, graph: CSRGraph,
@@ -319,7 +345,10 @@ def _parse_config_key(key: str) -> SchedulerConfig:
     return SchedulerConfig(
         num_workers=int(workers.split("=")[1]),
         fetch_size=int(fetch.split("=")[1]),
-        persistent=(kind == "persistent"),
+        # megakernel keys are new (no pre-megakernel cache can hold one);
+        # the legacy bool mirrors "device-resident" for both such kinds
+        persistent=(kind != "discrete"),
+        kernel=("megakernel" if kind == "megakernel" else "auto"),
         backend=extras.get("backend", "jnp"),
         topology=_load_topology(extras.get("topology")),
         granularity=int(extras.get("granularity", 1)),

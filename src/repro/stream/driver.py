@@ -30,7 +30,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.queue import make_multiqueue, make_queue
-from ..core.scheduler import SchedulerConfig, persistent_drive
+from ..core.scheduler import (SchedulerConfig, megakernel_drive,
+                              persistent_drive)
 from ..runtime.api import _shared_setup, shared_queue_capacity
 from ..runtime.policy import policy_of
 from ..runtime.programs import build_program
@@ -83,12 +84,23 @@ class StreamResult:
     info: dict
 
 
-def _drive_shared(step, cond, carry, persistent: bool, every: int, cb):
+def _drive_shared(step, cond, carry, kernel: str, every: int, cb):
     """Drive a single/fused carry to its fixed point, calling ``cb(carry)``
     at every ``every``-th round (0 = never).  Rounds live in ``carry[2]``,
     so the boundaries are absolute round numbers — a resumed drain lands on
-    the same boundaries the uninterrupted one did."""
-    if persistent:
+    the same boundaries the uninterrupted one did.  ``kernel`` is the
+    resolved strategy name (``policy.kernel``); a segmented megakernel
+    drain bakes the same ``rounds < limit`` term into its in-kernel loop
+    condition, so it snapshots at the identical boundaries."""
+    if kernel == "megakernel":
+        if every <= 0:
+            return megakernel_drive(step, cond, carry)
+        while bool(cond(carry)):
+            carry = megakernel_drive(step, cond, carry,
+                                     limit=int(carry[2]) + every)
+            cb(carry)
+        return carry
+    if kernel == "persistent":
         if every <= 0:
             return persistent_drive(step, cond, carry)
         seg = jax.jit(lambda c, limit: jax.lax.while_loop(
@@ -282,7 +294,7 @@ def run_stream(
             if snap is not None and restored is None:
                 save_snapshot(carry[0], carry[1], 0, 0)
             cb = (lambda c: save_snapshot(c[0], c[1], int(c[2]), int(c[3])))
-            carry = _drive_shared(step, cond, carry, policy.persistent,
+            carry = _drive_shared(step, cond, carry, policy.kernel,
                                   every, cb)
             queue, state, rounds_a, processed_a = carry
             rounds, processed = int(rounds_a), int(processed_a)

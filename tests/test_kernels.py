@@ -49,6 +49,55 @@ def test_frontier_expand_op_equals_core():
         np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
 
 
+def test_frontier_expand_multi_tile_chunked_wraparound_parity():
+    """The regime the smoke test above never reaches: a width-4 chunked
+    wavefront popped across a wrapped ring head, whose degree-sum spills
+    past one LBS tile (budget 4096 > TILE) — all three expansion backends
+    (jnp reference, Pallas kernel, megakernel DMA stream) must agree on
+    every output lane, exactly as the drain loops interleave them."""
+    from repro.core import ChunkCodec, make_queue
+    from repro.core.backend import STREAM
+    from repro.core.frontier import chunk_degrees, expand_merge_path
+    from repro.kernels.frontier_expand.ops import frontier_expand
+    from repro.graph import rmat
+
+    g = rmat(8, 8, seed=3)
+    codec = ChunkCodec(4)
+    n, W, cap, budget = g.num_vertices, 64, 64, 4096
+
+    local = np.random.default_rng(7)
+    def chunks(k, base):
+        heads = local.integers(0, n - 4, size=k).astype(np.int32) + base
+        widths = local.integers(1, 5, size=k).astype(np.int32)
+        return codec.encode(jnp.asarray(heads % (n - 4)), jnp.asarray(widths))
+
+    # rotate the ring so the popped wavefront physically wraps: after
+    # push 48 / pop 40 / push 48 the live window is slots 40..95 (mod 64)
+    q = make_queue(cap)
+    q = q.push_dense(chunks(48, 0))
+    _, _, q = q.pop(40)
+    q = q.push_dense(chunks(48, 100))
+    head_before = int(q.head)
+    items, valid, q = q.pop(W)
+    n_popped = int(np.asarray(valid).sum())
+    assert n_popped == 56
+    assert head_before + n_popped > cap  # the pop really crossed the seam
+
+    safe = jnp.where(valid, items, 0)          # EMPTY lanes, as bfs.py does
+    heads, widths = codec.decode(safe)
+    assert int(jnp.cumsum(chunk_degrees(heads, widths, valid,
+                                        g.row_ptr))[-1]) > 1024  # multi-tile
+    ref = expand_merge_path(heads, valid, g.row_ptr, g.col_idx, budget,
+                            widths=widths, max_width=4)
+    pal = frontier_expand(heads, valid, g.row_ptr, g.col_idx, budget,
+                          widths=widths, max_width=4)
+    stream = expand_merge_path(heads, valid, g.row_ptr, g.col_idx, budget,
+                               backend=STREAM, widths=widths, max_width=4)
+    for got in (pal, stream):
+        for x, y in zip(got, ref):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
 # ------------------------------------------------------- compact kernel
 @pytest.mark.parametrize("n", [1, 5, 255, 256, 257, 1000, 2048])
 @pytest.mark.parametrize("p", [0.0, 0.3, 1.0])

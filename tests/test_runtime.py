@@ -41,8 +41,9 @@ def g_grid():
 
 # ---------------------------------------------------------------- policies
 def test_policy_grid_is_complete_and_parses():
-    assert len(POLICY_GRID) == 6
-    assert len(set(POLICY_GRID)) == 6
+    # 8 cells: 3 topologies x 3 kernels minus the invalid sharded.megakernel
+    assert len(POLICY_GRID) == 8
+    assert len(set(POLICY_GRID)) == 8
     for p in POLICY_GRID:
         assert parse_policy(str(p)) == p
     with pytest.raises(ValueError, match="topology"):
@@ -51,6 +52,11 @@ def test_policy_grid_is_complete_and_parses():
         ExecutionPolicy("single", "eager")
     with pytest.raises(ValueError, match="policy"):
         parse_policy("persistent")
+    # the one hole in the matrix: a megakernel is one device-resident
+    # launch, the sharded round is a cross-device collective
+    with pytest.raises(ValueError, match="sharded.megakernel"):
+        parse_policy("sharded.megakernel")
+    assert ExecutionPolicy("single", "megakernel") in POLICY_GRID
 
 
 def test_policy_granularity_axis_parses_and_prints():
@@ -80,9 +86,12 @@ def test_policy_errors_enumerate_the_full_matrix():
             bad()
         msg = str(e.value)
         for cell in ("single.persistent", "single.discrete",
+                     "single.megakernel",
                      "fused.persistent", "fused.discrete",
+                     "fused.megakernel",
                      "sharded.persistent", "sharded.discrete"):
             assert cell in msg, (msg, cell)
+        assert "sharded.megakernel" not in msg  # never advertised as valid
         assert "g<width>" in msg
     with pytest.raises(ValueError, match="granularity"):
         parse_policy("single.persistent.g0")
@@ -121,10 +130,13 @@ def test_build_program_rejects_unknowns(g_grid):
                       params={"bogus": 1})
 
 
-# ------------------------------- parity: one program, 6 policies x 2 widths
+# ------------------------------- parity: one program, 8 policies x 2 widths
 # The matrix mirrors PR 4's six-cell block with the third (granularity)
-# axis: g=1 is the pre-granularity task stream bit-for-bit, g=4 packs
-# (vertex, width) chunks into the same int32 slots (DESIGN.md section 12).
+# axis — g=1 is the pre-granularity task stream bit-for-bit, g=4 packs
+# (vertex, width) chunks into the same int32 slots (DESIGN.md section 12) —
+# plus the megakernel kernel strategy (DESIGN.md section 14), whose deeper
+# battery (claim/push property tests, SIGKILL fault injection) lives in
+# tests/test_megakernel.py.
 GRANULARITIES = (1, 4)
 
 
