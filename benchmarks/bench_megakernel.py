@@ -18,15 +18,21 @@ evaluated in-kernel).
 The ``roofline`` section compiles the persistent drain body once
 (``launch/roofline.cost_terms``), composes the per-round HLO bytes/flops
 over the measured round count (XLA costs a while-loop body once, the same
-convention launch/dryrun.py uses for scans) and reports the drain's
-memory/compute terms against the TPU v5e roofline next to the measured
-megakernel wall — achieved-vs-roofline bandwidth.  Wall-based numbers are
-excluded from the CI guard like every other timing; the rounds / launches
-/ work counters are recomputed by ``benchmarks/smoke.py`` on every push.
+convention launch/dryrun.py uses for scans), then ADDS the megakernel's
+own streamed-slice traffic — every expansion DMAs ``wavefront x
+work_budget`` int32 lanes regardless of actual chunk degrees
+(``kernels/drain_loop/csr_stream``, DESIGN.md section 14) — and reports
+the memory/compute terms against the TPU v5e roofline next to the
+measured megakernel wall — achieved-vs-roofline bandwidth.  Wall-based
+numbers are excluded from the CI guard like every other timing; the
+rounds / launches / work counters are recomputed by
+``benchmarks/smoke.py`` on every push.
 
-On CPU the megakernel runs in Pallas interpret mode, so its wall seconds
-are an emulation artifact there — the counters and the parity bit are the
-portable signal; the compiled-TPU path uses the identical entry point.
+The megakernel is an interpret-mode prototype (no Mosaic lowering for the
+jaxpr-in-kernel body yet, DESIGN.md section 14), so its wall seconds are
+an emulation artifact on every backend — the counters and the parity bit
+are the portable signal, and the roofline terms bound what a future
+compiled lowering would have to beat.
 """
 from __future__ import annotations
 
@@ -115,12 +121,23 @@ def _child() -> None:
     total = per_round.scaled(float(rounds))
     roof = make_roofline(total, chips=1, model_flops=total.flops)
     mega_wall = payload["algorithms"]["bfs"]["megakernel"]["wall_seconds"]
-    achieved_bw = total.bytes / mega_wall if mega_wall else 0.0
+    # the megakernel's streamed-slice term: every expansion DMAs a full
+    # wavefront x work_budget int32 block regardless of chunk degrees
+    # (csr_stream, DESIGN.md section 14) — traffic the persistent drain's
+    # HLO byte count does not model, so it is added explicitly before
+    # computing achieved bandwidth.
+    from repro.algorithms.common import default_work_budget
+    work_budget = default_work_budget(g, cfg.wavefront)
+    stream_bytes = float(rounds) * cfg.wavefront * work_budget * 4
+    mega_bytes = total.bytes + stream_bytes
+    achieved_bw = mega_bytes / mega_wall if mega_wall else 0.0
     payload["roofline"] = {
-        "drain": "bfs/persistent body x rounds",
+        "drain": "bfs/persistent body x rounds + megakernel stream term",
         "rounds": rounds,
         "hlo_flops": total.flops,
         "hlo_bytes": total.bytes,
+        "stream_slice_bytes": stream_bytes,
+        "megakernel_bytes": mega_bytes,
         "t_compute_s": roof.t_compute,
         "t_memory_s": roof.t_memory,
         "dominant": roof.dominant,

@@ -237,6 +237,22 @@ def megakernel_drive(step, cond, carry0, *, limit=None, interpret=None):
     return _drive(step, cond, carry0, limit=limit, interpret=interpret)
 
 
+def megakernel_segment(step, cond, example_carry, *, interpret=None):
+    """Build-once segmented megakernel driver for the snapshot layer.
+
+    Returns ``seg(carry, limit)``: the round limit rides as a kernel
+    operand, so one traced jaxpr / pallas_call serves every snapshot
+    segment (:func:`repro.kernels.drain_loop.ops.make_megakernel_segment`)
+    — the fused analogue of jitting one persistent segment function and
+    reusing it with ``limit`` as a traced argument.  Imported lazily:
+    kernels/ imports this module's types.
+    """
+    from ..kernels.drain_loop.ops import make_megakernel_segment
+
+    return make_megakernel_segment(step, cond, example_carry,
+                                   interpret=interpret)
+
+
 def discrete_drive(step, cond, ops: QueueOps, carry0, trace=None):
     """Host loop, one jitted round per iteration (discrete kernels).
 
@@ -310,15 +326,50 @@ def discrete_run(
     return q, s, RunStats(rounds, processed, q.dropped)
 
 
+def megakernel_run(
+    f: WavefrontFn,
+    queue: TaskQueue,
+    state: Any,
+    cfg: SchedulerConfig,
+    stop: Optional[Callable[[Any], jax.Array]] = None,
+    on_empty=None,
+    empty_means_done: Optional[bool] = None,
+):
+    """Run the whole drain as ONE fused Pallas launch (DESIGN.md §14).
+
+    The raw-``WavefrontFn`` analogue of the runtime layer's megakernel
+    dispatch, so ``cfg.kernel="megakernel"`` is honored — not silently
+    degraded to the persistent strategy — even through the legacy
+    :func:`run` front door.
+    """
+    # queue ops inside the fused drain run the jnp reference — a nested
+    # compaction kernel would add launch structure without changing a bit
+    # (the runtime layer does the same, runtime/api._shared_setup).
+    ops = taskqueue_ops(dataclasses.replace(cfg, backend="jnp"))
+    cond = continuation(ops, cfg, stop,
+                        resolve_empty_means_done(on_empty, empty_means_done))
+    step = lambda carry: wavefront_step(f, on_empty, ops, carry)
+    q, s, rounds, processed = megakernel_drive(
+        step, cond, (queue, state, jnp.int32(0), jnp.int32(0)))
+    return q, s, RunStats(rounds, processed, q.dropped)
+
+
 def run(f, queue, state, cfg: SchedulerConfig, stop=None, on_empty=None,
         empty_means_done: Optional[bool] = None, trace=None):
-    """Dispatch on ``cfg.persistent`` — the Atos ``ifPersist`` switch.
+    """Dispatch on the kernel strategy — the Atos ``ifPersist`` switch,
+    three-valued since the megakernel: an explicit
+    ``cfg.kernel="megakernel"`` routes to :func:`megakernel_run` (the
+    legacy ``persistent`` bool alone never selects it).
 
     Deprecated front door: new code should express the drain as an
     :class:`~repro.runtime.program.AtosProgram` and call
     :func:`repro.runtime.execute`, which also serves the fused and sharded
     topologies.  This shim remains for raw-``WavefrontFn`` callers.
     """
+    if getattr(cfg, "kernel", "auto") == "megakernel":
+        return megakernel_run(f, queue, state, cfg, stop=stop,
+                              on_empty=on_empty,
+                              empty_means_done=empty_means_done)
     if cfg.persistent:
         return persistent_run(f, queue, state, cfg, stop=stop,
                               on_empty=on_empty,

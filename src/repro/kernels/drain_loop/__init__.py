@@ -20,13 +20,22 @@ global-empty check — into one ``pallas_call``:
     — with an optional round ``limit`` so the streaming snapshot layer can
     segment a drain at the exact same boundaries as the other strategies.
 
-Like every kernel in this tree it compiles on TPU and falls back to
-interpret mode elsewhere (``core.backend.resolve_interpret``), so the
-parity/property/fault tests exercise the real fused loop on any host.
+Unlike the leaf kernels in this tree, the fused drain body is an
+**interpret-mode prototype**: its jaxpr contains a nested ``pallas_call``
+(the DMA stream) and whole-array operands that Mosaic has no in-kernel
+lowering for, so ``fused_drain_pallas`` ALWAYS runs through the Pallas
+interpreter — on a real TPU (where ``core.backend.resolve_interpret``
+would compile) it warns and falls back, and an explicit
+``interpret=False`` raises ``NotImplementedError``.  The
+parity/property/fault tests therefore exercise the real fused loop on any
+host; a compiled Mosaic lowering (explicit HBM memory spaces for the CSR
+operands, in-kernel DMA instead of the nested expansion call) is future
+work (DESIGN.md §14).
 """
 from .csr_stream import expand_stream, stream_row_slices
-from .kernel import fused_drain_pallas
-from .ops import megakernel_drive
+from .kernel import fused_drain_pallas, make_fused_drain
+from .ops import make_megakernel_segment, megakernel_drive
 
-__all__ = ["expand_stream", "fused_drain_pallas", "megakernel_drive",
+__all__ = ["expand_stream", "fused_drain_pallas", "make_fused_drain",
+           "make_megakernel_segment", "megakernel_drive",
            "stream_row_slices"]

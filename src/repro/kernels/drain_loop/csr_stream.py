@@ -42,7 +42,10 @@ def _stream_kernel(n_items, budget, starts_ref, hbm_ref, out_ref,
                    scratch, sem):
     """Copy ``hbm[starts[i] : starts[i]+budget]`` into ``out[i]`` for every
     ``i``, two DMAs deep.  ``starts`` rides in SMEM (scalar loop bounds),
-    ``hbm_ref`` stays unblocked in ANY/HBM — only the slices touch VMEM."""
+    ``hbm_ref`` stays unblocked in ANY/HBM — only the slices touch VMEM.
+    ``n_items`` is static and positive: ``stream_row_slices`` short-circuits
+    an empty wavefront before the launch, so the prologue DMA below never
+    reads ``starts_ref[0]`` out of bounds."""
 
     def dma(slot, i):
         return pltpu.make_async_copy(
@@ -76,6 +79,11 @@ def stream_row_slices(col_idx: jax.Array, starts: jax.Array, budget: int,
     starts may be dynamic.
     """
     n_items = int(starts.shape[0])
+    if n_items == 0:
+        # static: no items, no launch — the kernel's prologue DMA would
+        # read starts_ref[0] out of bounds (and a zero-row output block
+        # cannot be padded at all)
+        return jnp.zeros((0, budget), col_idx.dtype)
     padded = jnp.concatenate(
         [col_idx, jnp.zeros((budget,), col_idx.dtype)])
     starts = jnp.clip(jnp.asarray(starts, jnp.int32), 0, col_idx.shape[0])
@@ -111,6 +119,14 @@ def expand_stream(
     ``col_idx[row_ptr[head_owner] :+ budget]`` therefore contains exactly
     the edge the flat gather would read.  Out-of-range lanes are zeroed on
     both paths.
+
+    Traffic note: because DMA lengths must be static, every popped item
+    streams a FULL ``work_budget``-length slice — ``n_items x
+    work_budget`` elements per expansion regardless of the chunks' actual
+    degrees, so on low-degree frontiers the streamed byte volume can
+    exceed the flat gather's touched footprint by a large factor.  The
+    roofline section of ``benchmarks/bench_megakernel.py`` accounts for
+    this term explicitly (DESIGN.md §14).
     """
     safe = jnp.where(valid, items, 0)
     deg = chunk_degrees(items, widths, valid, row_ptr)

@@ -11,20 +11,52 @@ segmented megakernel drain folds ``rounds < limit`` into the loop
 condition, so segment boundaries are absolute round numbers and a resumed
 drain takes exactly the same steps as an uninterrupted one — the same
 invariant the persistent segments rely on, proved under SIGKILL by
-tests/test_megakernel.py.
+tests/test_megakernel.py.  Segmented callers should hold a
+:func:`make_megakernel_segment` runner: the limit rides as a *kernel
+operand* (an extra carry leaf), so ONE traced jaxpr / pallas_call serves
+every segment instead of retracing the whole fused drain per snapshot
+window.
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
 
-from .kernel import fused_drain_pallas
+from .kernel import fused_drain_pallas, make_fused_drain
+
+
+def make_megakernel_segment(step, cond, example_carry, *, interpret=None):
+    """Build the round-limited fused drain ONCE; return ``seg(carry,
+    limit)``.
+
+    The limit is appended to the carry as one more leaf and conjoined into
+    the in-kernel condition as ``rounds < limit`` (rounds live at
+    ``carry[2]``, the repo-wide drain-carry convention), so it reaches the
+    kernel as a plain operand — calling ``seg`` with a new limit reuses
+    the same traced jaxpr and jitted ``pallas_call``, mirroring the
+    persistent branch's single jitted segment function.
+    """
+
+    def seg_cond(c):
+        return cond(tuple(c[:-1])) & (c[2] < c[-1])
+
+    def seg_step(c):
+        return (*step(tuple(c[:-1])), c[-1])
+
+    run = make_fused_drain(seg_step, seg_cond,
+                           (*tuple(example_carry), jnp.int32(0)),
+                           interpret=interpret)
+
+    def seg(carry, limit):
+        out = run((*tuple(carry), jnp.asarray(limit, jnp.int32)))
+        return tuple(out[:-1])
+
+    return seg
 
 
 def megakernel_drive(step, cond, carry0, *, limit=None, interpret=None):
     """Drive ``carry0 = (queue, state, rounds, processed)`` to its fixed
     point (or to round ``limit``) in a single fused kernel launch."""
     if limit is not None:
-        limit = jnp.int32(limit)
-        inner = cond
-        cond = lambda c: inner(c) & (c[2] < limit)
+        return make_megakernel_segment(step, cond, carry0,
+                                       interpret=interpret)(carry0, limit)
     return fused_drain_pallas(step, cond, carry0, interpret=interpret)

@@ -139,10 +139,14 @@ def main() -> None:
                          "sections 11-12, 14): e.g. fused.discrete drains "
                          "through a packed MultiQueue lane with a host "
                          "loop, sharded.persistent.g4 adds width-4 chunk "
-                         "tasks, single.megakernel fuses the whole drain "
-                         "loop into ONE Pallas kernel launch (compiled on "
-                         "TPU, interpret mode elsewhere); auto keeps the "
-                         "config defaults (single topology, persistent "
+                         "tasks, single.megakernel fuses a drain loop "
+                         "into ONE Pallas kernel launch — an "
+                         "interpret-mode prototype (no Mosaic lowering "
+                         "yet, so it runs emulated even on TPU), honored "
+                         "by streaming jobs' per-batch drains; the "
+                         "multi-tenant server rounds themselves stay "
+                         "host-driven and warn.  auto keeps the config "
+                         "defaults (single topology, persistent "
                          "kernel).  Known cells: "
                          + ", ".join(str(p) for p in POLICY_GRID))
     ap.add_argument("--granularity", type=int, default=1,

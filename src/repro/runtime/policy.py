@@ -99,7 +99,11 @@ class ExecutionPolicy:
         """True for the device-resident strategies (``persistent`` and
         ``megakernel``): code that only knows the legacy bool treats a
         megakernel drain as persistent-style, which is the safe
-        degradation (one launch, zero host round-trips)."""
+        *result*-preserving degradation (one launch, zero host
+        round-trips).  It is not license to degrade silently — dispatch
+        paths that cannot honor the megakernel either route it explicitly
+        (``core.scheduler.run``) or warn (``server.engine.TaskServer``)
+        rather than consult only this bool."""
         return self.kernel != "discrete"
 
     def __str__(self) -> str:

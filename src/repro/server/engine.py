@@ -413,6 +413,20 @@ class TaskServer:
         wavefront that follows.
         """
         cfg = self._resolve_config()
+        if getattr(cfg, "kernel", "auto") == "megakernel":
+            # the multi-tenant loop is host-driven by design (tenants are
+            # admitted/finalized between rounds), so it cannot fuse a
+            # tenant's whole drain into one launch — never degrade to the
+            # persistent strategy silently.  Streaming jobs are unaffected:
+            # their per-batch drains go through stream/driver, which does
+            # honor the megakernel.
+            log.warning(
+                "kernel='megakernel' requested, but the multi-tenant "
+                "server loop is host-driven (one dispatch per scheduling "
+                "round) and cannot fuse a tenant's drain into one launch; "
+                "batch jobs run the per-round wavefront instead (streaming "
+                "jobs still drain via the megakernel).  Use "
+                "runtime.execute() for a fused single-tenant drain.")
         W = cfg.wavefront
         lane_capacity = self._resolve_lane_capacity()
         stats = ServerStats(wavefront=W)

@@ -31,7 +31,7 @@ import numpy as np
 
 from ..core.queue import make_multiqueue, make_queue
 from ..core.scheduler import (SchedulerConfig, megakernel_drive,
-                              persistent_drive)
+                              megakernel_segment, persistent_drive)
 from ..runtime.api import _shared_setup, shared_queue_capacity
 from ..runtime.policy import policy_of
 from ..runtime.programs import build_program
@@ -95,9 +95,13 @@ def _drive_shared(step, cond, carry, kernel: str, every: int, cb):
     if kernel == "megakernel":
         if every <= 0:
             return megakernel_drive(step, cond, carry)
-        while bool(cond(carry)):
-            carry = megakernel_drive(step, cond, carry,
-                                     limit=int(carry[2]) + every)
+        # build the fused segment ONCE: the round limit rides as a kernel
+        # operand, so every snapshot window reuses the same traced jaxpr /
+        # pallas_call instead of retracing the whole drain per segment
+        seg = megakernel_segment(step, cond, carry)
+        keep_going = jax.jit(cond)
+        while bool(keep_going(carry)):
+            carry = seg(carry, jnp.int32(int(carry[2]) + every))
             cb(carry)
         return carry
     if kernel == "persistent":
@@ -105,7 +109,8 @@ def _drive_shared(step, cond, carry, kernel: str, every: int, cb):
             return persistent_drive(step, cond, carry)
         seg = jax.jit(lambda c, limit: jax.lax.while_loop(
             lambda cc: cond(cc) & (cc[2] < limit), step, c))
-        while bool(cond(carry)):
+        keep_going = jax.jit(cond)
+        while bool(keep_going(carry)):
             carry = seg(carry, jnp.int32(int(carry[2]) + every))
             cb(carry)
         return carry

@@ -284,6 +284,102 @@ def test_in_kernel_claim_on_empty_is_all_empty():
     assert valid_tr[2].tolist() == [True, True, False, False]
 
 
+# -------------------- TPU gating, build-once segments, legacy-path honesty
+def _count_up_step(c):
+    return (c[0] + 1,)
+
+
+def test_explicit_compile_request_is_rejected():
+    """The fused body has no Mosaic lowering (nested pallas_call +
+    whole-array operands), so a demand to compile must raise, not hand
+    Mosaic an un-lowerable program."""
+    with pytest.raises(NotImplementedError, match="interpret-mode"):
+        fused_drain_pallas(_count_up_step, lambda c: c[0] < 3,
+                           (jnp.int32(0),), interpret=False)
+
+
+def test_tpu_auto_warns_and_falls_back_to_interpret(monkeypatch):
+    """On a real TPU the repo-wide interpret rule would compile; the
+    megakernel must warn and run through the interpreter instead."""
+    from repro.kernels.drain_loop import kernel as K
+    monkeypatch.setattr(K, "resolve_interpret",
+                        lambda i: False if i is None else bool(i))
+    with pytest.warns(UserWarning, match="interpret-mode prototype"):
+        out, = fused_drain_pallas(_count_up_step, lambda c: c[0] < 5,
+                                  (jnp.int32(0),))
+    assert int(out) == 5
+
+
+def test_segment_builder_traces_once_across_limits():
+    """The snapshot layer drives one fused drain through many round
+    limits: the limit rides as a kernel operand, so segments 2..N reuse
+    the first segment's traced jaxpr / pallas_call."""
+    from repro.core.scheduler import megakernel_segment
+    traces = []
+
+    def step(c):
+        traces.append(1)  # fires once per trace of the drain body
+        return (c[0], c[1], c[2] + 1, c[3] + c[0])
+
+    def cond(c):
+        return c[2] < c[1]
+
+    carry = (jnp.int32(2), jnp.int32(9), jnp.int32(0), jnp.int32(0))
+    seg = megakernel_segment(step, cond, carry)
+    baseline = len(traces)
+    assert baseline >= 1
+    for _ in range(4):  # limits 3, 6, 9, 12 — last two hit the cond cap
+        carry = seg(carry, int(carry[2]) + 3)
+    assert len(traces) == baseline, "segment retraced the fused drain"
+    assert int(carry[2]) == 9 and int(carry[3]) == 18
+
+
+def test_stream_row_slices_zero_items():
+    """n_items == 0 must not issue the prologue DMA against an empty
+    starts array."""
+    from repro.kernels.drain_loop import stream_row_slices
+    col = jnp.arange(16, dtype=jnp.int32)
+    out = stream_row_slices(col, jnp.zeros((0,), jnp.int32), 4)
+    assert out.shape == (0, 4)
+
+
+def test_legacy_scheduler_run_honors_megakernel(monkeypatch):
+    """core.scheduler.run must route kernel='megakernel' to the fused
+    driver — not silently degrade to the persistent strategy through the
+    legacy bool (policy.persistent is True for both)."""
+    from repro.core import scheduler as S
+    calls = []
+    real = S.megakernel_drive
+    monkeypatch.setattr(
+        S, "megakernel_drive",
+        lambda *a, **k: (calls.append(1), real(*a, **k))[1])
+
+    def f(items, valid, state):
+        drained = jnp.sum(jnp.where(valid, items, 0))
+        return jnp.zeros_like(items), jnp.zeros_like(valid), state + drained
+
+    cfg = S.SchedulerConfig(num_workers=8, kernel="megakernel")
+    q = make_queue(16, jnp.arange(5, dtype=jnp.int32))
+    _, s, stats = S.run(f, q, jnp.int32(0), cfg)
+    assert calls, "run() bypassed the megakernel driver"
+    assert int(s) == 10 and int(stats.items_processed) == 5
+    assert int(stats.dropped) == 0
+
+
+def test_taskserver_warns_on_megakernel_config(caplog):
+    """The multi-tenant server loop is host-driven and cannot fuse a
+    tenant's drain; a megakernel config must warn, never degrade
+    silently."""
+    import logging
+    from repro.server.engine import TaskServer
+    server = TaskServer(None, num_lanes=2,
+                        config=SchedulerConfig(num_workers=4,
+                                               kernel="megakernel"))
+    with caplog.at_level(logging.WARNING, logger="repro.server"):
+        server.run()  # no jobs: the config check still fires
+    assert any("megakernel" in rec.getMessage() for rec in caplog.records)
+
+
 # --------------------------- fault injection: SIGKILL the megakernel drain
 # Mirror of tests/test_checkpoint_fault.py's streaming crash test, with the
 # drain segments executed by the megakernel: stream/driver.py bakes each
