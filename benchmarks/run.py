@@ -2,7 +2,7 @@
 
 ``PYTHONPATH=src python -m benchmarks.run [section ...]``
 Sections: table1 table4 figs serving server kernels roofline shard
-granularity stream megakernel
+granularity stream megakernel obs
 (default: all).  Prints ``name,us_per_call,derived`` CSV.
 
 ``--smoke`` instead recomputes the schedule-deterministic counters (round
@@ -27,9 +27,9 @@ def main() -> None:
         sys.exit(1 if smoke.run() else 0)
 
     from . import (bench_figs, bench_granularity, bench_kernels,
-                   bench_megakernel, bench_roofline, bench_server,
-                   bench_serving, bench_shard, bench_stream, bench_table1,
-                   bench_table4)
+                   bench_megakernel, bench_obs, bench_roofline,
+                   bench_server, bench_serving, bench_shard, bench_stream,
+                   bench_table1, bench_table4)
 
     sections = {
         "table1": bench_table1.run,
@@ -43,6 +43,7 @@ def main() -> None:
         "granularity": bench_granularity.run,
         "stream": bench_stream.run,
         "megakernel": bench_megakernel.run,
+        "obs": bench_obs.run,
     }
     want = argv or list(sections)
     print("name,us_per_call,derived")

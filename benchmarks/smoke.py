@@ -16,10 +16,19 @@ incremental and full-recompute streaming modes, plus the sharded streaming
 parity bit) and ``bench_megakernel`` records in ``BENCH_megakernel.json``
 (rounds / launches-per-drain / work for every algorithm x kernel-strategy
 cell — the megakernel's launches == 1 collapse and its bit-parity with the
-persistent drain) and fails loudly when any recomputed counter disagrees
-with the checked-in value.  CI runs it on every push
-(``bench-smoke`` job); the full benchmark suite refreshes the JSONs
-deliberately, this guard keeps them honest in between.
+persistent drain) and ``bench_obs`` records in ``BENCH_obs.json`` (per
+policy cell: the tracing-disabled-is-identity parity bit, the round count
+and the one-ring-record-per-round invariant) and fails loudly when any
+recomputed counter disagrees with the checked-in value.  CI runs it on
+every push (``bench-smoke`` job); the full benchmark suite refreshes the
+JSONs deliberately, this guard keeps them honest in between.
+
+The guard also validates every emitted artifact against the canonical
+observability schema (``repro/obs/schema.py``): each ``BENCH_*.json``
+must carry the ``meta`` provenance envelope (``validate_bench``), the
+checked-in Chrome trace must be loadable trace-event JSON
+(``validate_chrome_trace``) and the metrics JSONL must contain only
+schema-valid documents (``validate_metrics_jsonl``).
 
 Like the benchmarks, the measurement runs in a subprocess that forces 8
 host devices before jax initializes, so the smoke works under plain CPU CI.
@@ -37,6 +46,9 @@ SHARD_JSON = REPO / "BENCH_shard.json"
 GRANULARITY_JSON = REPO / "BENCH_granularity.json"
 STREAM_JSON = REPO / "BENCH_stream.json"
 MEGAKERNEL_JSON = REPO / "BENCH_megakernel.json"
+OBS_JSON = REPO / "BENCH_obs.json"
+OBS_TRACE_JSON = REPO / "BENCH_obs_trace.json"
+OBS_METRICS_JSONL = REPO / "BENCH_obs_metrics.jsonl"
 
 #: fields of each per-shard-count entry that are schedule-deterministic
 #: (wall_seconds, balances etc. are measurements, not invariants)
@@ -54,6 +66,10 @@ _STREAM_SHARD_FIELDS = ("rounds", "work", "exchanged", "parity")
 #: schedule-deterministic fields of each (algorithm x kernel) cell —
 #: launches is the megakernel's headline invariant (1 per drain)
 _MEGA_FIELDS = ("rounds", "launches", "work")
+#: schedule-deterministic fields of each obs policy cell — parity is the
+#: tracing-disabled-is-identity invariant, ring_records the
+#: one-record-per-round invariant (walls/ratios are measurements)
+_OBS_FIELDS = ("rounds", "work", "ring_records", "parity")
 
 
 def _recompute() -> dict:
@@ -286,17 +302,107 @@ print(json.dumps(out))
     return json.loads(proc.stdout.strip().splitlines()[-1])
 
 
+def _recompute_obs() -> dict:
+    """Re-run bench_obs's deterministic portion in a subprocess.
+
+    Recomputes, per policy cell, the traced-vs-untraced parity bit, the
+    round count and the ring record count — the walls/ratios in the
+    checked-in JSON are measurements and are not guarded.
+    """
+    from .bench_obs import CELLS, EDGE_FACTOR, GRAPH_SEED, SCALE, WORKERS
+
+    body = f"""
+import os
+os.environ.setdefault('JAX_PLATFORMS', 'cpu')
+import json
+import numpy as np
+from repro.core import SchedulerConfig
+from repro.graph.generators import rmat
+from repro.obs import Trace
+from repro.runtime import build_program, config_for, execute, parse_policy
+
+g = rmat({SCALE}, edge_factor={EDGE_FACTOR}, seed={GRAPH_SEED})
+out = {{'cells': {{}}}}
+for cell in {list(CELLS)!r}:
+    policy = parse_policy(cell)
+    cfg = config_for(SchedulerConfig(num_workers={WORKERS}), policy)
+    program = build_program('bfs', g, cfg, params={{'source': 0}})
+    base_state, base_stats, base_info = execute(program, g, cfg)
+    trace = Trace()
+    tr_state, tr_stats, tr_info = execute(program, g, cfg, trace=trace)
+    out['cells'][cell] = {{
+        'rounds': base_info['rounds'],
+        'work': base_info['work'],
+        'ring_records': len(trace.records),
+        'parity': bool(
+            (np.asarray(program.result(tr_state))
+             == np.asarray(program.result(base_state))).all()
+            and tr_info == base_info),
+    }}
+print(json.dumps(out))
+"""
+    env = dict(os.environ, PYTHONPATH=os.pathsep.join(
+        [str(REPO / "src")] + ([os.environ["PYTHONPATH"]]
+                               if "PYTHONPATH" in os.environ else [])))
+    proc = subprocess.run([sys.executable, "-c", body], capture_output=True,
+                          text=True, env=env, timeout=1800, cwd=REPO)
+    if proc.returncode != 0:
+        raise RuntimeError(
+            f"obs smoke subprocess failed:\n{proc.stderr[-3000:]}")
+    return json.loads(proc.stdout.strip().splitlines()[-1])
+
+
+def validate_artifacts() -> list:
+    """Schema-validate every emitted artifact; returns a list of error
+    strings (empty = pass).
+
+    Every ``BENCH_*.json`` at the repo root must carry the canonical
+    ``meta`` envelope (``obs.validate_bench``); the obs trace must be a
+    loadable Chrome trace-event document and the obs metrics JSONL must
+    contain only schema-valid docs.  Runs in-process — validation needs
+    no jax and no devices.
+    """
+    sys.path.insert(0, str(REPO / "src"))
+    try:
+        from repro.obs import (validate_bench, validate_chrome_trace,
+                               validate_metrics_jsonl)
+    finally:
+        sys.path.pop(0)
+
+    errors = []
+    for path in sorted(REPO.glob("BENCH_*.json")):
+        if path.name == OBS_TRACE_JSON.name:
+            continue          # chrome-trace format, validated below
+        try:
+            validate_bench(json.loads(path.read_text()), name=path.name)
+        except ValueError as e:
+            errors.append(str(e))
+    if OBS_TRACE_JSON.exists():
+        try:
+            validate_chrome_trace(json.loads(OBS_TRACE_JSON.read_text()))
+        except ValueError as e:
+            errors.append(f"{OBS_TRACE_JSON.name}: {e}")
+    if OBS_METRICS_JSONL.exists():
+        try:
+            validate_metrics_jsonl(
+                OBS_METRICS_JSONL.read_text().splitlines())
+        except ValueError as e:
+            errors.append(f"{OBS_METRICS_JSONL.name}: {e}")
+    return errors
+
+
 def run() -> int:
     """Returns the number of mismatches (0 = pass); prints a report."""
     missing = [p for p in (SHARD_JSON, GRANULARITY_JSON, STREAM_JSON,
-                           MEGAKERNEL_JSON)
+                           MEGAKERNEL_JSON, OBS_JSON)
                if not p.exists()]
     if missing:
         for p in missing:
             section = {SHARD_JSON: "shard",
                        GRANULARITY_JSON: "granularity",
                        STREAM_JSON: "stream",
-                       MEGAKERNEL_JSON: "megakernel"}[p]
+                       MEGAKERNEL_JSON: "megakernel",
+                       OBS_JSON: "obs"}[p]
             print(f"smoke: {p.name} missing — run "
                   f"'python -m benchmarks.run {section}' to create the "
                   f"baseline")
@@ -362,8 +468,20 @@ def run() -> int:
               entry["parity_vs_persistent"],
               mega_fresh[algo]["parity_vs_persistent"])
 
+    obs_base = json.loads(OBS_JSON.read_text())["cells"]
+    obs_fresh = _recompute_obs()["cells"]
+    for cell, entry in obs_base.items():
+        for field in _OBS_FIELDS:
+            check(f"obs/{cell}/{field}", entry[field],
+                  obs_fresh[cell][field])
+
+    for err in validate_artifacts():
+        mismatches += 1
+        print(f"smoke SCHEMA {err}")
+
     names = (f"{SHARD_JSON.name} / {GRANULARITY_JSON.name} / "
-             f"{STREAM_JSON.name} / {MEGAKERNEL_JSON.name}")
+             f"{STREAM_JSON.name} / {MEGAKERNEL_JSON.name} / "
+             f"{OBS_JSON.name} + artifact schemas")
     if mismatches:
         print(f"smoke: {mismatches} counter regression(s) vs {names}")
     else:

@@ -230,7 +230,7 @@ def make_program(graph: CSRGraph, cfg: SchedulerConfig, *,
                                               graph.row_ptr))),
         make_body=make_body,
         result=lambda s: s.dist,
-        merge={"dist": "pmin", "counter": "sum_delta"},
+        merge={"dist": "pmin", "counter": "work_counter"},
         task_vertex=codec.head,
         task_width=codec.width,
         work=lambda s: s.counter.work,

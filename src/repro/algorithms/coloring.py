@@ -291,7 +291,7 @@ def make_program(graph: CSRGraph, cfg: SchedulerConfig, *,
         init=lambda: init_state(graph, codec, owner_block, threshold),
         make_body=make_body,
         result=lambda s: s.colors,
-        merge={"colors": "sum_delta", "counter": "sum_delta"},
+        merge={"colors": "sum_delta", "counter": "work_counter"},
         task_vertex=lambda t: codec.head(natural_code(t)),
         task_width=lambda t: codec.width(natural_code(t)),
         work=lambda s: s.counter.work,

@@ -404,7 +404,7 @@ def make_program(graph: CSRGraph, cfg: SchedulerConfig, *,
         empty_means_done=False,
         merge={"rank": "sum_delta", "residue": "sum_delta",
                "in_queue": "or_delta", "check_cursor": "replicated",
-               "counter": "sum_delta"},
+               "counter": "work_counter"},
         task_vertex=codec.head,
         task_width=codec.width,
         work=lambda s: s.counter.work,

@@ -26,10 +26,20 @@ class WorkCounter:
     #: boundary (core/task.coalesce_chunks) — the task-granularity dial's
     #: engagement meter (DESIGN.md section 12).  Always 0 at granularity 1.
     splits: jax.Array
+    #: scheduling rounds this counter's state has been driven through —
+    #: bumped exactly once per :func:`~repro.core.scheduler.wavefront_step`
+    #: (empty rounds included), so overwork and round counts come from ONE
+    #: source of truth instead of each driver recomputing its own.  Under
+    #: the sharded topology every replica bumps in lockstep, so the merge
+    #: rule is replicated-take-new, not delta-sum (runtime/program
+    #: ``"work_counter"``).
+    rounds: jax.Array = dataclasses.field(
+        default_factory=lambda: jnp.int32(0))
 
     @staticmethod
     def zero() -> "WorkCounter":
-        return WorkCounter(work=jnp.int32(0), splits=jnp.int32(0))
+        return WorkCounter(work=jnp.int32(0), splits=jnp.int32(0),
+                           rounds=jnp.int32(0))
 
     def add(self, n) -> "WorkCounter":
         return dataclasses.replace(
@@ -38,6 +48,9 @@ class WorkCounter:
     def add_splits(self, n) -> "WorkCounter":
         return dataclasses.replace(
             self, splits=self.splits + jnp.asarray(n, jnp.int32))
+
+    def bump_round(self) -> "WorkCounter":
+        return dataclasses.replace(self, rounds=self.rounds + jnp.int32(1))
 
 
 def overwork_ratio(counter: WorkCounter, ideal: int) -> float:
@@ -65,6 +78,16 @@ class JobTelemetry:
     completed_round: int = -1
     rounds_active: int = 0         # rounds with quota > 0 or an on_empty step
     items_processed: int = 0       # valid tasks popped for this job
+    #: vertices those pops actually advanced (sum of chunk widths).  At
+    #: granularity 1 this equals ``items_processed``; beyond it, quotas
+    #: are vertex-denominated (DESIGN.md section 12), so occupancy must
+    #: count vertices too — a width-4 chunk fills 4 vertex slots of the
+    #: round budget, not 1.  0 means "not metered" (legacy paths) and
+    #: occupancy falls back to the item count.
+    vertices_processed: int = 0
+    #: the server's chunk-width cap G — the occupancy denominator is the
+    #: round budget ``rounds_active x wavefront x G`` (vertex units)
+    granularity: int = 1
     work: int = 0                  # WorkCounter at completion
     dropped: int = 0               # lane overflow drops attributed to the job
     backpressure_events: int = 0   # rounds the lane was drain-boosted
@@ -84,17 +107,32 @@ class JobTelemetry:
 
     @property
     def occupancy(self) -> float:
-        """Mean fraction of the wavefront this job filled while active."""
-        denom = self.rounds_active * self.wavefront
-        return self.items_processed / denom if denom else 0.0
+        """Mean fraction of the round budget this job filled while active.
+
+        Vertex-denominated, matching the quota allocator: the numerator is
+        the vertices the job's pops advanced (chunk-width weighted) and the
+        denominator is ``rounds_active x wavefront x granularity`` — the
+        vertex capacity of the rounds it was granted.  At granularity 1
+        both reduce to the pre-granularity item/slot accounting bit-for-
+        bit.  Paths that never metered vertices (``vertices_processed ==
+        0`` with items popped) fall back to the item count.
+        """
+        denom = self.rounds_active * self.wavefront * max(self.granularity, 1)
+        if not denom:
+            return 0.0
+        filled = self.vertices_processed or self.items_processed
+        return filled / denom
 
     @property
     def overwork(self) -> float:
         return self.work / max(self.ideal_work, 1)
 
     def as_dict(self) -> dict:
+        """Serialize into the canonical ``job`` metric doc (obs/schema)."""
+        from ..obs.schema import metric_doc  # lazy: obs is a leaf layer
+
         d = dataclasses.asdict(self)
         d.update(latency_rounds=self.latency_rounds,
                  queue_delay_rounds=self.queue_delay_rounds,
                  occupancy=self.occupancy, overwork=self.overwork)
-        return d
+        return metric_doc("job", **d)

@@ -45,6 +45,7 @@ from typing import Any, Callable, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from .counters import WorkCounter
 from .queue import TaskQueue
 
 # f(items, valid, state) -> (new_items, new_mask, new_state)
@@ -186,6 +187,12 @@ def wavefront_step(f: WavefrontFn, on_empty, ops: QueueOps, carry,
 
         queue, state = jax.lax.cond(n_valid > 0, run_f, run_empty,
                                     (queue, state))
+    # one source of truth for round counts: every WorkCounter in the state
+    # ticks exactly once per step (empty rounds included), matching the
+    # driver-level ``rounds`` carry element.
+    state = jax.tree_util.tree_map(
+        lambda x: x.bump_round() if isinstance(x, WorkCounter) else x,
+        state, is_leaf=lambda x: isinstance(x, WorkCounter))
     return queue, state, rounds + 1, processed + n_valid
 
 

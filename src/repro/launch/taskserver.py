@@ -16,6 +16,7 @@ from __future__ import annotations
 
 import argparse
 import logging
+import subprocess
 
 from ..core.scheduler import SchedulerConfig
 from ..graph.generators import grid2d, rmat
@@ -24,6 +25,16 @@ from ..server import (Autotuner, JobRegistry, JobSpec, TaskServer,
                       serve_sequential)
 
 ALGO_CYCLE = ("bfs", "pagerank", "coloring")
+
+
+def git_sha() -> str:
+    """Best-effort provenance stamp for the trace meta block."""
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            timeout=5, check=True).stdout.strip()
+    except Exception:
+        return "unknown"
 
 
 def build_registry(scale: int, grid_side: int, seed: int) -> JobRegistry:
@@ -195,6 +206,19 @@ def main() -> None:
     ap.add_argument("--eps", type=float, default=1e-4,
                     help="PageRank convergence threshold")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Perfetto-loadable Chrome trace of every "
+                         "round (server lanes, sharded phases, streaming "
+                         "drains) to PATH — enables the in-trace ring "
+                         "buffer (repro/obs, DESIGN.md section 15)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write the canonical metrics JSONL (server/job "
+                         "summaries, per-job latency histograms with exact "
+                         "p50/p95/p99, per-round records) to PATH")
+    ap.add_argument("--trace-capacity", type=int, default=0, metavar="N",
+                    help="trace ring capacity in rounds per drain (0 = "
+                         "default; oldest rounds are overwritten on "
+                         "wraparound and counted as truncated)")
     ap.add_argument("--autotune", action="store_true",
                     help="pick the SchedulerConfig via the autotuner")
     ap.add_argument("--autotune-cache", default=".atos_autotune.json")
@@ -241,8 +265,16 @@ def main() -> None:
     autotuner = (Autotuner(cache_path=args.autotune_cache)
                  if args.autotune else None)
 
+    trace = None
+    if args.trace_out or args.metrics_out:
+        from ..obs import DEFAULT_CAPACITY, Trace
+
+        trace = Trace(capacity=args.trace_capacity or DEFAULT_CAPACITY,
+                      meta={"git_sha": git_sha()})
+
     server = TaskServer(registry, num_lanes=args.lanes, config=config,
-                        policy=args.policy, autotuner=autotuner)
+                        policy=args.policy, autotuner=autotuner,
+                        trace=trace)
     for spec in specs:
         server.submit(spec)
     print(f"submitted {len(specs)} jobs to {args.lanes} lanes "
@@ -251,6 +283,19 @@ def main() -> None:
     print_telemetry(result)
     if args.stream > 0:
         print_stream_records(server)
+    if trace is not None:
+        trace.write(args.trace_out, args.metrics_out)
+        lat = trace.histograms.get("job_latency_rounds")
+        if lat is not None and lat.count:
+            print(f"job latency (rounds): p50={lat.percentile(50)} "
+                  f"p95={lat.percentile(95)} p99={lat.percentile(99)} "
+                  f"over {lat.count} jobs")
+        for path, what in ((args.trace_out, "chrome trace"),
+                           (args.metrics_out, "metrics jsonl")):
+            if path:
+                print(f"wrote {what}: {path} "
+                      f"({len(trace.records)} round records, "
+                      f"{trace.truncated} truncated)")
 
     if args.compare_sequential:
         seq_config = config

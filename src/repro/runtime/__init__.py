@@ -21,14 +21,15 @@ __all__ = [
     "config_for", "parse_policy", "policy_of",
     "AtosProgram", "MERGE_RULES", "ProgramContext", "build_merge",
     "delta_psum", "identity_task_vertex",
-    "ExecutionResult", "execute", "fused_lane_ops", "stream_execute",
-    "algorithms", "build_program",
+    "ExecutionResult", "execute", "fused_lane_ops", "instrument_step",
+    "stream_execute", "algorithms", "build_program",
 ]
 
 _LAZY = {
     "ExecutionResult": "api",
     "execute": "api",
     "fused_lane_ops": "api",
+    "instrument_step": "api",
     "stream_execute": "api",
     "algorithms": "programs",
     "build_program": "programs",

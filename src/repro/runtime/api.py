@@ -10,6 +10,7 @@ drivers, the autotuner, benchmarks, tests) never branch on topology.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from typing import Any, NamedTuple, Optional
 
@@ -20,6 +21,7 @@ from ..core.queue import make_multiqueue, make_queue
 from ..core.scheduler import (QueueOps, RunStats, SchedulerConfig,
                               continuation, discrete_drive, megakernel_drive,
                               persistent_drive, taskqueue_ops, wavefront_step)
+from ..obs import Trace
 from .policy import ExecutionPolicy, policy_of
 from .program import AtosProgram, ProgramContext
 
@@ -65,6 +67,14 @@ def fused_lane_ops(wavefront: int, backend: str, lane_id, job_id,
         if aux is not None:
             aux["mismatch"] = jnp.sum(
                 (valid & (unpack_job(packed) != job_id)).astype(jnp.int32))
+            # vertices the pop actually advanced: chunk-width weighted under
+            # granularity (the occupancy numerator, DESIGN.md section 12);
+            # one vertex per valid slot at G = 1.
+            if width_of is None:
+                aux["vertices"] = jnp.sum(valid.astype(jnp.int32))
+            else:
+                aux["vertices"] = jnp.sum(
+                    jnp.where(valid, width_of(packed), 0).astype(jnp.int32))
         return natural, valid, mq2
 
     def push(mq, items, mask):
@@ -126,20 +136,68 @@ def _shared_setup(program: AtosProgram, graph, cfg: SchedulerConfig,
     return queue, state, ops, step, cond, dropped_of
 
 
+def instrument_step(step, cond, ops: QueueOps, program: Optional[AtosProgram],
+                    *, lane: int = 0):
+    """Wrap a 4-tuple drain ``(step, cond)`` to thread a TraceRing.
+
+    The traced carry is ``(*inner, ring)`` — the ring rides **last**, so the
+    ``carry[2]``/``carry[3]`` index conventions every driver relies on are
+    untouched.  Each round appends one structured record (pre-pop queue
+    size, pops, pushes, per-round work/split deltas) with pure in-trace
+    ``.at[]`` writes — zero host syncs; the wrapped ``cond`` simply strips
+    the ring.  Work/splits deltas come from ``program.work``/``.splits``
+    when declared (traced scalars), else 0.
+    """
+    work_of = program.work if program is not None else None
+    splits_of = program.splits if program is not None else None
+
+    def traced_step(carry):
+        *inner, ring = carry
+        q0, s0, r0, p0 = inner
+        size_before = ops.size(q0)
+        q1, s1, r1, p1 = step((q0, s0, r0, p0))
+        pops = p1 - p0
+        ring = ring.record(
+            round=r0, lane=lane, queue_size=size_before, pops=pops,
+            pushes=ops.size(q1) - size_before + pops,
+            work=(work_of(s1) - work_of(s0)) if work_of is not None else 0,
+            splits=(splits_of(s1) - splits_of(s0))
+                   if splits_of is not None else 0,
+            donated=0, exchanged=0)
+        return q1, s1, r1, p1, ring
+
+    def traced_cond(carry):
+        return cond(tuple(carry[:4]))
+
+    return traced_step, traced_cond
+
+
 def _run_shared_core(program: AtosProgram, graph, cfg: SchedulerConfig,
                      policy: ExecutionPolicy, queue_capacity: Optional[int],
-                     trace: Optional[list]):
+                     trace):
     """single / fused topologies: same step core, different QueueOps."""
+    obs = trace if isinstance(trace, Trace) else None
+    legacy = trace if isinstance(trace, list) else None
     queue, state, ops, step, cond, dropped_of = _shared_setup(
         program, graph, cfg, policy, queue_capacity)
     carry0 = (queue, state, jnp.int32(0), jnp.int32(0))
-    if policy.kernel == "megakernel":
-        queue, state, rounds, processed = megakernel_drive(step, cond, carry0)
-    elif policy.persistent:
-        queue, state, rounds, processed = persistent_drive(step, cond, carry0)
-    else:
-        queue, state, rounds, processed = discrete_drive(step, cond, ops,
-                                                         carry0, trace=trace)
+    ring = None
+    if obs is not None:
+        # tracing on: identical drain with the ring as one extra carry leaf
+        step, cond = instrument_step(step, cond, ops, program)
+        carry0 = carry0 + (obs.ring(),)
+    span = (obs.span(f"execute {policy}") if obs is not None
+            else contextlib.nullcontext())
+    with span:
+        if policy.kernel == "megakernel":
+            carry = megakernel_drive(step, cond, carry0)
+        elif policy.persistent:
+            carry = persistent_drive(step, cond, carry0)
+        else:
+            carry = discrete_drive(step, cond, ops, carry0, trace=legacy)
+    queue, state, rounds, processed = carry[:4]
+    if obs is not None:
+        ring = carry[4]
     stats = RunStats(rounds, processed, dropped_of(queue))
     info = {
         "rounds": int(stats.rounds),
@@ -152,7 +210,22 @@ def _run_shared_core(program: AtosProgram, graph, cfg: SchedulerConfig,
         # the megakernel is ONE launch for the whole drain (DESIGN.md §14)
         "launches": 1 if policy.kernel == "megakernel" else int(rounds),
     }
+    if obs is not None:
+        obs.drain(ring, engine=str(policy))
+        obs.add_metric(run_doc(policy, stats, info))
     return ExecutionResult(state, stats, info)
+
+
+def run_doc(policy, stats: RunStats, info: dict) -> dict:
+    """Serialize a single/fused run summary into the canonical ``run`` doc."""
+    from ..obs.schema import metric_doc
+
+    return metric_doc(
+        "run", policy=str(policy), rounds=int(stats.rounds),
+        items_processed=int(stats.items_processed),
+        dropped=int(stats.dropped), work=int(info.get("work", 0)),
+        splits=int(info.get("splits", 0)),
+        launches=int(info.get("launches", 0)))
 
 
 def _run_sharded(program: AtosProgram, graph, cfg: SchedulerConfig,
@@ -186,7 +259,7 @@ def execute(
     cfg: SchedulerConfig,
     *,
     queue_capacity: Optional[int] = None,
-    trace: Optional[list] = None,
+    trace: Optional[Any] = None,
     route_width: Optional[int] = None,
     mesh=None,
 ) -> ExecutionResult:
@@ -196,8 +269,14 @@ def execute(
     per-topology telemetry (exchange/steal meters for sharded runs; for
     single/fused runs ``info["launches"]`` counts kernel-entry events per
     drain — O(rounds) for persistent/discrete, 1 for the megakernel).
-    ``trace`` is honored by the discrete kernel strategy only: per-round
-    ``(size, items)`` tuples (single/fused) or telemetry dicts (sharded).
+    ``trace`` accepts either an :class:`~repro.obs.Trace` — the unified
+    observability collector (DESIGN.md §15): a device-side ring buffer rides
+    the drain carry under *every* policy, recording one structured row per
+    round with zero host syncs, drained into the collector at run end
+    alongside a canonical run-summary doc — or, for backward compatibility,
+    a plain ``list``, honored by the discrete kernel strategy only
+    (per-round ``(size, items)`` tuples).  ``trace=None`` (default) builds
+    exactly the untraced computation — no ring, no wrapped step.
     """
     policy = policy_of(cfg)
     if policy.topology == "sharded":
@@ -223,6 +302,7 @@ def stream_execute(
     route_width: Optional[int] = None,
     mesh=None,
     snapshot_hook=None,
+    trace: Optional[Trace] = None,
 ):
     """Run ``algorithm`` as a long-lived streaming job over a mutating graph.
 
@@ -247,4 +327,4 @@ def stream_execute(
         queue_capacity=queue_capacity, incremental=incremental,
         snapshot_every=snapshot_every, checkpoint_dir=checkpoint_dir,
         keep=keep, resume=resume, route_width=route_width, mesh=mesh,
-        snapshot_hook=snapshot_hook)
+        snapshot_hook=snapshot_hook, trace=trace)

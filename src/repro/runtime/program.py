@@ -95,19 +95,49 @@ def _or_delta(prev: jax.Array, new: jax.Array, axis_name: str) -> jax.Array:
     return d > 0
 
 
+def _merge_work_counter(prev, new, axis_name: str):
+    """Field-level merge for a whole :class:`~repro.core.counters.WorkCounter`.
+
+    ``work``/``splits`` are single-writer additive per round (delta-psum,
+    exactly ``sum_delta``), but ``rounds`` ticks in lockstep on every replica
+    (``wavefront_step`` bumps it unconditionally), so it must be taken as-is
+    — delta-summing a replicated tick would multiply the round count by the
+    shard count every round.
+    """
+    from ..core.counters import WorkCounter  # local: keep layering one-way
+
+    assert isinstance(new, WorkCounter), new
+    return dataclasses.replace(
+        new,
+        work=delta_psum(prev.work, new.work, axis_name),
+        splits=delta_psum(prev.splits, new.splits, axis_name))
+
+
+def _is_work_counter(x) -> bool:
+    from ..core.counters import WorkCounter
+
+    return isinstance(x, WorkCounter)
+
+
+#: rules that consume a whole sub-pytree instead of individual array leaves
+_merge_work_counter.whole = _is_work_counter  # type: ignore[attr-defined]
+
+
 MERGE_RULES: Dict[str, Callable] = {
     "pmin": lambda prev, new, axis: jax.lax.pmin(new, axis),
     "pmax": lambda prev, new, axis: jax.lax.pmax(new, axis),
     "sum_delta": delta_psum,
     "or_delta": _or_delta,
     "replicated": lambda prev, new, axis: new,
+    "work_counter": _merge_work_counter,
 }
 
 MergeSpec = Union[str, Callable, Dict[str, Union[str, Callable]]]
 
 
 def _leafwise(rule: Callable, prev, new, axis_name: str):
-    return jax.tree.map(lambda p, n: rule(p, n, axis_name), prev, new)
+    return jax.tree.map(lambda p, n: rule(p, n, axis_name), prev, new,
+                        is_leaf=getattr(rule, "whole", None))
 
 
 def build_merge(spec: MergeSpec) -> Callable[[Any, Any, str], Any]:

@@ -59,7 +59,7 @@ class Job:
     status: str = "pending"        # pending -> active -> done
     lane: int = -1
     state: Any = None
-    counters: Any = None           # device int32[2]: (items, mismatches)
+    counters: Any = None           # device int32[3]: (items, verts, mism)
     #: packed-wire chunk-width fn (encoding.packed_width), built once at
     #: admission; None when the program is width-1 or width-agnostic
     width_of: Any = None
@@ -88,6 +88,14 @@ class ServerStats:
         denom = self.rounds * self.wavefront
         return self.items_processed / denom if denom else 0.0
 
+    def as_dict(self) -> dict:
+        """Serialize into the canonical ``server`` doc (obs/schema)."""
+        from ..obs.schema import metric_doc  # lazy: obs is a leaf layer
+
+        d = dataclasses.asdict(self)
+        d["occupancy"] = self.occupancy
+        return metric_doc("server", **d)
+
 
 @dataclasses.dataclass
 class ServerResult:
@@ -109,6 +117,7 @@ class TaskServer:
         autotuner=None,
         max_rounds: int = 1 << 17,
         strict_drops: bool = True,
+        trace=None,
     ) -> None:
         self.registry = registry
         self.num_lanes = num_lanes
@@ -118,6 +127,11 @@ class TaskServer:
         self._lane_capacity = lane_capacity
         self.autotuner = autotuner
         self.max_rounds = max_rounds
+        #: optional :class:`~repro.obs.Trace`: one device ring rides every
+        #: compiled lane step (one row per granted lane per round, written
+        #: in-trace), drained once when ``run()`` returns, alongside the
+        #: canonical server/job summary docs and per-job latency histograms.
+        self.trace = trace
         # a dropped task is work lost forever: for the graph algorithms that
         # silently corrupts the answer (an unreached BFS vertex stays INF),
         # so by default any overflow fails the run loudly.  Opt out only for
@@ -177,7 +191,8 @@ class TaskServer:
                 biggest = max(biggest, 8 * n)
         return biggest
 
-    def _step_for(self, f, stop, W: int, backend: str, task_width=None):
+    def _step_for(self, f, stop, W: int, backend: str, task_width=None,
+                  work_fn=None, traced: bool = False):
         """One compiled scheduler step per distinct wavefront body.
 
         The pop->body->push spine is the shared
@@ -201,10 +216,11 @@ class TaskServer:
         # the key so jnp- and pallas-backed servers never share a step.
         # task_width switches the pop quota to vertex units (granularity >
         # 1, DESIGN.md section 12), so it distinguishes executables too.
-        key = (f, stop, W, backend, task_width)
+        # traced variants live under distinct keys: an untraced server keeps
+        # exactly the pre-observability executables (disabled = identity).
+        key = (f, stop, W, backend, task_width, work_fn, traced)
         if key not in cache:
-            @jax.jit
-            def step(mq, lane_id, state, counters, quota, job_id):
+            def core(mq, lane_id, state, counters, quota, job_id):
                 # lane extraction/writeback is traced: one dispatch per
                 # scheduler step instead of a shower of eager slice ops.
                 aux = {}
@@ -216,26 +232,62 @@ class TaskServer:
                 mq, state, _, n_valid = wavefront_step(
                     f, None, ops, (mq, state, jnp.int32(0), jnp.int32(0)),
                     always_run_body=True)
-                counters = counters + jnp.stack([n_valid, aux["mismatch"]])
+                counters = counters + jnp.stack(
+                    [n_valid, aux["vertices"], aux["mismatch"]])
                 stopped = (jnp.bool_(False) if stop is None
                            else stop(state))
-                return mq, state, counters, stopped
+                return mq, state, counters, stopped, n_valid
+
+            if traced:
+                @jax.jit
+                def step(mq, lane_id, state, counters, quota, job_id,
+                         ring, round_ix):
+                    size_before = mq.lane(lane_id).size
+                    work0 = work_fn(state) if work_fn is not None else 0
+                    mq, state, counters, stopped, n_valid = core(
+                        mq, lane_id, state, counters, quota, job_id)
+                    work1 = work_fn(state) if work_fn is not None else 0
+                    size_after = mq.lane(lane_id).size
+                    ring = ring.record(
+                        round=round_ix, lane=lane_id,
+                        queue_size=size_before, pops=n_valid,
+                        pushes=size_after - size_before + n_valid,
+                        work=work1 - work0)
+                    return mq, state, counters, stopped, ring
+            else:
+                @jax.jit
+                def step(mq, lane_id, state, counters, quota, job_id):
+                    return core(mq, lane_id, state, counters, quota,
+                                job_id)[:4]
 
             cache[key] = step
         return cache[key]
 
-    def _empty_step_for(self, on_empty, stop, backend: str):
+    def _empty_step_for(self, on_empty, stop, backend: str,
+                        traced: bool = False):
         cache = self.registry.empty_step_cache
-        key = (on_empty, stop, backend)
+        key = (on_empty, stop, backend, traced)
         if key not in cache:
-            @jax.jit
-            def step(mq, lane_id, state, job_id):
+            def core(mq, lane_id, state, job_id):
                 out, mask, state = on_empty(state)
                 mq = mq.push(lane_id, pack(job_id, out), mask,
                              backend=backend)
                 stopped = (jnp.bool_(False) if stop is None
                            else stop(state))
                 return mq, state, stopped
+
+            if traced:
+                @jax.jit
+                def step(mq, lane_id, state, job_id, ring, round_ix):
+                    size_before = mq.lane(lane_id).size
+                    mq, state, stopped = core(mq, lane_id, state, job_id)
+                    ring = ring.record(
+                        round=round_ix, lane=lane_id,
+                        queue_size=size_before, pops=0,
+                        pushes=mq.lane(lane_id).size - size_before)
+                    return mq, state, stopped, ring
+            else:
+                step = jax.jit(core)
 
             cache[key] = step
         return cache[key]
@@ -250,7 +302,7 @@ class TaskServer:
                 split_threshold=cfg.split_threshold)
         prog = job.program
         job.state, seeds = prog.init()
-        job.counters = jnp.zeros((2,), jnp.int32)
+        job.counters = jnp.zeros((3,), jnp.int32)
         job.width_of = (encoding_packed_width(prog.task_width)
                         if cfg.granularity > 1 and prog.task_width is not None
                         else None)
@@ -261,7 +313,7 @@ class TaskServer:
             job.telemetry = JobTelemetry(
                 job_id=job.job_id, algorithm=prog.algorithm,
                 graph=prog.graph_name, wavefront=cfg.wavefront,
-                ideal_work=prog.ideal_work)
+                ideal_work=prog.ideal_work, granularity=cfg.granularity)
         job.telemetry.admitted_round = rounds
         mq = mq.reset_lane(lane)
         seeds = jnp.asarray(seeds, jnp.int32)
@@ -276,8 +328,10 @@ class TaskServer:
     def _finalize(self, job: Job, mq: MultiQueue, rounds: int) -> MultiQueue:
         prog = job.program
         job.result = np.asarray(prog.result(job.state))
-        items, mismatches = (int(x) for x in np.asarray(job.counters))
+        items, vertices, mismatches = (int(x)
+                                       for x in np.asarray(job.counters))
         job.telemetry.items_processed = items
+        job.telemetry.vertices_processed = vertices
         job.telemetry.routing_mismatches = mismatches
         job.telemetry.work = int(prog.work(job.state))
         job.telemetry.completed_round = rounds
@@ -320,7 +374,9 @@ class TaskServer:
         log.info("sharded job %d (%s on %s) over %d shards",
                  job.job_id, spec.algorithm, spec.graph, spec.shards)
         state, sstats = _shard.run_sharded(
-            program, graph, scfg, queue_capacity=self._lane_capacity)
+            program, graph, scfg, queue_capacity=self._lane_capacity,
+            trace=self.trace,
+            trace_engine=f"server.job{job.job_id}.sharded")
         job.result = np.asarray(program.result(state))
         tel = JobTelemetry(
             job_id=job.job_id, algorithm=spec.algorithm, graph=spec.graph,
@@ -378,7 +434,9 @@ class TaskServer:
             params=dict(spec.params), queue_capacity=self._lane_capacity,
             incremental=stream.incremental,
             snapshot_every=stream.snapshot_every,
-            checkpoint_dir=stream.checkpoint_dir, resume=stream.resume)
+            checkpoint_dir=stream.checkpoint_dir, resume=stream.resume,
+            trace=self.trace,
+            trace_engine=f"server.job{job.job_id}.stream")
         job.result = np.asarray(res.result)
         job.stream_result = res
         tel = JobTelemetry(
@@ -430,6 +488,8 @@ class TaskServer:
         W = cfg.wavefront
         lane_capacity = self._resolve_lane_capacity()
         stats = ServerStats(wavefront=W)
+        trace = self.trace
+        ring = trace.ring() if trace is not None else None
         t0 = time.perf_counter()
         for job in self._jobs:
             if job.status != "pending" or job.spec is None:
@@ -527,17 +587,29 @@ class TaskServer:
                 if quota > 0:
                     step = self._step_for(
                         prog.wavefront_fn, prog.stop, W, cfg.backend,
-                        task_width=prog.task_width if granular else None)
-                    mq, job.state, job.counters, stopped = step(
-                        mq, lane, job.state, job.counters, quota,
-                        job.job_id)
+                        task_width=prog.task_width if granular else None,
+                        work_fn=prog.work if trace is not None else None,
+                        traced=trace is not None)
+                    if trace is not None:
+                        mq, job.state, job.counters, stopped, ring = step(
+                            mq, lane, job.state, job.counters, quota,
+                            job.job_id, ring, rounds)
+                    else:
+                        mq, job.state, job.counters, stopped = step(
+                            mq, lane, job.state, job.counters, quota,
+                            job.job_id)
                     job.telemetry.rounds_active += 1
                 elif sizes[lane] == 0 and prog.on_empty is not None \
                         and not job.stopped:
                     estep = self._empty_step_for(prog.on_empty, prog.stop,
-                                                 cfg.backend)
-                    mq, job.state, stopped = estep(
-                        mq, lane, job.state, job.job_id)
+                                                 cfg.backend,
+                                                 traced=trace is not None)
+                    if trace is not None:
+                        mq, job.state, stopped, ring = estep(
+                            mq, lane, job.state, job.job_id, ring, rounds)
+                    else:
+                        mq, job.state, stopped = estep(
+                            mq, lane, job.state, job.job_id)
                     job.telemetry.rounds_active += 1
                 else:
                     continue
@@ -556,6 +628,29 @@ class TaskServer:
         stats.wall_seconds = time.perf_counter() - t0
         stats.items_processed = sum(
             j.telemetry.items_processed for j in self._jobs)
+        if trace is not None:
+            trace.drain(ring, engine="server")
+            trace.add_metric(stats.as_dict())
+            latency = trace.histogram("job_latency_rounds")
+            delay = trace.histogram("job_queue_delay_rounds")
+            for j in self._jobs:
+                tel = j.telemetry
+                if tel is None:
+                    continue
+                trace.add_metric(tel.as_dict())
+                if tel.latency_rounds >= 0:
+                    latency.add(tel.latency_rounds)
+                if tel.queue_delay_rounds >= 0:
+                    delay.add(tel.queue_delay_rounds)
+                # per-job distribution: one sample per drain the job ran —
+                # each delta batch for a streaming job, the whole drain for
+                # a batch job — so p50/p99 are meaningful per tenant.
+                per_job = trace.histogram(f"job{j.job_id}_latency_rounds")
+                if j.stream_result is not None:
+                    per_job.extend(b.rounds
+                                   for b in j.stream_result.batches)
+                elif tel.latency_rounds >= 0:
+                    per_job.add(tel.latency_rounds)
         return ServerResult(
             results={j.job_id: j.result for j in self._jobs},
             telemetry={j.job_id: j.telemetry for j in self._jobs},

@@ -43,6 +43,7 @@ from ..core.queue import EMPTY, MultiQueue, TaskQueue
 from ..core.scheduler import QueueOps, SchedulerConfig, wavefront_step
 from ..graph.csr import CSRGraph
 from ..launch.mesh import make_shard_mesh
+from ..obs import Trace, stacked_rings, unstack_ring
 from ..runtime.program import AtosProgram, ProgramContext, build_merge
 from .exchange import LANE_LOCAL, NUM_LANES, pop_wavefront, route_tasks
 from .partition import ShardedCSR, owner_of, partition_graph, split_seeds
@@ -104,12 +105,15 @@ class ShardRunStats:
         return float(self.per_device_items.min()) / hi if hi else 1.0
 
     def as_dict(self) -> dict:
+        """Serialize into the canonical ``shard_run`` doc (obs/schema)."""
+        from ..obs.schema import metric_doc  # lazy: obs is a leaf layer
+
         d = dataclasses.asdict(self)
         for k, v in d.items():
             if isinstance(v, np.ndarray):
                 d[k] = v.tolist()
         d["occupancy_balance"] = self.occupancy_balance
-        return d
+        return metric_doc("shard_run", **d)
 
 
 # --------------------------------------------------------------- plumbing
@@ -160,7 +164,7 @@ def _stacked_view(tree):
 
 
 def _make_round(program: AtosProgram, cfg: SchedulerConfig, n: int,
-                route_width: Optional[int]):
+                route_width: Optional[int], traced: bool = False):
     """The shared round body: steal -> pop -> f -> exchange -> merge.
 
     The pop->body->push spine is the same :func:`~repro.core.scheduler.
@@ -181,8 +185,13 @@ def _make_round(program: AtosProgram, cfg: SchedulerConfig, n: int,
     # pre-granularity accounting bit-for-bit.
     width_of = program.task_width if cfg.granularity > 1 else None
 
-    def round_step(f, mq: MultiQueue, state, c: ShardCounters):
+    def round_step(f, mq: MultiQueue, state, c: ShardCounters, ring=None):
         me = jax.lax.axis_index(AXIS)
+        if ring is not None:
+            size_before = mq.size  # pre-steal, pre-pop replica occupancy
+            work0 = program.work(state) if program.work is not None else 0
+            splits0 = (program.splits(state)
+                       if program.splits is not None else 0)
         donated = jnp.int32(0)
         triggered = jnp.bool_(False)
         if steal_on:
@@ -220,6 +229,18 @@ def _make_round(program: AtosProgram, cfg: SchedulerConfig, n: int,
         mq, new_state, _, n_valid = wavefront_step(
             f, None, ops, (mq, state, jnp.int32(0), jnp.int32(0)),
             always_run_body=True)
+        if ring is not None:
+            # one row per device per round, written in-trace (zero syncs):
+            # work/splits are the device-local pre-merge deltas, so summing
+            # a round's rows across lanes reassembles the global round.
+            work1 = program.work(new_state) if program.work is not None else 0
+            splits1 = (program.splits(new_state)
+                       if program.splits is not None else 0)
+            ring = ring.record(
+                round=c.rounds, lane=me, queue_size=size_before,
+                pops=n_valid, pushes=mq.size - size_before + n_valid,
+                work=work1 - work0, splits=splits1 - splits0,
+                donated=donated, exchanged=aux["sent"])
         # round-synchronous replica reconciliation: after this every device
         # holds the identical merged state, so next round's pops read
         # globally fresh values (the TREES-style epoch barrier).
@@ -235,6 +256,8 @@ def _make_round(program: AtosProgram, cfg: SchedulerConfig, n: int,
             steal_rounds=c.steal_rounds + triggered.astype(jnp.int32),
             mis_routed=c.mis_routed + aux["mis"],
         )
+        if ring is not None:
+            return mq, state, c, ring
         return mq, state, c
 
     def keep_going(mq: MultiQueue, state, c: ShardCounters):
@@ -266,12 +289,21 @@ def _counters_out(c: ShardCounters):
 
 # ----------------------------------------------------------------- drivers
 def persistent_run_sharded(program, parts: ShardedCSR, mq0, state0,
-                           cfg: SchedulerConfig, mesh, route_width=None):
-    """Whole drain in one shard_map'd while_loop (multi-device persistent)."""
-    n = parts.num_vertices
-    round_builder = _make_round(program, cfg, n, route_width)
+                           cfg: SchedulerConfig, mesh, route_width=None,
+                           ring0=None):
+    """Whole drain in one shard_map'd while_loop (multi-device persistent).
 
-    def drain(row_ptr, col_idx, mq_st, state):
+    ``ring0``, if given, is a *stacked* per-device
+    :class:`~repro.obs.TraceRing` (leading axis ``num_shards``); each device
+    appends one row per round inside the while_loop — the traced drain is
+    otherwise identical, and the rings come back stacked for the caller to
+    drain.
+    """
+    n = parts.num_vertices
+    traced = ring0 is not None
+    round_builder = _make_round(program, cfg, n, route_width, traced=traced)
+
+    def drain(row_ptr, col_idx, mq_st, state, *maybe_ring):
         local_graph = CSRGraph(row_ptr=row_ptr[0], col_idx=col_idx[0])
         me = jax.lax.axis_index(AXIS)
         f = program.body(local_graph, _shard_context(cfg, me))
@@ -283,6 +315,20 @@ def persistent_run_sharded(program, parts: ShardedCSR, mq0, state0,
         def cond(carry):
             return carry[3]
 
+        if traced:
+            ring = _local_view(maybe_ring[0])
+
+            def body(carry):
+                mq, state, c, _, ring = carry
+                mq, state, c, ring = round_step(f, mq, state, c, ring)
+                return mq, state, c, keep_going(mq, state, c), ring
+
+            mq, state, c, _, ring = jax.lax.while_loop(
+                cond, body,
+                (mq, state, c0, keep_going(mq, state, c0), ring))
+            return (_stacked_view(mq), state, _counters_out(c),
+                    _stacked_view(ring))
+
         def body(carry):
             mq, state, c, _ = carry
             mq, state, c = round_step(f, mq, state, c)
@@ -293,49 +339,67 @@ def persistent_run_sharded(program, parts: ShardedCSR, mq0, state0,
         return _stacked_view(mq), state, _counters_out(c)
 
     specs_q = jax.tree.map(lambda _: P(AXIS), mq0)
-    out_q = specs_q
-    fn = shard_map(
-        drain, mesh=mesh,
-        in_specs=(P(AXIS), P(AXIS), specs_q, P()),
-        out_specs=(out_q, P(), jax.tree.map(lambda _: P(AXIS),
-                                            ShardCounters.zero())),
-        check_rep=False)
-    return jax.jit(fn)(parts.row_ptr, parts.col_idx, mq0, state0)
+    specs_c = jax.tree.map(lambda _: P(AXIS), ShardCounters.zero())
+    in_specs = (P(AXIS), P(AXIS), specs_q, P())
+    out_specs = (specs_q, P(), specs_c)
+    operands = (parts.row_ptr, parts.col_idx, mq0, state0)
+    if traced:
+        specs_r = jax.tree.map(lambda _: P(AXIS), ring0)
+        in_specs = in_specs + (specs_r,)
+        out_specs = out_specs + (specs_r,)
+        operands = operands + (ring0,)
+    fn = shard_map(drain, mesh=mesh, in_specs=in_specs,
+                   out_specs=out_specs, check_rep=False)
+    return jax.jit(fn)(*operands)
 
 
 def discrete_run_sharded(program, parts: ShardedCSR, mq0, state0,
                          cfg: SchedulerConfig, mesh, route_width=None,
-                         trace: Optional[list] = None):
+                         trace: Optional[list] = None, ring0=None):
     """Host loop around one jitted sharded round (discrete kernels).
 
     ``trace`` collects per-round host-side dicts: global queue sizes,
     exchange volume, donations — the benchmark's per-round telemetry.
+    ``ring0`` is the stacked per-device :class:`~repro.obs.TraceRing` as in
+    :func:`persistent_run_sharded`: it rides the jitted round as a device
+    operand, so in-loop tracing still costs zero extra host syncs.
     """
     n = parts.num_vertices
-    round_builder = _make_round(program, cfg, n, route_width)
+    traced = ring0 is not None
+    round_builder = _make_round(program, cfg, n, route_width, traced=traced)
 
-    def one_round(row_ptr, col_idx, mq_st, state, c_st):
+    def one_round(row_ptr, col_idx, mq_st, state, c_st, *maybe_ring):
         local_graph = CSRGraph(row_ptr=row_ptr[0], col_idx=col_idx[0])
         me = jax.lax.axis_index(AXIS)
         f = program.body(local_graph, _shard_context(cfg, me))
         round_step, keep_going = round_builder
         mq = _local_view(mq_st)
         c = _local_view(c_st)
-        mq, state, c = round_step(f, mq, state, c)
+        if traced:
+            ring = _local_view(maybe_ring[0])
+            mq, state, c, ring = round_step(f, mq, state, c, ring)
+        else:
+            mq, state, c = round_step(f, mq, state, c)
         more = keep_going(mq, state, c)
         size = mq.size
-        return (_stacked_view(mq), state, _counters_out(c),
-                more, size[None])
+        out = (_stacked_view(mq), state, _counters_out(c), more, size[None])
+        if traced:
+            out = out + (_stacked_view(ring),)
+        return out
 
     specs_q = jax.tree.map(lambda _: P(AXIS), mq0)
     specs_c = jax.tree.map(lambda _: P(AXIS), ShardCounters.zero())
-    step = jax.jit(shard_map(
-        one_round, mesh=mesh,
-        in_specs=(P(AXIS), P(AXIS), specs_q, P(), specs_c),
-        out_specs=(specs_q, P(), specs_c, P(), P(AXIS)),
-        check_rep=False))
+    in_specs = (P(AXIS), P(AXIS), specs_q, P(), specs_c)
+    out_specs = (specs_q, P(), specs_c, P(), P(AXIS))
+    if traced:
+        specs_r = jax.tree.map(lambda _: P(AXIS), ring0)
+        in_specs = in_specs + (specs_r,)
+        out_specs = out_specs + (specs_r,)
+    step = jax.jit(shard_map(one_round, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_rep=False))
 
     mq_st, state = mq0, state0
+    ring_st = ring0
     c_st = jax.tree.map(
         lambda x: jnp.zeros((cfg.num_shards,), x.dtype), ShardCounters.zero())
     rounds = 0
@@ -348,8 +412,12 @@ def discrete_run_sharded(program, parts: ShardedCSR, mq0, state0,
                 break
         if program.stop is not None and bool(program.stop(state)):
             break
-        mq_st, state, c_st, more, sizes_dev = step(
-            parts.row_ptr, parts.col_idx, mq_st, state, c_st)
+        operands = (parts.row_ptr, parts.col_idx, mq_st, state, c_st)
+        if traced:
+            (mq_st, state, c_st, more, sizes_dev, ring_st) = step(
+                *operands, ring_st)
+        else:
+            mq_st, state, c_st, more, sizes_dev = step(*operands)
         rounds += 1
         if trace is not None:
             sent_total = int(np.asarray(c_st.sent).sum())
@@ -364,6 +432,8 @@ def discrete_run_sharded(program, parts: ShardedCSR, mq0, state0,
             prev_donated = donated_total
         if not bool(more):
             break
+    if traced:
+        return mq_st, state, c_st, ring_st
     return mq_st, state, c_st
 
 
@@ -381,7 +451,9 @@ def run_sharded(
     queue_capacity: Optional[int] = None,
     route_width: Optional[int] = None,
     mesh=None,
-    trace: Optional[list] = None,
+    trace=None,
+    trace_engine: Optional[str] = None,
+    trace_round_offset: int = 0,
     initial_queues: Optional[MultiQueue] = None,
     initial_state: Any = None,
     final_queues: Optional[list] = None,
@@ -390,6 +462,13 @@ def run_sharded(
 
     Returns ``(final_state, ShardRunStats)``.  The final state is the merged
     (replicated) global state — ``program.result(state)`` is the answer.
+
+    ``trace`` accepts an :class:`~repro.obs.Trace` (one stacked per-device
+    ring rides the drain; every device appends one row per round in-trace,
+    drained per shard at run end under ``trace_engine`` with absolute round
+    numbers shifted by ``trace_round_offset``) or a legacy ``list``
+    (discrete driver only: per-round host telemetry dicts, at the cost of
+    host syncs).
 
     ``initial_state`` / ``initial_queues`` resume a drain from an explicit
     carry instead of ``program.init()`` (the streaming driver's dirty-seed
@@ -412,13 +491,23 @@ def run_sharded(
             initial_queues = seed_queues(program, seeds, n, s, capacity)
     state0, mq0 = initial_state, initial_queues
 
+    obs = trace if isinstance(trace, Trace) else None
+    legacy = trace if isinstance(trace, list) else None
+    ring0 = stacked_rings(obs.ring(), s) if obs is not None else None
+    ring_st = None
+
     if cfg.persistent:
-        mq_st, state, c_st = persistent_run_sharded(
-            program, parts, mq0, state0, cfg, mesh, route_width=route_width)
-    else:
-        mq_st, state, c_st = discrete_run_sharded(
+        out = persistent_run_sharded(
             program, parts, mq0, state0, cfg, mesh, route_width=route_width,
-            trace=trace)
+            ring0=ring0)
+    else:
+        out = discrete_run_sharded(
+            program, parts, mq0, state0, cfg, mesh, route_width=route_width,
+            trace=legacy, ring0=ring0)
+    if obs is not None:
+        mq_st, state, c_st, ring_st = out
+    else:
+        mq_st, state, c_st = out
 
     c = jax.tree.map(np.asarray, c_st)
     stats = ShardRunStats(
@@ -436,6 +525,13 @@ def run_sharded(
         per_device_donated=c.donated,
         final_sizes=np.asarray(_queue_sizes(mq_st)),
     )
+    if obs is not None:
+        engine = trace_engine or (
+            "sharded.persistent" if cfg.persistent else "sharded.discrete")
+        for d in range(s):
+            obs.drain(unstack_ring(ring_st, d), engine=engine,
+                      round_offset=trace_round_offset)
+        obs.add_metric(stats.as_dict())
     if final_queues is not None:
         final_queues.append(mq_st)
     return state, stats

@@ -32,7 +32,9 @@ import numpy as np
 from ..core.queue import make_multiqueue, make_queue
 from ..core.scheduler import (SchedulerConfig, megakernel_drive,
                               megakernel_segment, persistent_drive)
-from ..runtime.api import _shared_setup, shared_queue_capacity
+from ..obs import Trace
+from ..runtime.api import _shared_setup, instrument_step, \
+    shared_queue_capacity
 from ..runtime.policy import policy_of
 from ..runtime.programs import build_program
 from .deltas import EdgeDelta
@@ -83,6 +85,14 @@ class StreamResult:
     batches: List[BatchRecord]
     info: dict
 
+    def as_dict(self) -> dict:
+        """Serialize into the canonical ``stream`` doc (obs/schema)."""
+        from ..obs.schema import metric_doc  # lazy: obs is a leaf layer
+
+        return metric_doc(
+            "stream",
+            **{k: v for k, v in self.info.items() if v is not None})
+
 
 def _drive_shared(step, cond, carry, kernel: str, every: int, cb):
     """Drive a single/fused carry to its fixed point, calling ``cb(carry)``
@@ -124,7 +134,8 @@ def _drive_shared(step, cond, carry, kernel: str, every: int, cb):
 
 def _drive_sharded(program, graph, cfg: SchedulerConfig, capacity: int,
                    mq, state, rounds: int, processed: int, every: int, cb,
-                   route_width, mesh):
+                   route_width, mesh, trace=None, trace_engine=None,
+                   trace_round_offset: int = 0):
     """Segmented sharded drain: each segment is one ``run_sharded`` call
     with its round budget clamped to the next snapshot boundary.  The
     host-side continuation replicates the in-loop ``keep_going`` exactly
@@ -154,7 +165,9 @@ def _drive_sharded(program, graph, cfg: SchedulerConfig, capacity: int,
         fq: list = []
         state, st = _shard.run_sharded(
             program, graph, scfg, queue_capacity=capacity,
-            route_width=route_width, mesh=mesh,
+            route_width=route_width, mesh=mesh, trace=trace,
+            trace_engine=trace_engine,
+            trace_round_offset=trace_round_offset + rounds,
             initial_queues=mq, initial_state=state, final_queues=fq)
         mq = fq[0]
         rounds += st.rounds
@@ -188,6 +201,8 @@ def run_stream(
     route_width: Optional[int] = None,
     mesh=None,
     snapshot_hook=None,
+    trace: Optional[Trace] = None,
+    trace_engine: Optional[str] = None,
 ) -> StreamResult:
     """Run ``algorithm`` over ``graph`` + a delta log, batch by batch.
 
@@ -197,6 +212,13 @@ def run_stream(
     process inside it.  On resume, records for batches that completed
     before the restored snapshot are not re-synthesized; the final state
     and result are nevertheless bit-identical to an uninterrupted run.
+
+    ``trace`` (an :class:`~repro.obs.Trace`) threads a fresh device ring
+    through every batch's drain — snapshots never see it (the save hooks
+    receive only queue + state), so segmented and resumed runs stay
+    bit-identical — draining each batch under ``trace_engine`` with
+    absolute (cross-batch) round numbers, and registers the canonical
+    ``stream`` summary doc at the end.
     """
     policy = policy_of(cfg)
     deltas = list(deltas)
@@ -287,6 +309,10 @@ def run_stream(
                 snapshot_hook(t, b)
 
         every = snapshot_every if snap is not None else 0
+        engine = trace_engine or f"stream.{algorithm}"
+        # cross-batch round offset: batches tile one absolute timeline in
+        # the exported trace (in-batch rounds restart at r0 per batch)
+        batch_offset = totals["rounds"]
         if not sharded:
             init_arg = (state, seeds)
             queue_in = restored[0] if restored is not None else None
@@ -296,12 +322,21 @@ def run_stream(
             r0 = restored[1] if restored is not None else 0
             p0 = restored[2] if restored is not None else 0
             carry = (queue, state0, jnp.int32(r0), jnp.int32(p0))
+            if trace is not None:
+                # fresh ring per batch, riding LAST in the carry — the
+                # snapshot hooks below only ever see c[0]/c[1], so the
+                # ring never reaches a checkpoint
+                step, cond = instrument_step(step, cond, ops, program)
+                carry = carry + (trace.ring(),)
             if snap is not None and restored is None:
                 save_snapshot(carry[0], carry[1], 0, 0)
             cb = (lambda c: save_snapshot(c[0], c[1], int(c[2]), int(c[3])))
             carry = _drive_shared(step, cond, carry, policy.kernel,
                                   every, cb)
-            queue, state, rounds_a, processed_a = carry
+            queue, state, rounds_a, processed_a = carry[:4]
+            if trace is not None:
+                trace.drain(carry[4], engine=engine,
+                            round_offset=batch_offset - r0)
             rounds, processed = int(rounds_a), int(processed_a)
             dropped = int(dropped_of(queue))
             extra = {}
@@ -317,7 +352,8 @@ def run_stream(
             _, state, rounds, processed, dropped, extra = _drive_sharded(
                 program, cur_graph, cfg, capacity, mq, state, r0, p0, every,
                 lambda q, st, r, p: save_snapshot(q, st, r, p),
-                route_width, mesh)
+                route_width, mesh, trace=trace, trace_engine=engine,
+                trace_round_offset=batch_offset - r0)
 
         records.append(BatchRecord(
             batch=b, incremental=was_incremental, seeds=seeds_count,
@@ -343,5 +379,8 @@ def run_stream(
         "incremental": incremental,
         "topology": policy.topology,
     })
-    return StreamResult(state=state, result=program.result(state),
-                        batches=records, info=info)
+    out = StreamResult(state=state, result=program.result(state),
+                       batches=records, info=info)
+    if trace is not None:
+        trace.add_metric(out.as_dict())
+    return out
