@@ -7,7 +7,9 @@ schedule — graph, seeds, launch shape, shard count, chunk width — with
 zero timing noise, so any change to the drain engines that shifts them is
 a real behavioral regression, not jitter.  This re-runs the exact
 configurations ``bench_shard`` records in ``BENCH_shard.json`` (BFS over
-the R-MAT and grid graphs, every shard count, steal on/off) and
+the R-MAT and grid graphs, every shard count, steal on/off, the 2-D mesh
+sweep's per-axis exchange / overlap / compression counters, and the
+grid-vs-successive-halving autotune agreement record) and
 ``bench_granularity`` records in ``BENCH_granularity.json`` (PageRank
 ample/tight-budget rounds + formation splits and sharded per-g exchange
 volume, every chunk width) and ``bench_stream`` records in
@@ -54,6 +56,16 @@ OBS_METRICS_JSONL = REPO / "BENCH_obs_metrics.jsonl"
 #: (wall_seconds, balances etc. are measurements, not invariants)
 _SHARD_FIELDS = ("rounds", "exchanged_total", "per_device_items")
 _STEAL_FIELDS = ("rounds", "donated", "stolen_executed")
+#: schedule-deterministic fields of each 2-D mesh cell (section 16):
+#: per-axis cross-device payload, payload vs padding split, metered wire
+#: ints, and the overlap pipeline's delivery counters
+_MESH_FIELDS = ("rounds", "exchanged_total", "exchanged_row",
+                "exchanged_col", "payload_ints", "padding_ints",
+                "wire_ints", "deferred", "overlap_rounds")
+#: the autotune agreement record is deterministic end to end (structural
+#: runner, CRC tiebreak): the chosen keys themselves are pinned
+_AUTOTUNE_FIELDS = ("grid_chosen", "sh_chosen", "agree", "cells_total",
+                    "cells_measured")
 #: schedule-deterministic fields of each granularity cell's workloads
 _GRAN_FIELDS = {
     "pagerank_ample": ("rounds", "work", "splits"),
@@ -78,8 +90,9 @@ def _recompute() -> dict:
     Every graph parameter and launch shape is imported from bench_shard so
     the guard can never drift from the configs that produced the baseline.
     """
-    from .bench_shard import (GRID_SIDE, SCALE, SHARD_COUNTS, SHARD_WORKERS,
-                              STEAL_CHUNK, STEAL_THRESHOLD, STEAL_WORKERS)
+    from .bench_shard import (GRID_SIDE, MESH_SHAPES, SCALE, SHARD_COUNTS,
+                              SHARD_WORKERS, STEAL_CHUNK, STEAL_THRESHOLD,
+                              STEAL_WORKERS)
 
     body = f"""
 import os
@@ -121,6 +134,50 @@ for name, g in graphs.items():
             'donated': stats.donated,
             'stolen_executed': stats.stolen_executed,
         }}
+    if name == 'rmat':
+        entry['mesh'] = {{}}
+        for mesh in {list(MESH_SHAPES)}:
+            label = '%dx%d' % tuple(mesh)
+            entry['mesh'][label] = {{}}
+            for dlabel, defer in (('strict', 0), ('defer', 1)):
+                cell = {{}}
+                for clabel, comp in (('raw', False), ('compressed', True)):
+                    cfg = SchedulerConfig(num_workers={SHARD_WORKERS},
+                                          num_shards=8,
+                                          mesh_shape=tuple(mesh),
+                                          defer_rounds=defer, compress=comp)
+                    program = build_program('bfs', g, cfg,
+                                            params={{'source': 0}})
+                    state, stats = run_sharded(program, g, cfg)
+                    cell[clabel] = {{
+                        'rounds': stats.rounds,
+                        'exchanged_total': stats.exchanged,
+                        'exchanged_row': stats.exchanged_row,
+                        'exchanged_col': stats.exchanged_col,
+                        'payload_ints': stats.payload_ints,
+                        'padding_ints': stats.padding_ints,
+                        'wire_ints': stats.wire_ints,
+                        'deferred': stats.deferred_delivered,
+                        'overlap_rounds': stats.overlap_rounds,
+                    }}
+                entry['mesh'][label][dlabel] = cell
+    import tempfile
+    from pathlib import Path as _P
+    from repro.server import Autotuner, structural_cost_runner
+    with tempfile.TemporaryDirectory() as td:
+        Autotuner(cache_path=_P(td) / 'g.json', warmup=0, iters=1,
+                  runner=structural_cost_runner,
+                  search='grid').tune('bfs', g)
+        Autotuner(cache_path=_P(td) / 's.json', warmup=0, iters=1,
+                  runner=structural_cost_runner, search='sh').tune('bfs', g)
+        ge = next(iter(json.loads((_P(td) / 'g.json').read_text()).values()))
+        se = next(iter(json.loads((_P(td) / 's.json').read_text()).values()))
+    entry['autotune'] = {{
+        'grid_chosen': ge['chosen'], 'sh_chosen': se['chosen'],
+        'agree': ge['chosen'] == se['chosen'],
+        'cells_total': se['cells_total'],
+        'cells_measured': se['cells_measured'],
+    }}
     out[name] = entry
 print(json.dumps(out))
 """
@@ -428,6 +485,19 @@ def run() -> int:
             for field in _STEAL_FIELDS:
                 check(f"{gname}/steal/{label}/{field}", want[field],
                       got[field])
+        for label, modes in entry.get("mesh", {}).items():
+            for dlabel, want_cell in modes.items():
+                for clabel in ("raw", "compressed"):
+                    got_cell = fresh[gname]["mesh"][label][dlabel][clabel]
+                    for field in _MESH_FIELDS:
+                        check(f"{gname}/mesh{label}/{dlabel}/{clabel}"
+                              f"/{field}", want_cell[clabel][field],
+                              got_cell[field])
+        if "autotune" in entry:
+            got_at = fresh[gname]["autotune"]
+            for field in _AUTOTUNE_FIELDS:
+                check(f"{gname}/autotune/{field}",
+                      entry["autotune"][field], got_at[field])
 
     gran_base = json.loads(GRANULARITY_JSON.read_text())["graphs"]
     gran_fresh = _recompute_granularity()

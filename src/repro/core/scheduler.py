@@ -102,6 +102,26 @@ class SchedulerConfig:
     shards donate up to ``steal_chunk`` owned tasks to their ring successor
     before the next round; ``0.0`` disables stealing.
 
+    ``mesh_shape`` (DESIGN.md section 16) folds the shard axis into a 2-D
+    ``("row", "col")`` mesh of ``rows x cols == num_shards`` devices: the
+    routed exchange then decomposes into two smaller per-axis all_to_alls
+    (dimension-ordered: column hop, then row hop) instead of one global
+    one.  ``None`` (default) keeps the 1-D ``("shard",)`` ring exactly.
+
+    ``defer_rounds`` (DESIGN.md section 16) relaxes exchange delivery by
+    that many rounds (0 = strict, today's round-synchronous path bit for
+    bit; 1 = double-buffered overlap: round ``k``'s routed tasks land in a
+    staging buffer and enter the owner's queue at the start of round
+    ``k+1``, so the collective overlaps round ``k+1``'s expansion on
+    already-delivered work).  Legal under Atos semantics — tasks are
+    idempotent re-checks, so delaying delivery changes the schedule, never
+    the fixpoint; the global stop predicate counts staged tasks as live.
+
+    ``compress`` (DESIGN.md section 16) delta-compresses exchange payloads
+    before the wire (shard/codec.py: sorted-run delta + zigzag bit-packing
+    with a raw fallback); results are unchanged and the wire meters record
+    compressed words instead of raw buffer slots.
+
     ``kernel`` names the kernel strategy explicitly (DESIGN.md section 14):
     ``"persistent"`` / ``"discrete"`` are the two strategies ``persistent``
     has always toggled between; ``"megakernel"`` fuses the whole drain loop
@@ -138,6 +158,9 @@ class SchedulerConfig:
     granularity: int = 1         # max chunk width G (core/task.py); 1 = fine
     split_threshold: int = 0     # chunk degree-sum cap; 0 = work-budget only
     kernel: str = "auto"         # persistent | discrete | megakernel | auto
+    mesh_shape: Optional[Tuple[int, int]] = None  # (rows, cols) 2-D mesh
+    defer_rounds: int = 0        # exchange delivery relaxation (0 = strict)
+    compress: bool = False       # delta-compress exchange payloads (codec)
 
     @property
     def wavefront(self) -> int:

@@ -45,3 +45,22 @@ def make_shard_mesh(n: int):
     """
     require_devices(n, purpose=f"make_shard_mesh({n})")
     return jax.make_mesh((n,), ("shard",))
+
+
+def make_shard_mesh2d(rows: int, cols: int):
+    """2-D ``("row", "col")`` mesh for the sharded scheduler (DESIGN.md §16).
+
+    Same ownership model as the 1-D mesh — shard ids stay *linear*
+    (``id = row * cols + col``, exactly the row-major order jax linearizes
+    tuple-axis collectives in), so partitioning, steal halos, and the
+    replica merge are unchanged — but the routed task exchange decomposes
+    into two per-axis all_to_alls (a column hop inside each row, then a row
+    hop inside each column: dimension-ordered routing) instead of one
+    global ``num_shards``-wide collective.  On a torus interconnect each
+    hop crosses only ``cols`` (resp. ``rows``) devices.
+    """
+    if rows < 1 or cols < 1:
+        raise ValueError(
+            f"mesh_shape must be positive, got ({rows}, {cols})")
+    require_devices(rows * cols, purpose=f"make_shard_mesh2d({rows}, {cols})")
+    return jax.make_mesh((rows, cols), ("row", "col"))

@@ -181,6 +181,24 @@ def main() -> None:
                          "over an N-device ('shard',) mesh (repro/shard); "
                          "needs N visible devices — on CPU set XLA_FLAGS="
                          "--xla_force_host_platform_device_count=N")
+    ap.add_argument("--mesh", type=int, nargs=2, default=None,
+                    metavar=("R", "C"),
+                    help="shard the BFS jobs over a 2-D ('row', 'col') "
+                         "R x C device mesh instead of the 1-D ring "
+                         "(DESIGN.md section 16): the routed exchange "
+                         "decomposes into two per-axis all_to_alls; "
+                         "implies --shards R*C")
+    ap.add_argument("--overlap", action="store_true",
+                    help="hide the exchange: stage routed task deliveries "
+                         "one round (defer_rounds=1) so the collective "
+                         "overlaps the next round's compute — results "
+                         "unchanged (tasks are idempotent re-checks), "
+                         "schedule may differ from strict delivery")
+    ap.add_argument("--compress", action="store_true",
+                    help="delta-compress exchange payloads on the wire "
+                         "(sorted-run delta + zigzag bit-packing, "
+                         "shard/codec.py); lossless, raw fallback when a "
+                         "batch is incompressible")
     ap.add_argument("--stream", type=int, default=0, metavar="N",
                     help="turn the BFS jobs into streaming jobs over N "
                          "delta batches (repro/stream): each batch commits "
@@ -230,6 +248,13 @@ def main() -> None:
         level=logging.INFO if args.verbose else logging.WARNING,
         format="%(name)s: %(message)s")
 
+    mesh_shape = tuple(args.mesh) if args.mesh else None
+    if mesh_shape:
+        rows, cols = mesh_shape
+        if args.shards > 1 and args.shards != rows * cols:
+            ap.error(f"--shards {args.shards} contradicts "
+                     f"--mesh {rows} {cols} (= {rows * cols} shards)")
+        args.shards = rows * cols
     if args.shards > 1:
         from .mesh import require_devices
 
@@ -257,11 +282,18 @@ def main() -> None:
         # --granularity, as the flag's help promises
         if len(args.exec_policy.split(".")) == 3:
             granularity = policy.granularity
+    if args.autotune and (mesh_shape or args.overlap or args.compress):
+        # the tuner searches launch shapes, not exchange posture; the mesh
+        # knobs would be silently dropped from its chosen config
+        ap.error("--mesh/--overlap/--compress need an explicit config; "
+                 "drop --autotune")
     config = None if args.autotune else SchedulerConfig(
         num_workers=args.workers, fetch_size=args.fetch,
         backend=args.backend, topology=topology, persistent=persistent,
         kernel=kernel, granularity=granularity,
-        split_threshold=args.split_threshold)
+        split_threshold=args.split_threshold,
+        mesh_shape=mesh_shape, defer_rounds=1 if args.overlap else 0,
+        compress=args.compress)
     autotuner = (Autotuner(cache_path=args.autotune_cache)
                  if args.autotune else None)
 

@@ -55,7 +55,11 @@ TRACE_FIELDS: Tuple[str, ...] = (
     "work",        # WorkCounter.work delta (vertices advanced)
     "splits",      # WorkCounter.splits delta (chunk-formation splits)
     "donated",     # steal donations shipped this round (sharded only)
-    "exchanged",   # routed exchange wire volume this round (sharded only)
+    "exchanged",   # distinct tasks routed off-device this round (sharded)
+    "exchanged_row",  # cross-device payload ints, row-axis hop (2-D mesh)
+    "exchanged_col",  # cross-device payload ints, column-axis hop (or 1-D)
+    "wire",        # metered wire ints (compressed words when codec is on)
+    "deferred",    # staged overlap arrivals delivered this round
 )
 
 NUM_FIELDS = len(TRACE_FIELDS)
@@ -104,6 +108,17 @@ KINDS: Dict[str, Dict[str, str]] = {
         "mis_routed": "int",
         "per_device_items": "list",
         "occupancy_balance": "num",
+        # wire accounting (DESIGN.md §16): per-axis cross-device payload,
+        # true payload vs EMPTY padding, metered wire ints, and the overlap
+        # pipeline's delivery counters
+        "exchanged_row": "int",
+        "exchanged_col": "int",
+        "payload_ints": "int",
+        "padding_ints": "int",
+        "wire_ints": "int",
+        "deferred_delivered": "int",
+        "overlap_rounds": "int",
+        "overlap_occupancy": "num",
     },
     # multi-tenant server summary (server/engine.ServerStats)
     "server": {

@@ -249,6 +249,16 @@ def _run_sharded(program: AtosProgram, graph, cfg: SchedulerConfig,
         "steal_rounds": sstats.steal_rounds,
         "mis_routed": sstats.mis_routed,
         "occupancy_balance": sstats.occupancy_balance,
+        # wire accounting (DESIGN.md §16): per-axis cross-device volume,
+        # payload vs padding, metered wire ints, and the overlap pipeline
+        "exchanged_row": sstats.exchanged_row,
+        "exchanged_col": sstats.exchanged_col,
+        "payload_ints": sstats.payload_ints,
+        "padding_ints": sstats.padding_ints,
+        "wire_ints": sstats.wire_ints,
+        "deferred": sstats.deferred_delivered,
+        "overlap_rounds": sstats.overlap_rounds,
+        "overlap_occupancy": sstats.overlap_occupancy,
     }
     return ExecutionResult(state, stats, info)
 

@@ -4,8 +4,10 @@ One resident scheduler, per-job MultiQueue lanes, packed (job_id, payload)
 tasks, pluggable fairness policies, backpressure/admission control, and a
 SchedulerConfig autotuner implementing the paper's selection guidelines.
 """
-from .autotune import (Autotuner, BACKEND_GRID, DEFAULT_CANDIDATES,
-                       GRANULARITY_GRID, TOPOLOGY_GRID, graph_class)
+from .autotune import (AUTOTUNE_SCHEMA, Autotuner, BACKEND_GRID,
+                       DEFAULT_CANDIDATES, GRANULARITY_GRID, GraphStats,
+                       TOPOLOGY_GRID, graph_class, graph_stats,
+                       predict_cost, structural_cost_runner)
 from .encoding import (MAX_JOBS, PAYLOAD_BITS, pack, unpack_job,
                        unpack_natural, unzigzag, zigzag)
 from .engine import (Job, ServerResult, ServerStats, TaskServer,
@@ -15,8 +17,9 @@ from .policies import (FairnessPolicy, LongestQueueFirst, RoundRobin,
                        WeightedShare, make_policy)
 
 __all__ = [
-    "Autotuner", "BACKEND_GRID", "DEFAULT_CANDIDATES", "GRANULARITY_GRID",
-    "TOPOLOGY_GRID", "graph_class",
+    "AUTOTUNE_SCHEMA", "Autotuner", "BACKEND_GRID", "DEFAULT_CANDIDATES",
+    "GRANULARITY_GRID", "GraphStats", "TOPOLOGY_GRID", "graph_class",
+    "graph_stats", "predict_cost", "structural_cost_runner",
     "MAX_JOBS", "PAYLOAD_BITS", "pack", "unpack_job", "unpack_natural",
     "unzigzag", "zigzag",
     "Job", "ServerResult", "ServerStats", "TaskServer", "serve_sequential",

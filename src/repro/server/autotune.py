@@ -47,6 +47,18 @@ from degree statistics so one tuned decision covers every graph of the same
 shape.  The default config is always in the candidate set, so the chosen
 config is never slower than the default *on the calibration measurements*.
 Decisions are cached to JSON (survives processes) and logged.
+
+Since DESIGN.md section 16 the default search is **successive halving
+seeded by a graph-statistics cost model** rather than the exhaustive grid:
+:func:`graph_stats` distills the calibration graph into a handful of
+features (degree CV, a hub-clipped frontier-growth estimate, a diameter
+proxy), :func:`predict_cost` turns the paper's selection guidelines into a
+closed-form relative-cost score per candidate, and ``tune`` measures only
+the predicted-cheapest ``max(2, N // 4)`` cells (the default config always
+force-included), halving the survivor set between measurement rounds.  The
+exhaustive behaviour is preserved behind ``search="grid"``.  Cache entries
+carry ``schema = AUTOTUNE_SCHEMA`` plus the cost-model provenance; entries
+written by older schema-less runs keep loading unchanged.
 """
 from __future__ import annotations
 
@@ -54,10 +66,12 @@ import contextlib
 import dataclasses
 import json
 import logging
+import math
 import os
 import statistics
 import tempfile
 import time
+import zlib
 from pathlib import Path
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
@@ -135,6 +149,121 @@ def graph_class(graph: CSRGraph) -> str:
     return "scale_free" if max_deg >= 4.0 * avg_deg + 8.0 else "mesh"
 
 
+#: cache schema: 1 = pre-cost-model grid entries (no "schema" field — those
+#: still parse), 2 = adds search/cells_total/cells_measured/cost_model.
+AUTOTUNE_SCHEMA = 2
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphStats:
+    """Degree-derived features the cost model sees (DESIGN.md section 16).
+
+    ``frontier_growth`` is a hub-clipped branching-factor estimate: the mean
+    degree after clipping at the 90th percentile, because a hub's edges fan
+    out once — they do not multiply the frontier round after round the way
+    the raw mean would suggest.  ``diameter_proxy`` is the expected number
+    of drain rounds: ``log(n)/log(branching)`` in the scale-free regime
+    (CV >= 1), ``sqrt(n)`` in the bounded-degree mesh regime.
+    """
+
+    num_vertices: int
+    num_edges: int
+    avg_degree: float
+    degree_cv: float
+    frontier_growth: float
+    diameter_proxy: float
+
+
+def graph_stats(graph: CSRGraph) -> GraphStats:
+    """Distill one calibration graph into the cost model's features."""
+    deg = jnp.asarray(graph.degrees(), jnp.float32)
+    n = int(graph.num_vertices)
+    avg = float(jnp.mean(deg))
+    cv = float(jnp.std(deg)) / max(avg, 1e-9)
+    clip = float(jnp.quantile(deg, 0.9))
+    growth = float(jnp.mean(jnp.minimum(deg, clip)))
+    if cv >= 1.0:
+        diam = math.log(max(n, 2)) / math.log(max(growth, 2.0))
+    else:
+        diam = math.sqrt(max(n, 1))
+    return GraphStats(num_vertices=n, num_edges=int(graph.num_edges),
+                      avg_degree=avg, degree_cv=cv,
+                      frontier_growth=max(growth, 1.0),
+                      diameter_proxy=max(diam, 1.0))
+
+
+#: per-round fixed costs, arbitrary units: a discrete drain re-enters a
+#: kernel every round, a persistent drain pays only the in-loop collective,
+#: the megakernel amortizes even that into one launch.
+_ROUND_COST = {"discrete": 8.0, "persistent": 1.0, "megakernel": 0.25}
+
+
+#: per-round latency charge per launched lane: a wider kernel is a slower
+#: kernel even when most lanes carry EMPTY masks.
+_WIDTH_COST = 0.01
+
+
+def predict_cost(cfg: SchedulerConfig, stats: GraphStats) -> float:
+    """Relative drain-cost score for one candidate (arbitrary units).
+
+    This is the paper's section-7 guidelines as arithmetic, used only to
+    *rank* candidates when seeding successive halving — it never replaces a
+    measurement.  Wall time is rounds x per-round latency: the round count
+    is a frontier ramp (the diameter proxy) plus a drain phase retiring at
+    most ``lanes`` tasks per round out of a rescan-inflated vertex budget,
+    and each round costs its kernel-strategy fixed entry, one parallel
+    expansion (~avg degree), and a width penalty for launched-but-masked
+    lanes.  High diameter favors persistent narrow shapes (fixed cost
+    dominates); heavy tails inflate the budget and favor wide launches.
+    """
+    lanes = float(cfg.num_workers * cfg.fetch_size * max(cfg.granularity, 1))
+    rescan = 1.0 + 0.5 * stats.degree_cv
+    budget = stats.num_vertices * rescan
+    rounds = stats.diameter_proxy + budget / lanes
+    per_round = (_ROUND_COST[policy_of(cfg).kernel]
+                 + max(stats.avg_degree, 1.0) + _WIDTH_COST * lanes)
+    return rounds * per_round
+
+
+def structural_cost_runner(algorithm: str, graph: CSRGraph,
+                           cfg: SchedulerConfig) -> float:
+    """Deterministic drop-in for the calibration runner: returns a
+    structural cost instead of executing anything, so benches and CI can
+    compare the grid and successive-halving searches reproducibly (a wall
+    clock would make the checked-in agreement artifact machine-dependent).
+
+    Finer than :func:`predict_cost`: it simulates the drain round by round
+    with the same per-round wall model — the frontier starts at one task,
+    each round retires at most ``lanes`` of it (one kernel-strategy fixed
+    entry + one parallel expansion + the masked-width penalty), and the
+    remainder grows by the hub-clipped branching factor until the
+    rescan-inflated vertex budget is spent.  Where the closed form guesses
+    the ramp from the diameter proxy, the simulation walks the actual
+    growth trajectory.  Algorithm multipliers model rescan breadth
+    (PageRank re-ranks, coloring re-bids).  A CRC-derived epsilon breaks
+    exact ties deterministically so grid and SH agree on tie-heavy
+    candidate sets.
+    """
+    stats = graph_stats(graph)
+    lanes = float(cfg.num_workers * cfg.fetch_size * max(cfg.granularity, 1))
+    rescan = 1.0 + 0.5 * stats.degree_cv
+    budget = stats.num_vertices * rescan
+    per_round = (_ROUND_COST[policy_of(cfg).kernel]
+                 + max(stats.avg_degree, 1.0) + _WIDTH_COST * lanes)
+    frontier, cost = 1.0, 0.0
+    for _ in range(100_000):
+        if budget <= 0.0 or frontier <= 0.0:
+            break
+        take = min(frontier, lanes, budget)
+        cost += per_round
+        budget -= take
+        frontier = min(frontier - take + take * stats.frontier_growth,
+                       budget)
+    mult = {"bfs": 1.0, "coloring": 1.5, "pagerank": 2.5}.get(algorithm, 1.0)
+    tiebreak = 1.0 + (zlib.crc32(_config_key(cfg).encode()) % 997) * 1e-9
+    return cost * mult * tiebreak
+
+
 def _config_key(cfg: SchedulerConfig) -> str:
     # the key's leading segment is the resolved kernel-strategy name; the
     # legacy two names keep their exact pre-megakernel spelling so every
@@ -206,6 +335,14 @@ class Autotuner:
     ``(algorithm, graph_class)``; ``recommend_for_mix`` aggregates the cached
     trials across a job mix and picks the config minimizing total
     calibration wall time — the server's single shared launch configuration.
+
+    ``search`` selects the measurement strategy: ``"sh"`` (default) is
+    cost-model-seeded successive halving — only the predicted-cheapest
+    ``max(2, N // 4)`` candidates are measured (default force-included),
+    survivors re-measured and halved until one remains; ``"grid"`` measures
+    every candidate (the pre-section-16 behaviour).  ``runner`` may return
+    a float to be used as the measurement instead of its wall time (see
+    :func:`structural_cost_runner`).
     """
 
     def __init__(
@@ -215,7 +352,11 @@ class Autotuner:
         warmup: int = 1,
         iters: int = 2,
         runner=_default_runner,
+        search: str = "sh",
     ) -> None:
+        if search not in ("sh", "grid"):
+            raise ValueError(f"unknown search {search!r}; want 'sh'|'grid'")
+        self.search = search
         self.cache_path = Path(cache_path) if cache_path else None
         self.candidates = list(candidates)
         if not any(c == SchedulerConfig() for c in self.candidates):
@@ -259,8 +400,11 @@ class Autotuner:
         walls = []
         for _ in range(self.iters):
             t0 = time.perf_counter()
-            self.runner(algorithm, graph, cfg)
-            walls.append(time.perf_counter() - t0)
+            returned = self.runner(algorithm, graph, cfg)
+            wall = time.perf_counter() - t0
+            # a runner may return its own deterministic cost (e.g.
+            # structural_cost_runner); wall time is the default signal
+            walls.append(float(returned) if returned is not None else wall)
         return statistics.median(walls)
 
     @staticmethod
@@ -276,19 +420,66 @@ class Autotuner:
             log.info("autotune cache hit %s -> %s", key, entry["chosen"])
             return _config_from_dict(entry["config"])
 
+        stats = graph_stats(graph)
+        predicted = {_config_key(c): predict_cost(c, stats)
+                     for c in self.candidates}
+        if self.search == "grid":
+            measured = list(self.candidates)
+        else:
+            # cost-model-seeded successive halving: measure only the
+            # predicted-cheapest quarter (floor 2), default force-included
+            budget = max(2, len(self.candidates) // 4)
+            ranked = sorted(self.candidates,
+                            key=lambda c: predicted[_config_key(c)])
+            measured = []
+            for cfg in [SchedulerConfig(), *ranked]:
+                if cfg not in measured:
+                    measured.append(cfg)
+                if len(measured) >= budget:
+                    break
+
+        samples: Dict[str, List[float]] = {_config_key(c): []
+                                           for c in measured}
         trials: Dict[str, float] = {}
-        for cfg in self.candidates:
-            wall = self._measure(algorithm, graph, cfg)
-            trials[_config_key(cfg)] = wall
-            log.info("autotune %s: %s -> %.4fs", key, _config_key(cfg), wall)
-        best = min(self.candidates, key=lambda c: trials[_config_key(c)])
+
+        def _round(survivors: List[SchedulerConfig]) -> None:
+            for cfg in survivors:
+                wall = self._measure(algorithm, graph, cfg)
+                samples[_config_key(cfg)].append(wall)
+                log.info("autotune %s: %s -> %.4fs", key, _config_key(cfg),
+                         wall)
+            trials.update({ck: statistics.median(v)
+                           for ck, v in samples.items() if v})
+
+        if self.search == "grid":
+            _round(measured)
+            best = min(measured, key=lambda c: trials[_config_key(c)])
+        else:
+            survivors = list(measured)
+            if len(survivors) == 1:
+                _round(survivors)
+            while len(survivors) > 1:
+                _round(survivors)
+                survivors = sorted(
+                    survivors,
+                    key=lambda c: trials[_config_key(c)])[:(len(survivors)
+                                                            + 1) // 2]
+            best = survivors[0]
+
         entry = {
+            "schema": AUTOTUNE_SCHEMA,
             "chosen": _config_key(best),
             "config": _config_dict(best),
             "trials": trials,
             "default_wall": trials[_config_key(SchedulerConfig())],
             "calibration_graph": {"n": graph.num_vertices,
                                   "m": graph.num_edges},
+            "search": self.search,
+            "cells_total": len(self.candidates),
+            "cells_measured": len(measured),
+            "cost_model": {"stats": dataclasses.asdict(stats),
+                           "predicted": {ck: predicted[ck]
+                                         for ck in samples}},
         }
         self._cache[key] = entry
         self._save()

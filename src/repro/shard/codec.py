@@ -1,0 +1,306 @@
+"""Delta compression for exchange payloads (DESIGN.md §16).
+
+An exchange hop ships a fixed-shape ``[rows, width]`` int32 send buffer
+whose valid task ints are a per-row prefix padded with the ``EMPTY``
+sentinel (shard/exchange.py).  Task ints are vertex-correlated — a
+destination row holds tasks bound for one vertex block — so sorting a
+row's tasks and shipping first-order deltas packs most batches into 4–16
+bits per int instead of 32.  The wire format (all int32 words):
+
+    word 0          header: bits 0-1 mode (0=RAW, 1/2/3 = packed at
+                    b=4/8/16 bits per delta), bits 2-3 layout (0=counts8,
+                    1=bitmask, 2=counts16), bits 4.. total valid count
+                    ``n``
+    RAW             words 1..rows*width: the buffer verbatim (EMPTY
+                    in-band); n_words = 1 + rows*width
+    PACKED, n == 0  header only; n_words = 1
+    PACKED, n >= 1  layout words  — which slots hold tasks:
+                      counts8:  ceil(rows/4) words, one 8-bit valid count
+                                per row (prefix-compact rows, width<=255)
+                      counts16: ceil(rows/2) words, 16-bit counts — the
+                                wide-buffer form of the same thing (the
+                                exchange compaction always emits prefix-
+                                compact rows, so O(rows) layout overhead
+                                never degrades to O(slots) just because
+                                the route width is large)
+                      bitmask:  ceil(rows*width/32) words, bit j of the
+                                flattened buffer (general scattered
+                                validity — the EMPTY-padding bitmask)
+                    base word     — the stream's first value, raw int32
+                    data words    — the remaining ``n - 1`` deltas of the
+                                    sorted-run stream (each row's valid
+                                    values ascending, rows concatenated),
+                                    zigzag-mapped and bit-packed at ``b``
+                                    bits each (b divides 32: no straddle)
+
+The encoder picks the smallest feasible ``b`` and the cheapest applicable
+layout, and falls back to RAW whenever packing would not be *strictly*
+smaller — an incompressible batch never expands: ``n_words <= 1 +
+rows*width`` always.  Delta and cumsum arithmetic is two's-complement
+int32 (wraparound), and the zigzag map runs on the uint32 bit pattern, so
+the round trip is exact for every int32 value — including the boundary
+values — not just small ones; the zigzag idiom itself is the server wire
+codec's (server/encoding.py).
+
+Decoding reconstructs valid slot positions exactly and each row's value
+*multiset* exactly, delivered in ascending order within the row (the
+sorted-run canonical form).  ``EMPTY`` is the padding sentinel and by
+queue contract never a task value, so decoded tasks never collide with
+it; the layout words — not the in-band sentinel — carry the validity, so
+a PACKED stream is self-describing in exactly ``n_words`` words.
+
+Like ``distributed/compression.py``'s quantized gradient exchange, the
+SPMD collective itself still ships the fixed-shape buffer (XLA has no
+variable-length all_to_all); the codec runs for real in the delivery
+path — what the receiver enqueues is the *decoded* stream — and the
+meters record ``n_words``, the ints a variable-length transport would
+put on the wire.  Compression ratios in BENCH_shard.json are therefore
+measured, not estimated, and honest about per-batch overheads.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.queue import EMPTY
+
+#: packed-delta widths searched by the encoder (each divides 32, so a
+#: delta never straddles a word boundary)
+PACKED_WIDTHS: Tuple[int, ...] = (4, 8, 16)
+
+_MODE_RAW = 0
+_MODE_OF = {4: 1, 8: 2, 16: 3}
+_LAYOUT_COUNTS8 = 0
+_LAYOUT_BITMASK = 1
+_LAYOUT_COUNTS16 = 2
+_LAYOUTS = (_LAYOUT_COUNTS8, _LAYOUT_BITMASK, _LAYOUT_COUNTS16)
+_N_SHIFT = 4
+
+
+def _u32(x):
+    return jax.lax.bitcast_convert_type(jnp.asarray(x, jnp.int32),
+                                        jnp.uint32)
+
+
+def _i32(x):
+    return jax.lax.bitcast_convert_type(jnp.asarray(x, jnp.uint32),
+                                        jnp.int32)
+
+
+def zigzag(v):
+    """Map int32 to uint32 with small-magnitude values small (wraparound-
+    exact for every int32, boundaries included)."""
+    return (_u32(v) << 1) ^ _u32(v >> 31)
+
+
+def unzigzag(z):
+    """Inverse of :func:`zigzag` (uint32 -> int32)."""
+    z = jnp.asarray(z, jnp.uint32)
+    return _i32((z >> 1) ^ (jnp.uint32(0) - (z & 1)))
+
+
+def _counts8_words(rows: int) -> int:
+    return -(-rows // 4)
+
+
+def _counts16_words(rows: int) -> int:
+    return -(-rows // 2)
+
+
+def _mask_words(rows: int, width: int) -> int:
+    return -(-(rows * width) // 32)
+
+
+def _layout_words(layout: int, rows: int, width: int) -> int:
+    if layout == _LAYOUT_COUNTS8:
+        return _counts8_words(rows)
+    if layout == _LAYOUT_COUNTS16:
+        return _counts16_words(rows)
+    return _mask_words(rows, width)
+
+
+def _data_words_max(rows: int, width: int, b: int) -> int:
+    return -(-((rows * width - 1) * b) // 32) if rows * width > 1 else 0
+
+
+def codec_capacity(rows: int, width: int) -> int:
+    """Static word capacity covering every mode's worst case."""
+    f = rows * width
+    raw = 1 + f
+    lw = max(_layout_words(lay, rows, width) for lay in _LAYOUTS)
+    packed = 2 + lw + _data_words_max(rows, width, max(PACKED_WIDTHS))
+    return max(raw, packed)
+
+
+def _sorted_rows(buf, valid):
+    """Each row's valid values ascending in its leading lanes (EMPTY is
+    int32 min, so a plain value sort front-loads the padding; a second
+    stable sort on invalidity restores valid-first order for any input)."""
+    perm1 = jnp.argsort(buf, axis=1, stable=True)
+    sv = jnp.take_along_axis(buf, perm1, axis=1)
+    svalid = jnp.take_along_axis(valid, perm1, axis=1)
+    perm2 = jnp.argsort(~svalid, axis=1, stable=True)
+    return (jnp.take_along_axis(sv, perm2, axis=1),
+            jnp.take_along_axis(svalid, perm2, axis=1))
+
+
+def encode_buffer(buf: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Encode a ``[rows, width]`` int32 buffer (EMPTY = padding).
+
+    Returns ``(words, n_words)``: a ``codec_capacity(rows, width)``-wide
+    int32 word buffer whose first ``n_words`` words are the stream (the
+    rest is zero padding), and the traced metered length.  Pure fixed-
+    shape array ops — safe inside jitted SPMD loops.
+    """
+    rows, width = buf.shape
+    f = rows * width
+    cap = codec_capacity(rows, width)
+    buf = jnp.asarray(buf, jnp.int32)
+    valid = buf != EMPTY
+    k = jnp.sum(valid.astype(jnp.int32), axis=1)           # per-row counts
+    n = jnp.sum(k)
+
+    jidx = jnp.arange(width, dtype=jnp.int32)[None, :]
+    prefix_ok = jnp.all(valid == (jidx < k[:, None]))
+    # cheapest applicable layout: 8-bit counts, then 16-bit counts, then
+    # the general bitmask (scattered validity, or rows wider than 2^16)
+    use_c8 = prefix_ok & (width <= 255)
+    use_c16 = prefix_ok & ~use_c8 & (width <= 65535)
+    layout = jnp.where(use_c8, _LAYOUT_COUNTS8,
+                       jnp.where(use_c16, _LAYOUT_COUNTS16, _LAYOUT_BITMASK))
+
+    # ---- sorted-run stream: row-major concatenation of each row's
+    # ascending valid values
+    sv, svalid = _sorted_rows(buf, valid)
+    off = jnp.cumsum(k) - k                                # exclusive
+    pos = off[:, None] + jidx
+    stream = jnp.zeros((f,), jnp.int32).at[
+        jnp.where(svalid, pos, f).reshape(-1)
+    ].set(jnp.where(svalid, sv, 0).reshape(-1), mode="drop")
+
+    i = jnp.arange(f, dtype=jnp.int32)
+    prev = jnp.concatenate([stream[:1], stream[:-1]])
+    live_d = (i >= 1) & (i < n)                            # delta lanes
+    dz = jnp.where(live_d, zigzag(stream - prev), jnp.uint32(0))
+    max_dz = jnp.max(dz) if f > 1 else jnp.uint32(0)
+
+    # ---- layout words
+    ridx = np.arange(rows)
+    c8w = jnp.zeros((_counts8_words(rows),), jnp.uint32).at[ridx // 4].add(
+        _u32(jnp.minimum(k, 255)) << jnp.asarray(8 * (ridx % 4), jnp.uint32))
+    c16w = jnp.zeros((_counts16_words(rows),), jnp.uint32).at[ridx // 2].add(
+        _u32(jnp.minimum(k, 65535))
+        << jnp.asarray(16 * (ridx % 2), jnp.uint32))
+    fidx = np.arange(f)
+    maskw = jnp.zeros((_mask_words(rows, width),), jnp.uint32).at[
+        fidx // 32].add(valid.reshape(-1).astype(jnp.uint32)
+                        << jnp.asarray(fidx % 32, jnp.uint32))
+    layout_arrays = {_LAYOUT_COUNTS8: c8w, _LAYOUT_BITMASK: maskw,
+                     _LAYOUT_COUNTS16: c16w}
+    lw = jnp.where(use_c8, _counts8_words(rows),
+                   jnp.where(use_c16, _counts16_words(rows),
+                             _mask_words(rows, width)))
+
+    # ---- mode selection: smallest feasible packed width, raw fallback
+    feasible = {b: max_dz < jnp.uint32(1 << b) for b in PACKED_WIDTHS}
+    n_data = {b: (jnp.maximum(n - 1, 0) * b + 31) // 32
+              for b in PACKED_WIDTHS}
+    n_packed = {b: jnp.where(n == 0, 1, 2 + lw + n_data[b])
+                for b in PACKED_WIDTHS}
+    best_b = jnp.int32(0)                                  # 0 = none
+    best_words = jnp.int32(1 + f)                          # raw size
+    for b in reversed(PACKED_WIDTHS):                      # prefer small b
+        take = feasible[b] & (n_packed[b] < 1 + f)
+        best_b = jnp.where(take, b, best_b)
+        best_words = jnp.where(take, n_packed[b], best_words)
+    mode = jnp.int32(0)
+    for b in PACKED_WIDTHS:
+        mode = jnp.where(best_b == b, _MODE_OF[b], mode)
+    n_words = best_words
+
+    # ---- assemble every candidate buffer at static offsets, select one
+    header = (mode | (jnp.where(mode == 0, 0, layout) << 2)
+              | (n << _N_SHIFT))
+    out = jnp.zeros((cap,), jnp.int32).at[0].set(header)
+    raw_out = out.at[1:1 + f].set(buf.reshape(-1))
+
+    def packed_out(lay_flag, b):
+        lwords = layout_arrays[lay_flag]
+        lw_s = _layout_words(lay_flag, rows, width)
+        didx = np.arange(f - 1) if f > 1 else np.arange(0)
+        dataw = jnp.zeros((_data_words_max(rows, width, b),),
+                          jnp.uint32).at[didx * b // 32].add(
+            dz[1:] << jnp.asarray(didx * b % 32, jnp.uint32))
+        o = out.at[1:1 + lw_s].set(_i32(lwords))
+        o = o.at[1 + lw_s].set(stream[0])
+        return o.at[2 + lw_s:2 + lw_s + dataw.shape[0]].set(_i32(dataw))
+
+    res = raw_out
+    for b in PACKED_WIDTHS:
+        for lay in _LAYOUTS:
+            pick = (mode == _MODE_OF[b]) & (layout == lay) & (n > 0)
+            res = jnp.where(pick, packed_out(lay, b), res)
+    # n == 0 packed: header only (the zero-filled template already is)
+    res = jnp.where((mode != 0) & (n == 0), out, res)
+    return res, n_words
+
+
+def decode_buffer(words: jax.Array, rows: int, width: int) -> jax.Array:
+    """Decode an :func:`encode_buffer` stream back to ``[rows, width]``.
+
+    Reads only the stream's own ``n_words`` words (the rest of the word
+    buffer may hold anything).  RAW mode reproduces the buffer verbatim;
+    PACKED modes reproduce exact valid positions with each row's values
+    ascending — the canonical sorted-run form.
+    """
+    f = rows * width
+    words = jnp.asarray(words, jnp.int32)
+    header = words[0]
+    mode = header & 3
+    lay = (header >> 2) & 3
+    n = header >> _N_SHIFT
+
+    raw_dec = words[1:1 + f].reshape(rows, width)
+
+    jidx = jnp.arange(width, dtype=jnp.int32)[None, :]
+    ridx = jnp.arange(rows, dtype=jnp.int32)
+    fidx = jnp.arange(f, dtype=jnp.int32)
+
+    # validity per layout
+    k8 = _i32((_u32(words[1 + ridx // 4])
+               >> _u32(8 * (ridx % 4))) & jnp.uint32(255))
+    k16 = _i32((_u32(words[1 + ridx // 2])
+                >> _u32(16 * (ridx % 2))) & jnp.uint32(65535))
+    maskbits = (_u32(words[1 + fidx // 32]) >> _u32(fidx % 32)) & jnp.uint32(1)
+    valid_of = {
+        _LAYOUT_COUNTS8: jidx < k8[:, None],
+        _LAYOUT_COUNTS16: jidx < k16[:, None],
+        _LAYOUT_BITMASK: (maskbits == 1).reshape(rows, width),
+    }
+
+    def unpacked(lay_flag, b):
+        lw_s = _layout_words(lay_flag, rows, width)
+        valid = valid_of[lay_flag]
+        base = words[1 + lw_s]
+        didx = jnp.arange(max(f - 1, 0), dtype=jnp.int32)
+        dz = (_u32(words[2 + lw_s + didx * b // 32])
+              >> _u32(didx * b % 32)) & jnp.uint32((1 << b) - 1)
+        deltas = jnp.where(didx < n - 1, unzigzag(dz), 0)
+        vals = base + jnp.concatenate(
+            [jnp.zeros((1,), jnp.int32), jnp.cumsum(deltas)])
+        k = jnp.sum(valid.astype(jnp.int32), axis=1)
+        off = jnp.cumsum(k) - k
+        rank = jnp.cumsum(valid.astype(jnp.int32), axis=1) - valid
+        g = off[:, None] + rank
+        return jnp.where(valid & (n > 0),
+                         vals[jnp.clip(g, 0, f - 1)], EMPTY)
+
+    res = raw_dec
+    for b in PACKED_WIDTHS:
+        for lay_flag in _LAYOUTS:
+            pick = (mode == _MODE_OF[b]) & (lay == lay_flag)
+            res = jnp.where(pick, unpacked(lay_flag, b), res)
+    return jnp.asarray(res, jnp.int32)

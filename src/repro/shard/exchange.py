@@ -1,12 +1,37 @@
-"""Routed wavefront delivery: owner-split + all-to-all task exchange.
+"""Routed wavefront delivery: owner-split + per-axis all-to-all exchange.
 
 After a device runs the wavefront body, every produced task is routed to the
 shard that owns its vertex (TREES-style round-synchronous epoch exchange):
 locally-owned tasks go straight into the device's queue replica; remote ones
-are compacted into per-destination send rows and delivered with one
-``lax.all_to_all`` over the ``("shard",)`` mesh axis, landing in the owner's
-queue before the next round.  The EMPTY queue sentinel doubles as the wire
-sentinel — no task encoding ever produces it.
+are compacted into per-destination send rows and shipped by ``lax.all_to_all``.
+On the 1-D ``("shard",)`` mesh that is one ``num_shards``-wide collective; on
+a 2-D ``("row", "col")`` mesh the exchange is dimension-ordered — a column
+hop inside each row (keyed by the owner's column), then a row hop inside each
+column (keyed by the owner's row) — so each collective spans only ``cols``
+(resp. ``rows``) devices instead of all of them (DESIGN.md §16).  The EMPTY
+queue sentinel doubles as the wire sentinel — no task encoding ever produces
+it — and with ``compress=True`` each hop's buffer additionally runs through
+the sorted-run delta codec (shard/codec.py) on its way to the wire.
+
+``route_tasks`` pushes only the *locally owned* tasks itself and hands the
+exchanged arrivals back as a flat EMPTY-padded ``delivered`` buffer: the
+driver either pushes it immediately (strict mode — identical schedule to the
+historical in-function push) or stages it one round (``defer_rounds=1``
+overlap, shard/driver.py).  Alongside it returns a ``meters`` dict:
+
+    sent       distinct tasks shipped off-device (each counted once)
+    rdrop      tasks dropped by a too-narrow ``route_width``
+    sent_col   cross-device payload ints on the column hop (the only hop,
+               for 1-D meshes)
+    sent_row   cross-device payload ints on the row hop (0 on 1-D meshes)
+    payload    valid ints across all hop buffers (a task relayed through
+               both hops is carried twice — it is on the wire twice)
+    padding    EMPTY slots across all hop buffers
+    wire       metered wire ints: ``payload + padding`` raw, or the codec's
+               compressed word count when ``compress=True``
+
+so the obs layer can separate true payload from the padding an EMPTY-padded
+fixed-shape collective ships, per axis.
 
 All functions here run *inside* shard_map (they use ``lax.axis_index`` and
 collectives) and are uniform across devices: every shard executes the same
@@ -14,12 +39,13 @@ exchange every round, so the SPMD while_loop stays in lockstep.
 """
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Dict, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 
 from ..core.queue import EMPTY, MultiQueue
+from .codec import decode_buffer, encode_buffer
 from .partition import owner_of
 
 #: lane of each per-device MultiQueue replica holding owned (seeded, routed,
@@ -30,57 +56,176 @@ LANE_LOCAL = 0
 LANE_STOLEN = 1
 NUM_LANES = 2
 
+AxisName = Union[str, Tuple[str, ...]]
+
+
+def delivered_width(route_width: int, num_shards: int,
+                    mesh_dims: Optional[Tuple[int, int]] = None) -> int:
+    """Static width of the flat ``delivered`` buffer ``route_tasks`` returns
+    (and of the driver's staging buffer in overlap mode).
+
+    1-D: one ``[S, w]`` recv buffer.  2-D ``(R, C)``: the column hop's
+    ``[C, w]`` recv plus the row hop's ``[R, C*w]`` recv — the row hop is
+    ``C*w`` wide because in the worst case every task a device receives on
+    the column hop (up to ``C*w``) must be forwarded to the same row, and
+    that capacity guarantee is what makes hop-2 drops impossible.
+    """
+    if mesh_dims is None:
+        return num_shards * route_width
+    rows, cols = mesh_dims
+    return cols * route_width + rows * (cols * route_width)
+
+
+def _compact_send(items, take, key, nrows: int, width: int):
+    """Scatter taken items into ``[nrows, width]`` destination rows.
+
+    Task i's slot in row ``key[i]`` is the count of earlier taken tasks with
+    the same key (the same exclusive-prefix-sum reservation the queue push
+    uses, one column per destination).  Returns ``(send, n_taken, n_drop)``
+    with each row a rank-compacted EMPTY-padded prefix.
+    """
+    k = items.shape[0]
+    key = jnp.clip(jnp.asarray(key, jnp.int32), 0, nrows - 1)
+    onehot = (key[:, None] == jnp.arange(nrows, dtype=jnp.int32)[None, :]
+              ) & take[:, None]
+    rank = (jnp.cumsum(onehot, axis=0) - onehot)[
+        jnp.arange(k), key].astype(jnp.int32)
+    fits = take & (rank < width)
+    send = jnp.full((nrows, width), EMPTY, jnp.int32).at[
+        jnp.where(fits, key, nrows), rank
+    ].set(jnp.where(fits, items, EMPTY), mode="drop")
+    n_fit = jnp.sum(fits.astype(jnp.int32))
+    n_drop = jnp.sum(take.astype(jnp.int32)) - n_fit
+    return send, n_fit, n_drop
+
+
+def _ship(send, axis_name: str, compress: bool):
+    """One hop: optionally delta-compress, then all_to_all the buffer.
+
+    With ``compress=True`` the buffer is encoded and *decoded back* before
+    the collective — XLA's all_to_all is fixed-shape, so (exactly like the
+    quantized gradient exchange in distributed/compression.py) the physical
+    primitive ships the decoded buffer while the meter records the codec's
+    word count; the codec is load-bearing because what arrives (and is
+    enqueued) is the decoded stream, canonical sorted-run order and all.
+    Returns ``(recv, wire_ints)`` — row ``s`` of recv is what peer ``s``
+    on this axis addressed to me.
+    """
+    nrows, width = send.shape
+    if compress:
+        words, n_words = encode_buffer(send)
+        send = decode_buffer(words, nrows, width)
+        wire = n_words
+    else:
+        wire = jnp.int32(nrows * width)
+    recv = jax.lax.all_to_all(send, axis_name, split_axis=0, concat_axis=0)
+    return recv, wire
+
+
+def _row_payload(send, self_row):
+    """(total valid ints, valid ints in the self-addressed row)."""
+    valid = (send != EMPTY).astype(jnp.int32)
+    return jnp.sum(valid), jnp.sum(valid[self_row])
+
 
 def route_tasks(
     mq: MultiQueue,
     items: jax.Array,
     mask: jax.Array,
     *,
-    axis_name: str,
+    axis_name: AxisName,
     num_shards: int,
     num_vertices: int,
     task_vertex,
     route_width: int | None = None,
     backend: str = "jnp",
-) -> Tuple[MultiQueue, jax.Array, jax.Array]:
-    """Deliver produced tasks to their owners' queue replicas.
+    mesh_dims: Optional[Tuple[int, int]] = None,
+    compress: bool = False,
+) -> Tuple[MultiQueue, jax.Array, Dict[str, jax.Array]]:
+    """Deliver produced tasks toward their owners' queue replicas.
 
-    Returns ``(mq', n_sent, n_route_dropped)`` — tasks shipped off-device
-    and tasks lost because more than ``route_width`` targeted one
-    destination (impossible at the default width = full output width; the
-    counter keeps narrower configurations honest).
+    Locally-owned tasks are pushed here; exchanged arrivals come back as the
+    flat EMPTY-padded ``delivered`` buffer of static width
+    ``delivered_width(route_width, num_shards, mesh_dims)`` for the caller
+    to push (strict) or stage (overlap).  ``meters`` is the wire-accounting
+    dict described in the module docstring.
+
+    ``mesh_dims=None`` routes over the single ``axis_name`` collective (the
+    1-D ring exchange, unchanged); ``mesh_dims=(rows, cols)`` with
+    ``axis_name=(row_axis, col_axis)`` routes dimension-ordered over the
+    2-D mesh.  ``route_width`` bounds tasks per destination on the *first*
+    hop; the second hop is capacity-safe by construction.
     """
     k = items.shape[0]
-    route_width = k if route_width is None else route_width
-    me = jax.lax.axis_index(axis_name)
+    w1 = k if route_width is None else route_width
+
+    if mesh_dims is None:
+        axis = axis_name if isinstance(axis_name, str) else axis_name[0]
+        me = jax.lax.axis_index(axis)
+        verts = task_vertex(jnp.where(mask, items, 0))
+        dest = owner_of(verts, num_vertices, num_shards)
+
+        mq = mq.push(LANE_LOCAL, items, mask & (dest == me), backend=backend)
+        send, n_sent, n_drop = _compact_send(
+            items, mask & (dest != me), dest, num_shards, w1)
+        payload, _self = _row_payload(send, me)
+        recv, wire = _ship(send, axis, compress)
+        delivered = recv.reshape(-1)
+        meters = {
+            "sent": n_sent,
+            "rdrop": n_drop,
+            "sent_col": payload - _self,
+            "sent_row": jnp.int32(0),
+            "payload": payload,
+            "padding": jnp.int32(num_shards * w1) - payload,
+            "wire": wire,
+        }
+        return mq, delivered, meters
+
+    rows, cols = mesh_dims
+    row_axis, col_axis = axis_name
+    me_r = jax.lax.axis_index(row_axis)
+    me_c = jax.lax.axis_index(col_axis)
+    me = me_r * cols + me_c
     verts = task_vertex(jnp.where(mask, items, 0))
     dest = owner_of(verts, num_vertices, num_shards)
 
-    local = mask & (dest == me)
-    mq = mq.push(LANE_LOCAL, items, local, backend=backend)
+    mq = mq.push(LANE_LOCAL, items, mask & (dest == me), backend=backend)
 
-    remote = mask & (dest != me)
-    # per-destination compaction: task i's slot in its destination row is
-    # the count of earlier remote tasks with the same destination (the same
-    # exclusive-prefix-sum reservation the queue push uses, one column per
-    # destination shard).
-    onehot = (dest[:, None] == jnp.arange(num_shards, dtype=jnp.int32)[None, :]
-              ) & remote[:, None]
-    rank = (jnp.cumsum(onehot, axis=0) - onehot)[
-        jnp.arange(k), dest].astype(jnp.int32)
-    sent = remote & (rank < route_width)
-    send = jnp.full((num_shards, route_width), EMPTY, jnp.int32).at[
-        jnp.where(sent, dest, num_shards), rank
-    ].set(jnp.where(sent, items, EMPTY), mode="drop")
+    # hop 1 — column hop inside my row: every remote task moves to the
+    # device in my row that sits in the owner's column (tasks already in
+    # the right column ride the collective's self lane at zero wire cost).
+    send1, n_sent, drop1 = _compact_send(
+        items, mask & (dest != me), dest % cols, cols, w1)
+    payload1, self1 = _row_payload(send1, me_c)
+    recv1, wire1 = _ship(send1, col_axis, compress)
 
-    # row s of recv = what shard s addressed to me this round
-    recv = jax.lax.all_to_all(send, axis_name, split_axis=0, concat_axis=0)
-    flat = recv.reshape(-1)
-    mq = mq.push(LANE_LOCAL, flat, flat != EMPTY, backend=backend)
+    # hop 2 — row hop inside the owner's column: arrivals whose owner row
+    # is mine are delivered; the rest forward to the owner's row.  Width
+    # cols*w1 holds every hop-1 arrival, so nothing can drop here.
+    flat1 = recv1.reshape(-1)
+    v1 = flat1 != EMPTY
+    dest1 = owner_of(task_vertex(jnp.where(v1, flat1, 0)),
+                     num_vertices, num_shards)
+    mine1 = v1 & (dest1 // cols == me_r)
+    send2, _, drop2 = _compact_send(
+        flat1, v1 & ~mine1, dest1 // cols, rows, cols * w1)
+    payload2, self2 = _row_payload(send2, me_r)
+    recv2, wire2 = _ship(send2, row_axis, compress)
 
-    n_sent = jnp.sum(sent.astype(jnp.int32))
-    n_dropped = jnp.sum(remote.astype(jnp.int32)) - n_sent
-    return mq, n_sent, n_dropped
+    delivered = jnp.concatenate(
+        [jnp.where(mine1, flat1, EMPTY), recv2.reshape(-1)])
+    slots = jnp.int32(cols * w1 + rows * cols * w1)
+    meters = {
+        "sent": n_sent,
+        "rdrop": drop1 + drop2,
+        "sent_col": payload1 - self1,
+        "sent_row": payload2 - self2,
+        "payload": payload1 + payload2,
+        "padding": slots - payload1 - payload2,
+        "wire": wire1 + wire2,
+    }
+    return mq, delivered, meters
 
 
 def pop_wavefront(mq: MultiQueue, wavefront: int):

@@ -48,6 +48,23 @@ def block_bounds(shard: int, n: int, num_shards: int) -> Tuple[int, int]:
     return min(n, shard * b), min(n, (shard + 1) * b)
 
 
+def owner_coords(vids, n: int, rows: int, cols: int):
+    """2-D mesh coordinates ``(row, col)`` of each vertex's owner.
+
+    Ownership on the 2-D mesh is the *same* linear vertex-block split as
+    the 1-D ring (``owner_of`` with ``num_shards = rows * cols``) mapped
+    row-major onto the mesh: linear shard ``d`` sits at ``(d // cols,
+    d % cols)`` — exactly the order jax linearizes ``("row", "col")``
+    tuple-axis collectives in, so partitioning, steal halos (linear ring
+    predecessor), and the replica merge are untouched by the mesh shape.
+    The per-axis exchange (shard/exchange.py) routes dimension-ordered:
+    first to the owner's column (a ``cols``-wide all_to_all inside the
+    row), then to its row (a ``rows``-wide all_to_all inside the column).
+    """
+    d = owner_of(vids, n, rows * cols)
+    return d // cols, d % cols
+
+
 @dataclasses.dataclass(frozen=True)
 class ShardedCSR:
     """Per-device CSR slices, stacked for shard_map.

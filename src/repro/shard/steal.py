@@ -55,7 +55,7 @@ def plan_donations(sizes: jax.Array, threshold: float,
 def rebalance(
     mq: MultiQueue,
     *,
-    axis_name: str,
+    axis_name,
     num_shards: int,
     threshold: float,
     chunk: int,
@@ -74,6 +74,12 @@ def rebalance(
     the donation plan moves *work* rather than slots, and the quota'd pop
     donates whole chunks only — a chunk is never split in flight, so the
     thief's halo expansion and the ownership meter stay exact.
+
+    ``axis_name`` is the mesh axis (or axis tuple: on the 2-D
+    ``("row", "col")`` mesh the gather, index, and ppermute all run over
+    the linearized row-major device order, which is exactly the linear
+    shard-id order ownership and halos are defined in — the steal ring is
+    mesh-shape independent).
     """
     loads = mq.lane_loads(width_of)
     my_size = loads[LANE_LOCAL] + loads[LANE_STOLEN]

@@ -1,0 +1,202 @@
+"""Property tests for the exchange wire codec (shard/codec.py, §16).
+
+The codec is the lossy-looking-but-lossless half of the compressed
+exchange: a route buffer is a *set* of tasks per destination row, so the
+canonical decode — the same valid slots, each row's values sorted
+ascending — carries exactly the information the receiving queue consumes.
+Five properties pin the format:
+
+  1. round-trip at every granularity width (valid mask + per-row multiset
+     preserved; packed rows come back sorted),
+  2. EMPTY-sentinel collision safety (values adjacent to the int32-min
+     sentinel survive; padding never turns into a value),
+  3. zigzag boundary behaviour (bijective on all of int32, including the
+     wraparound deltas between extreme values),
+  4. the raw fallback never expands (n_words <= 1 + rows*width, always),
+  5. self-containedness (words beyond n_words are dead — zeroing them
+     cannot change the decode).
+
+Runs under Hypothesis when the library is installed; this container ships
+without it, so the same properties also run over a seeded deterministic
+fuzz corpus (the ``_cases`` generator) that covers the regimes Hypothesis
+would shrink toward: every packed bit width, both count layouts + bitmask,
+scattered vs prefix-compacted validity, int32 boundary values, all-EMPTY
+and single-value buffers, and incompressible noise.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.queue import EMPTY
+from repro.shard.codec import (PACKED_WIDTHS, codec_capacity, decode_buffer,
+                               encode_buffer, unzigzag, zigzag)
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:      # container has no hypothesis; seeded corpus below
+    HAVE_HYPOTHESIS = False
+
+E = int(EMPTY)
+I32_MIN, I32_MAX = -2**31, 2**31 - 1
+
+#: (rows, width) shapes spanning every layout's win region: narrow rows
+#: (counts8), wide prefix-compact rows (counts16), scattered (bitmask).
+SHAPES = [(1, 1), (1, 4), (2, 3), (4, 8), (8, 16), (3, 33), (2, 300),
+          (4, 1024)]
+
+
+def _roundtrip(buf: np.ndarray):
+    """Encode, zero the dead tail, decode; return (decoded, mode, n_words)."""
+    rows, width = buf.shape
+    words, n_words = encode_buffer(jnp.asarray(buf, jnp.int32))
+    n_words = int(n_words)
+    # property 4: the raw fallback bounds every encoding
+    assert n_words <= 1 + rows * width
+    assert words.shape[0] == codec_capacity(rows, width)
+    # property 5: the encoding is self-contained in its first n_words
+    words = jnp.where(jnp.arange(words.shape[0]) < n_words, words, 0)
+    dec = np.asarray(decode_buffer(words, rows, width))
+    return dec, int(words[0]) & 3, n_words
+
+
+def _check(buf: np.ndarray) -> None:
+    """Properties 1+2 on one buffer: mask preserved, multiset preserved,
+    packed rows sorted, no EMPTY slot ever becomes a value."""
+    dec, mode, _ = _roundtrip(buf)
+    if mode == 0:      # RAW reproduces the buffer verbatim
+        assert (dec == buf).all()
+        return
+    for r in range(buf.shape[0]):
+        ref_valid = buf[r] != E
+        assert (ref_valid == (dec[r] != E)).all()
+        vals = dec[r][ref_valid]
+        assert (np.sort(buf[r][ref_valid]) == vals).all()
+
+
+def _cases(seed: int = 0, n: int = 120):
+    """Deterministic fuzz corpus over SHAPES x value regimes."""
+    rng = np.random.default_rng(seed)
+    for i in range(n):
+        rows, width = SHAPES[i % len(SHAPES)]
+        buf = np.full((rows, width), E, np.int64)
+        regime = i % 5
+        for r in range(rows):
+            k = int(rng.integers(0, width + 1))
+            if regime == 0:      # small local values (delta-friendly)
+                vals = rng.integers(0, 512, k)
+            elif regime == 1:    # full int32 range (raw fallback territory)
+                vals = rng.integers(I32_MIN + 1, I32_MAX, k)
+            elif regime == 2:    # sentinel-adjacent values
+                vals = rng.choice([I32_MIN + 1, I32_MIN + 2, I32_MAX - 1,
+                                   I32_MAX, 0, -1, 1], size=k)
+            elif regime == 3:    # constant runs (best case: all-zero deltas)
+                vals = np.full(k, int(rng.integers(-100, 100)))
+            else:                # mixed magnitudes
+                vals = rng.integers(-2**16, 2**16, k)
+            if rng.random() < 0.5:     # prefix-compacted (counts layouts)
+                buf[r, :k] = vals
+            else:                      # scattered validity (bitmask layout)
+                pos = rng.choice(width, size=k, replace=False)
+                buf[r, pos] = vals
+        yield buf.astype(np.int32)
+
+
+# ------------------------------------------------------------ properties
+def test_roundtrip_every_granularity_width():
+    """Property 1 over the deterministic corpus: every shape in SHAPES is
+    visited across every value regime."""
+    for buf in _cases(seed=1):
+        _check(buf)
+
+
+@pytest.mark.parametrize("width", [1, 2, 3, 4, 7, 8, 16, 33])
+def test_roundtrip_dense_rows_each_width(width):
+    """Property 1, dense rows: a full buffer (no padding at all) at every
+    chunk-granularity width the task layer can produce."""
+    rng = np.random.default_rng(width)
+    buf = rng.integers(0, 10_000, (4, width)).astype(np.int32)
+    _check(buf)
+
+
+def test_empty_sentinel_collision_safety():
+    """Property 2: values one off the EMPTY sentinel round-trip, an
+    all-EMPTY buffer encodes to the header alone, and padding positions
+    never decode into values."""
+    buf = np.full((4, 8), E, np.int32)
+    buf[0, :3] = [I32_MIN + 1, I32_MIN + 2, I32_MAX]
+    buf[2, 5] = I32_MIN + 1
+    _check(buf)
+
+    empty = np.full((4, 8), E, np.int32)
+    dec, _, n_words = _roundtrip(empty)
+    assert n_words == 1 and (dec == E).all()
+
+
+def test_zigzag_boundary_values():
+    """Property 3: zigzag is a bijection on int32, including both extremes
+    and the wraparound deltas between them."""
+    vals = jnp.asarray([0, -1, 1, -2, 2, I32_MAX, I32_MIN, I32_MIN + 1],
+                       jnp.int32)
+    assert (np.asarray(unzigzag(zigzag(vals))) == np.asarray(vals)).all()
+    # small magnitudes map to small codes — the property packing relies on
+    assert int(zigzag(jnp.int32(0))) == 0
+    assert int(zigzag(jnp.int32(-1))) == 1
+    assert int(zigzag(jnp.int32(1))) == 2
+    # the extreme wraparound delta (MAX - MIN == -1 mod 2^32) stays coherent
+    d = jnp.asarray(np.int32(np.int64(I32_MAX - I32_MIN) & 0xFFFFFFFF))
+    assert int(unzigzag(zigzag(d))) == int(d)
+
+
+def test_raw_fallback_never_expands():
+    """Property 4: adversarially incompressible buffers (full-range noise,
+    scattered) cost at most the raw 1 + rows*width words."""
+    rng = np.random.default_rng(9)
+    for rows, width in SHAPES:
+        buf = rng.integers(I32_MIN + 1, I32_MAX, (rows, width))
+        buf = buf.astype(np.int32)
+        _check(buf)
+
+
+def test_compressible_buffer_beats_raw():
+    """The reason the codec exists: a sparse prefix-compacted buffer of
+    local values costs far fewer words than its slot count."""
+    buf = np.full((4, 1024), E, np.int32)
+    buf[0, :7] = np.sort(np.arange(7) * 3)
+    buf[2, :5] = np.sort(64 + np.arange(5))
+    _, mode, n_words = _roundtrip(buf)
+    assert mode != 0
+    assert n_words < 12 + 1          # payload ints + header, not 4096 slots
+
+
+def test_single_value_and_tiny_shapes():
+    """Degenerate shapes: one slot, one row, one value."""
+    for buf in ([[5]], [[E]], [[E, 7]], [[7], [E]]):
+        _check(np.asarray(buf, np.int32))
+
+
+# ----------------------------------------------- hypothesis twin (gated)
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=200, deadline=None)
+    @given(st.data())
+    def test_hypothesis_roundtrip(data):
+        rows = data.draw(st.integers(1, 6))
+        width = data.draw(st.sampled_from([1, 2, 4, 8, 16, 33, 300]))
+        buf = np.full((rows, width), E, np.int64)
+        for r in range(rows):
+            k = data.draw(st.integers(0, width))
+            vals = data.draw(st.lists(
+                st.integers(I32_MIN + 1, I32_MAX), min_size=k, max_size=k))
+            pos = data.draw(st.permutations(range(width)))[:k]
+            buf[r, list(pos)] = vals
+        _check(buf.astype(np.int32))
+
+    @settings(max_examples=100, deadline=None)
+    @given(st.integers(I32_MIN, I32_MAX))
+    def test_hypothesis_zigzag_bijection(v):
+        x = jnp.int32(v)
+        assert int(unzigzag(zigzag(x))) == v

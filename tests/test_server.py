@@ -478,3 +478,83 @@ def test_kernel_cache_shared_across_sources(registry):
     s1, _ = p1.init()
     s2, _ = p2.init()
     assert int(s1.dist[1]) == 0 and int(s2.dist[2]) == 0  # distinct states
+
+
+def test_autotuner_sh_matches_grid_on_quarter_budget(registry, tmp_path):
+    """The section-16 search: cost-model-seeded successive halving over the
+    full 56-cell DEFAULT_CANDIDATES grid must reproduce the exhaustive
+    grid's winner while measuring at most a quarter of the cells, under the
+    deterministic structural runner on both graph regimes."""
+    from repro.server import (AUTOTUNE_SCHEMA, DEFAULT_CANDIDATES,
+                              structural_cost_runner)
+
+    for gname in ("grid", "rmat"):
+        g = registry.graph(gname)
+        grid_pick = Autotuner(
+            cache_path=tmp_path / f"{gname}_grid.json", warmup=0, iters=1,
+            runner=structural_cost_runner, search="grid").tune("bfs", g)
+        sh = Autotuner(
+            cache_path=tmp_path / f"{gname}_sh.json", warmup=0, iters=1,
+            runner=structural_cost_runner, search="sh")
+        assert sh.tune("bfs", g) == grid_pick
+
+        entry = json.loads(
+            (tmp_path / f"{gname}_sh.json").read_text())[f"bfs|{graph_class(g)}"]
+        assert entry["schema"] == AUTOTUNE_SCHEMA
+        assert entry["search"] == "sh"
+        assert entry["cells_total"] == len(DEFAULT_CANDIDATES)
+        assert entry["cells_measured"] <= entry["cells_total"] // 4
+        # cost-model provenance rides the cache: the features that seeded
+        # the halving and the predicted score of every measured cell
+        stats = entry["cost_model"]["stats"]
+        for feat in ("num_vertices", "num_edges", "avg_degree", "degree_cv",
+                     "frontier_growth", "diameter_proxy"):
+            assert feat in stats
+        assert set(entry["cost_model"]["predicted"]) == set(entry["trials"])
+        # the default is always among the measured cells
+        assert "default_wall" in entry
+
+
+def test_autotuner_grid_search_still_measures_everything(registry, tmp_path):
+    """search="grid" preserves the exhaustive pre-section-16 behaviour:
+    every candidate appears in the trials."""
+    candidates = [SchedulerConfig(), SchedulerConfig(num_workers=16),
+                  SchedulerConfig(num_workers=16, persistent=False)]
+    tuner = Autotuner(cache_path=tmp_path / "t.json", candidates=candidates,
+                      warmup=0, iters=1, runner=lambda *a: 1.0,
+                      search="grid")
+    tuner.tune("bfs", registry.graph("grid"))
+    entry = json.loads((tmp_path / "t.json").read_text())["bfs|mesh"]
+    assert len(entry["trials"]) == len(candidates)
+    assert entry["cells_measured"] == entry["cells_total"] == len(candidates)
+
+
+def test_pr5_era_grid_cache_fixture_still_loads(registry, tmp_path):
+    """Schema regression: the checked-in six-axis grid-era cache (no
+    "schema" field, no kernel axis, no cost-model block) must keep
+    loading — cache hits return the stored config without re-measuring,
+    and the mix recommendation still aggregates its trials."""
+    import shutil
+    from pathlib import Path
+
+    fixture = Path(__file__).parent / "data" / "autotune_cache_pr5.json"
+    cache = tmp_path / "tune.json"
+    shutil.copy(fixture, cache)
+
+    def exploding_runner(*a):
+        raise AssertionError("legacy cache hit must not re-measure")
+
+    tuner = Autotuner(cache_path=cache, warmup=0, iters=1,
+                      runner=exploding_runner)
+    cfg = tuner.tune("bfs", registry.graph("grid"))
+    assert cfg == SchedulerConfig(num_workers=64, fetch_size=4,
+                                  backend="pallas", topology="fused",
+                                  granularity=4)
+    assert tuner.tune("coloring", registry.graph("grid")).backend == "jnp"
+
+    mix = tuner.recommend_for_mix([("bfs", registry.graph("grid")),
+                                   ("coloring", registry.graph("grid"))])
+    # summed legacy trials: the pallas fused granularity-4 cell wins
+    assert mix == SchedulerConfig(num_workers=64, fetch_size=4,
+                                  backend="pallas", topology="fused",
+                                  granularity=4)
