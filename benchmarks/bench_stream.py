@@ -14,6 +14,15 @@ batches** for every algorithm (coloring's conflict-repair rule is the
 dramatic case: it re-colors only the losing endpoints of newly conflicted
 edges).
 
+Every run commits its deltas through the slotted-CSR path
+(``graph/slotted``, ``--compact-every`` = :data:`COMPACT_EVERY` here), so
+the per-batch rows also carry the O(delta) commit-cost columns — rows
+touched by the commit, overlay occupancy after it, whether it compacted —
+and each mode totals its commit wall seconds / touched rows / compactions.
+The ``findings`` block asserts the tentpole property as data: **every
+commit touches strictly fewer rows than the graph has edges** (the old
+path rebuilt all m edges per batch).
+
 Also recorded:
 
   * ``sharded_bfs`` — the same streamed BFS over the 8-device mesh,
@@ -51,6 +60,7 @@ BATCH_SIZE = 16     # edge ops per batch (small deltas — the target regime)
 WORKERS = 32
 PR_EPS = 1e-4
 SNAP_EVERY = 2      # rounds between mid-drain snapshots (overhead section)
+COMPACT_EVERY = 2   # slotted-CSR re-pack cadence (taskserver --compact-every)
 ALGOS = (("bfs", {"source": 0}), ("pagerank", {"eps": PR_EPS}),
          ("coloring", {}))
 
@@ -78,16 +88,21 @@ def _child() -> None:
 
     def batch_rows(res):
         return [{"rounds": r.rounds, "work": r.work, "seeds": r.seeds,
-                 "eff": r.effective_ops} for r in res.batches]
+                 "eff": r.effective_ops, "touched": r.touched_rows,
+                 "overlay": r.overlay, "compacted": r.compacted}
+                for r in res.batches]
 
+    m = base.num_edges
     for algo, params in ALGOS:
         entry: dict = {}
         for mode, incr in (("incremental", True), ("full", False)):
             t0 = time.perf_counter()
             res = stream_execute(algo, base, deltas, cfg,
-                                 params=dict(params), incremental=incr)
+                                 params=dict(params), incremental=incr,
+                                 compact_every=COMPACT_EVERY)
             wall = time.perf_counter() - t0
             assert res.info["dropped"] == 0, (algo, mode)
+            assert all(r.touched_rows < m for r in res.batches), (algo, mode)
             entry[mode] = {
                 "per_batch": batch_rows(res),
                 # delta-batch totals only: batch 0 (the cold drain on the
@@ -95,6 +110,11 @@ def _child() -> None:
                 "total_rounds": sum(r.rounds for r in res.batches[1:]),
                 "total_work": sum(r.work for r in res.batches[1:]),
                 "wall_seconds": wall,
+                # O(delta) commit cost (apply + patch wall, rows touched,
+                # slotted re-packs) — the tentpole meters
+                "commit_seconds": res.info["commit_seconds"],
+                "touched_rows": res.info["touched_rows"],
+                "compactions": res.info["compactions"],
             }
         iw = entry["incremental"]["total_work"]
         fw = entry["full"]["total_work"]
@@ -106,9 +126,11 @@ def _child() -> None:
     scfg = SchedulerConfig(num_workers=WORKERS, topology="sharded",
                            num_shards=8, persistent=False)
     t0 = time.perf_counter()
-    sres = stream_execute("bfs", base, deltas, scfg, params={"source": 0})
+    sres = stream_execute("bfs", base, deltas, scfg, params={"source": 0},
+                          compact_every=COMPACT_EVERY)
     swall = time.perf_counter() - t0
-    ref = stream_execute("bfs", base, deltas, cfg, params={"source": 0})
+    ref = stream_execute("bfs", base, deltas, cfg, params={"source": 0},
+                         compact_every=COMPACT_EVERY)
     parity = bool((np.asarray(sres.result) == np.asarray(ref.result)).all())
     assert parity and sres.info["dropped"] == 0
     payload["sharded_bfs"] = {
@@ -126,13 +148,15 @@ def _child() -> None:
         snap_res = stream_execute("bfs", base, deltas, cfg,
                                   params={"source": 0},
                                   snapshot_every=SNAP_EVERY,
-                                  checkpoint_dir=d, keep=1000)
+                                  checkpoint_dir=d, keep=1000,
+                                  compact_every=COMPACT_EVERY)
         snap_wall = time.perf_counter() - t0
         ticks = len([p for p in os.listdir(d) if p.startswith("snap_")])
         t0 = time.perf_counter()
         stream_execute("bfs", base, deltas, cfg, params={"source": 0},
                        snapshot_every=SNAP_EVERY, checkpoint_dir=d,
-                       keep=1000, resume=True)
+                       keep=1000, resume=True,
+                       compact_every=COMPACT_EVERY)
         resume_wall = time.perf_counter() - t0
         assert (np.asarray(snap_res.result)
                 == np.asarray(ref.result)).all()
@@ -149,6 +173,13 @@ def _child() -> None:
         "incremental_below_full": {
             a: payload["algorithms"][a]["incremental"]["total_work"]
             < payload["algorithms"][a]["full"]["total_work"]
+            for a, _ in ALGOS},
+        # O(delta) commits: every batch's slab-touched row count stays
+        # strictly below m (= full-rebuild cost in rows)
+        "commit_touched_below_m": {
+            a: all(r["touched"] < m
+                   for mode in ("incremental", "full")
+                   for r in payload["algorithms"][a][mode]["per_batch"])
             for a, _ in ALGOS},
     }
     print(json.dumps(payload))
@@ -175,6 +206,9 @@ def run(out: str = OUT):
             f"inc_rounds={inc['total_rounds']} "
             f"full_rounds={full['total_rounds']} "
             f"ratio={entry['savings']['work_ratio']:.3f}")
+        row(f"stream/{algo}/commit", inc["commit_seconds"] * 1e6,
+            f"touched={inc['touched_rows']} "
+            f"compactions={inc['compactions']}")
     s = payload["sharded_bfs"]
     row("stream/bfs_shard", s["wall_seconds"] * 1e6,
         f"rounds={s['rounds']} work={s['work']} "

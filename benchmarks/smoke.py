@@ -73,7 +73,10 @@ _GRAN_FIELDS = {
     "bfs_shard": ("rounds", "exchanged_total", "splits"),
 }
 #: schedule-deterministic fields of each streaming per-batch record
-_STREAM_FIELDS = ("rounds", "work", "seeds", "eff")
+#: (touched/overlay/compacted meter the slotted O(delta) commit path —
+#: pure functions of the delta log + COMPACT_EVERY, so guarded too)
+_STREAM_FIELDS = ("rounds", "work", "seeds", "eff", "touched", "overlay",
+                  "compacted")
 _STREAM_SHARD_FIELDS = ("rounds", "work", "exchanged", "parity")
 #: schedule-deterministic fields of each (algorithm x kernel) cell —
 #: launches is the megakernel's headline invariant (1 per drain)
@@ -259,8 +262,9 @@ def _recompute_stream() -> dict:
     Imports the stream constants from bench_stream so the guard can never
     drift from the configs that produced the baseline.
     """
-    from .bench_stream import (ALGOS, BATCH_SIZE, BATCHES, EDGE_FACTOR,
-                               GRAPH_SEED, SCALE, STREAM_SEED, WORKERS)
+    from .bench_stream import (ALGOS, BATCH_SIZE, BATCHES, COMPACT_EVERY,
+                               EDGE_FACTOR, GRAPH_SEED, SCALE, STREAM_SEED,
+                               WORKERS)
 
     body = f"""
 import os
@@ -277,20 +281,25 @@ deltas = edge_delta_stream(base, {BATCHES}, {BATCH_SIZE},
                            seed={STREAM_SEED})
 cfg = SchedulerConfig(num_workers={WORKERS}, topology='single',
                       persistent=False)
-out = {{'algorithms': {{}}}}
+out = {{'algorithms': {{}}, 'm': base.num_edges}}
 for algo, params in {list(ALGOS)!r}:
     entry = {{}}
     for mode, incr in (('incremental', True), ('full', False)):
         res = stream_execute(algo, base, deltas, cfg, params=dict(params),
-                             incremental=incr)
+                             incremental=incr,
+                             compact_every={COMPACT_EVERY})
         entry[mode] = [{{'rounds': r.rounds, 'work': r.work,
-                         'seeds': r.seeds, 'eff': r.effective_ops}}
+                         'seeds': r.seeds, 'eff': r.effective_ops,
+                         'touched': r.touched_rows, 'overlay': r.overlay,
+                         'compacted': r.compacted}}
                        for r in res.batches]
     out['algorithms'][algo] = entry
 scfg = SchedulerConfig(num_workers={WORKERS}, topology='sharded',
                        num_shards=8, persistent=False)
-sres = stream_execute('bfs', base, deltas, scfg, params={{'source': 0}})
-ref = stream_execute('bfs', base, deltas, cfg, params={{'source': 0}})
+sres = stream_execute('bfs', base, deltas, scfg, params={{'source': 0}},
+                      compact_every={COMPACT_EVERY})
+ref = stream_execute('bfs', base, deltas, cfg, params={{'source': 0}},
+                     compact_every={COMPACT_EVERY})
 out['sharded_bfs'] = {{
     'rounds': sres.info['rounds'], 'work': sres.info['work'],
     'exchanged': sres.info['exchanged'],
@@ -512,6 +521,7 @@ def run() -> int:
 
     stream_base = json.loads(STREAM_JSON.read_text())
     stream_fresh = _recompute_stream()
+    stream_m = stream_fresh["m"]
     for algo, entry in stream_base["algorithms"].items():
         for mode in ("incremental", "full"):
             want_rows = entry[mode]["per_batch"]
@@ -520,6 +530,10 @@ def run() -> int:
                 for field in _STREAM_FIELDS:
                     check(f"stream/{algo}/{mode}/batch{i}/{field}",
                           want[field], got[field])
+                # O(delta) commit guard: a commit rewriting >= m rows
+                # means the slotted path degraded to a full rebuild
+                check(f"stream/{algo}/{mode}/batch{i}/touched<m",
+                      True, got["touched"] < stream_m)
     for field in _STREAM_SHARD_FIELDS:
         check(f"stream/sharded_bfs/{field}",
               stream_base["sharded_bfs"][field],

@@ -23,8 +23,8 @@ import jax
 import jax.numpy as jnp
 
 from ..core import (ChunkCodec, SchedulerConfig, WorkCounter, chunk_degrees,
-                    chunk_seeds, coalesce_chunks, expand_merge_path,
-                    expand_per_item, flatten_chunks)
+                    adjacency_of, chunk_seeds, coalesce_chunks,
+                    expand_merge_path, expand_per_item, flatten_chunks)
 from ..graph.csr import CSRGraph
 from ..runtime.program import AtosProgram, ProgramContext
 from ..runtime.programs import reject_unknown_params
@@ -123,13 +123,16 @@ def make_wavefront_fn(graph: CSRGraph, strategy: str, work_budget: int,
     g = codec.granularity
     form_rp = graph.row_ptr if formation_row_ptr is None else formation_row_ptr
 
+    rp, cols, overlay = adjacency_of(graph)
+
     def f(items, valid, state: BFSState):
         safe = jnp.where(valid, items, 0)
         heads, widths = codec.decode(safe)
         if strategy == "merge_path":      # CTA worker: task+data-parallel LB
-            ex = expand_merge_path(heads, valid, graph.row_ptr, graph.col_idx,
+            ex = expand_merge_path(heads, valid, rp, cols,
                                    work_budget, backend=backend,
-                                   widths=widths, max_width=g)
+                                   widths=widths, max_width=g,
+                                   overlay=overlay)
             # chunks whose rows spill past the work budget are re-queued
             # whole (progress is guaranteed: budget >= max_degree >= any
             # formed chunk's degree-sum, so the first popped task always
@@ -139,8 +142,8 @@ def make_wavefront_fn(graph: CSRGraph, strategy: str, work_budget: int,
             truncated = valid & (excl + deg > work_budget)
         else:                             # warp worker: task-parallel only
             flat_v, flat_valid, _ = flatten_chunks(heads, widths, valid, g)
-            ex = expand_per_item(flat_v, flat_valid, graph.row_ptr,
-                                 graph.col_idx, max_degree)
+            ex = expand_per_item(flat_v, flat_valid, rp, cols, max_degree,
+                                 overlay=overlay)
             truncated = jnp.zeros_like(valid)
         # edges owned by truncated chunks are excluded entirely: the chunk
         # is re-queued whole and will relax+push on re-expansion (if we

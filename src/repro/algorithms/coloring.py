@@ -30,8 +30,9 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-from ..core import (ChunkCodec, SchedulerConfig, WorkCounter, chunk_seeds,
-                    coalesce_chunks, flatten_chunks)
+from ..core import (ChunkCodec, SchedulerConfig, WorkCounter, adjacency_of,
+                    chunk_seeds, coalesce_chunks, flatten_chunks,
+                    gather_neighbors)
 from ..graph.csr import CSRGraph
 from ..runtime.program import AtosProgram, ProgramContext
 from ..runtime.programs import reject_unknown_params
@@ -47,12 +48,15 @@ class ColorState:
 
 def _gather_neighbor_colors(graph, vids, valid, max_degree):
     """[w, max_degree] neighbor colors, -1 padded."""
+    rp, cols, overlay = adjacency_of(graph)
     safe = jnp.where(valid, vids, 0)
-    deg = jnp.where(valid, graph.row_ptr[safe + 1] - graph.row_ptr[safe], 0)
+    deg = jnp.where(valid, rp[safe + 1] - rp[safe], 0)
     j = jnp.arange(max_degree, dtype=jnp.int32)
-    edge = graph.row_ptr[safe][:, None] + j[None, :]
+    edge = rp[safe][:, None] + j[None, :]
     in_row = j[None, :] < deg[:, None]
-    nbr = graph.col_idx[jnp.clip(edge, 0, graph.num_edges - 1)]
+    nbr = gather_neighbors(rp, cols,
+                           jnp.broadcast_to(safe[:, None], edge.shape),
+                           edge, overlay=overlay)
     return nbr, in_row
 
 

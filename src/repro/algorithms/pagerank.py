@@ -27,9 +27,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core import (ChunkCodec, SchedulerConfig, WorkCounter, chunk_degrees,
-                    chunk_seeds, coalesce_chunks, expand_merge_path,
-                    flatten_chunks)
+from ..core import (ChunkCodec, SchedulerConfig, WorkCounter, adjacency_of,
+                    chunk_degrees, chunk_seeds, coalesce_chunks,
+                    expand_merge_path, flatten_chunks)
 from ..graph.csr import CSRGraph
 from ..runtime.program import AtosProgram, ProgramContext
 from ..runtime.programs import reject_unknown_params
@@ -108,9 +108,10 @@ def _push_wavefront(graph: CSRGraph, damping: float, work_budget: int,
         ].set(True, mode="drop")
         in_queue = jnp.where(popped & ~trunc_mask, False, state.in_queue)
 
-        ex = expand_merge_path(heads, process, graph.row_ptr, graph.col_idx,
+        rp, cols, overlay = adjacency_of(graph)
+        ex = expand_merge_path(heads, process, rp, cols,
                                work_budget, backend=backend,
-                               widths=widths, max_width=g)
+                               widths=widths, max_width=g, overlay=overlay)
         # per-edge contribution from the edge's true source row: ex.src is
         # the chunk member owning the edge, its residue read pre-harvest.
         row_deg = jnp.maximum(

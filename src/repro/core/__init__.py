@@ -3,8 +3,8 @@ from .backend import (BACKENDS, default_interpret, has_tpu, resolve_backend,
                       resolve_interpret)
 from .queue import EMPTY, MultiQueue, TaskQueue, make_multiqueue, make_queue
 from .scheduler import RunStats, SchedulerConfig, discrete_run, persistent_run, run
-from .frontier import (Expansion, chunk_degrees, chunk_row_of,
-                       expand_merge_path, expand_per_item)
+from .frontier import (Expansion, adjacency_of, chunk_degrees, chunk_row_of,
+                       expand_merge_path, expand_per_item, gather_neighbors)
 from .task import (MAX_GRANULARITY, ChunkCodec, chunk_seeds, coalesce_chunks,
                    flatten_chunks)
 from .counters import WorkCounter, overwork_ratio
@@ -14,8 +14,8 @@ __all__ = [
     "resolve_interpret",
     "EMPTY", "MultiQueue", "TaskQueue", "make_multiqueue", "make_queue",
     "RunStats", "SchedulerConfig", "discrete_run", "persistent_run", "run",
-    "Expansion", "chunk_degrees", "chunk_row_of",
-    "expand_merge_path", "expand_per_item",
+    "Expansion", "adjacency_of", "chunk_degrees", "chunk_row_of",
+    "expand_merge_path", "expand_per_item", "gather_neighbors",
     "MAX_GRANULARITY", "ChunkCodec", "chunk_seeds", "coalesce_chunks",
     "flatten_chunks",
     "WorkCounter", "overwork_ratio",

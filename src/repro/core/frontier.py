@@ -53,6 +53,48 @@ def searchsorted_right(sorted_arr: jax.Array, values: jax.Array) -> jax.Array:
     return lo
 
 
+def adjacency_of(graph) -> Tuple[jax.Array, jax.Array, object]:
+    """``(row_ptr, cols, overlay)`` of a canonical or slotted graph.
+
+    The uniform unpacking for algorithm bodies: a canonical
+    :class:`~repro.graph.csr.CSRGraph` yields its flat ``col_idx`` and
+    ``overlay=None``; a :class:`~repro.graph.slotted.SlottedView` yields
+    its slab slots plus the :class:`~repro.graph.slotted.Overlay` needed
+    by :func:`gather_neighbors`.  ``row_ptr`` is canonical either way, so
+    every degree-sum consumer (LBS, chunking, budgets) is representation
+    agnostic.
+    """
+    overlay = getattr(graph, "overlay", None)
+    if overlay is None:
+        return graph.row_ptr, graph.col_idx, None
+    return graph.row_ptr, graph.slab_col, overlay
+
+
+def gather_neighbors(row_ptr: jax.Array, cols: jax.Array, src: jax.Array,
+                     edge: jax.Array, overlay=None) -> jax.Array:
+    """Neighbor id at flat canonical edge index ``edge`` of row ``src``.
+
+    ``overlay=None`` is the canonical CSR flat gather.  With an
+    :class:`~repro.graph.slotted.Overlay`, the within-row offset
+    ``edge - row_ptr[src]`` reads the row's slab prefix while below
+    ``slab_len[src]`` and its overlay tail beyond — both sorted with the
+    prefix strictly below the tail, so the result is bit-identical to the
+    canonical gather on the same edge set.  Broadcasts over any matching
+    ``src``/``edge`` shape (flat LBS work lists and [n, max_degree] padded
+    loops alike).
+    """
+    if overlay is None:
+        return cols[jnp.clip(edge, 0, cols.shape[0] - 1)]
+    off = edge - row_ptr[src]
+    s_len = overlay.slab_len[src]
+    s_idx = overlay.slab_ptr[src] + off
+    s_val = cols[jnp.clip(s_idx, 0, cols.shape[0] - 1)]
+    o_idx = overlay.ovl_ptr[src] + off - s_len
+    o_val = overlay.ovl_col[jnp.clip(o_idx, 0,
+                                     overlay.ovl_col.shape[0] - 1)]
+    return jnp.where(off < s_len, s_val, o_val)
+
+
 class Expansion(NamedTuple):
     """Flattened (source, neighbor) work units for one wavefront."""
 
@@ -113,6 +155,7 @@ def expand_merge_path(
     backend: str = "jnp",
     widths: jax.Array | None = None,
     max_width: int = 1,
+    overlay=None,
 ) -> Expansion:
     """CTA-style expansion: load-balancing search over the wavefront.
 
@@ -142,13 +185,15 @@ def expand_merge_path(
         from ..kernels.drain_loop.csr_stream import expand_stream
 
         return expand_stream(items, valid, row_ptr, col_idx, work_budget,
-                             widths=widths, max_width=max_width)
+                             widths=widths, max_width=max_width,
+                             overlay=overlay)
     if resolve_backend(backend) == "pallas":
         # imported lazily: kernels/ imports Expansion from this module
         from ..kernels.frontier_expand.ops import frontier_expand
 
         return frontier_expand(items, valid, row_ptr, col_idx, work_budget,
-                               widths=widths, max_width=max_width)
+                               widths=widths, max_width=max_width,
+                               overlay=overlay)
     safe = jnp.where(valid, items, 0)
     deg = chunk_degrees(items, widths, valid, row_ptr)
     scan = jnp.cumsum(deg)                       # inclusive scan of degrees
@@ -164,7 +209,7 @@ def expand_merge_path(
            chunk_row_of(row_ptr, head, rank, widths[owner], max_width))
     in_range = k < total
     edge = row_ptr[head] + rank
-    nbr = col_idx[jnp.clip(edge, 0, col_idx.shape[0] - 1)]
+    nbr = gather_neighbors(row_ptr, col_idx, src, edge, overlay=overlay)
     return Expansion(
         src=jnp.where(in_range, src, 0),
         nbr=jnp.where(in_range, nbr, 0),
@@ -180,6 +225,7 @@ def expand_per_item(
     row_ptr: jax.Array,
     col_idx: jax.Array,
     max_degree: int,
+    overlay=None,
 ) -> Expansion:
     """Warp-style expansion: one padded neighbor loop per popped item.
 
@@ -192,7 +238,9 @@ def expand_per_item(
     j = jnp.arange(max_degree, dtype=jnp.int32)
     edge = row_ptr[safe][:, None] + j[None, :]          # [n, max_degree]
     in_range = j[None, :] < deg[:, None]
-    nbr = col_idx[jnp.clip(edge, 0, col_idx.shape[0] - 1)]
+    nbr = gather_neighbors(row_ptr, col_idx,
+                           jnp.broadcast_to(safe[:, None], edge.shape),
+                           edge, overlay=overlay)
     src = jnp.broadcast_to(safe[:, None], nbr.shape)
     owner = jnp.broadcast_to(
         jnp.arange(items.shape[0], dtype=jnp.int32)[:, None], nbr.shape

@@ -1,5 +1,7 @@
 from .csr import CSRGraph, from_edges, permute_vertices, degree_stats
 from .generators import rmat, grid2d, erdos
+from .slotted import Overlay, SlottedCSR, SlottedView
 
 __all__ = ["CSRGraph", "from_edges", "permute_vertices", "degree_stats",
-           "rmat", "grid2d", "erdos"]
+           "rmat", "grid2d", "erdos",
+           "Overlay", "SlottedCSR", "SlottedView"]

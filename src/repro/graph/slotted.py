@@ -1,0 +1,399 @@
+"""Slotted CSR: the O(delta) commit representation for streaming graphs.
+
+``graph/csr.from_edges`` is the *canonical* edge-set container — sorted
+unique ``(src, dst)`` pairs, self-loops dropped — and rebuilding it per
+delta batch costs O(m) no matter how small the batch.  This module keeps
+the same edge set mutable in place (DESIGN.md §17):
+
+  * every row owns a **slab**: a power-of-two-padded slot run inside one
+    flat ``slab_col`` array, sized ``next_pow2(max(1, degree))`` at build /
+    compaction time.  The live prefix (``slab_len[r]`` entries) holds the
+    row's *smallest* neighbors in sorted order;
+  * rows that outgrow their slab spill their sorted tail into a small
+    **edge-log overlay** (``ovl_row/ovl_col``, lexsorted by ``(row,
+    col)``), so commits never reallocate slabs;
+  * a **compaction** pass re-packs everything into fresh right-sized slabs
+    with an empty overlay — triggered by overlay occupancy, a fixed batch
+    cadence, or a violated slab-slack bound (below).
+
+Because each row reads as ``slab prefix ++ overlay tail`` — both sorted,
+prefix strictly below tail — the materialized CSR (:meth:`SlottedCSR.
+to_csr`) is **bit-identical to ``from_edges`` on the same edge set**, and
+the device :class:`SlottedView` exposes the *canonical* ``row_ptr`` (plain
+degree prefix sums), so every consumer of degree sums — the merge-path
+LBS, ``chunk_degrees``/``chunk_row_of``, chunk formation, work budgets —
+runs unchanged on a slotted graph.  Only the neighbor *gather* is
+two-level (``core/frontier.gather_neighbors``).
+
+Slab-slack invariant: after every commit, ``cap(r) <= 4 * max(1,
+deg(r))`` for every row (deletes can shrink a row far below its slab; a
+violating commit forces the next compaction).  This is what lets the
+megakernel stream a chunk's whole slab span through a *static*-length DMA:
+``span <= 4 * (degree_sum + width)`` (kernels/drain_loop/csr_stream).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .csr import CSRGraph
+
+#: slab-slack bound: a row's slab capacity never exceeds this multiple of
+#: its live degree (enforced lazily — a violating commit forces the next
+#: compaction).  The megakernel's static DMA length relies on it.
+SLAB_SLACK = 4
+
+
+def _next_pow2(x: np.ndarray) -> np.ndarray:
+    """Elementwise next power of two of ``max(1, x)`` (int64)."""
+    x = np.maximum(np.asarray(x, dtype=np.int64), 1)
+    return np.int64(1) << np.int64(np.ceil(np.log2(x + 0.0))).astype(np.int64)
+
+
+def _seg_indices(starts: np.ndarray, lens: np.ndarray) -> np.ndarray:
+    """Concatenated ``[starts[i], starts[i] + lens[i])`` ranges (int64)."""
+    lens = np.asarray(lens, dtype=np.int64)
+    total = int(lens.sum())
+    if total == 0:
+        return np.empty(0, dtype=np.int64)
+    ends = np.cumsum(lens)
+    intra = np.arange(total, dtype=np.int64) - np.repeat(ends - lens, lens)
+    return np.repeat(np.asarray(starts, dtype=np.int64), lens) + intra
+
+
+class Overlay(NamedTuple):
+    """Device-side two-level gather companion (``core/frontier``).
+
+    The gather for within-row offset ``off`` of row ``r`` reads the slab
+    (``slab_col[slab_ptr[r] + off]``) while ``off < slab_len[r]`` and the
+    overlay tail (``ovl_col[ovl_ptr[r] + off - slab_len[r]]``) beyond.
+    """
+
+    slab_ptr: jax.Array   # [n+1] int32 slab slot offsets
+    slab_len: jax.Array   # [n]   int32 live prefix length per row
+    ovl_ptr: jax.Array    # [n+1] int32 overlay segment offsets
+    ovl_col: jax.Array    # [>=1] int32 overlay neighbor ids (row-major)
+
+
+@dataclasses.dataclass(frozen=True)
+class SlottedView:
+    """Immutable device snapshot of a :class:`SlottedCSR`.
+
+    Duck-types the read side of :class:`~repro.graph.csr.CSRGraph` —
+    ``row_ptr`` is the *canonical* degree prefix sum, ``num_vertices`` /
+    ``num_edges`` / ``degrees()`` behave identically — but deliberately has
+    **no** ``col_idx``: any consumer that would flat-gather neighbors must
+    go through :func:`~repro.core.frontier.adjacency_of` and the two-level
+    gather, so a missed call site fails loudly instead of reading slots.
+    """
+
+    row_ptr: jax.Array    # [n+1] int32, canonical (== from_edges row_ptr)
+    slab_ptr: jax.Array   # [n+1] int32
+    slab_len: jax.Array   # [n]   int32
+    slab_col: jax.Array   # [S]   int32 slab slots (live prefixes + padding)
+    ovl_ptr: jax.Array    # [n+1] int32
+    ovl_col: jax.Array    # [>=1] int32
+    m: int                # static edge count (pytree metadata)
+
+    @property
+    def num_vertices(self) -> int:
+        return self.row_ptr.shape[0] - 1
+
+    @property
+    def num_edges(self) -> int:
+        return self.m
+
+    def degrees(self) -> jax.Array:
+        return self.row_ptr[1:] - self.row_ptr[:-1]
+
+    @property
+    def overlay(self) -> Overlay:
+        return Overlay(slab_ptr=self.slab_ptr, slab_len=self.slab_len,
+                       ovl_ptr=self.ovl_ptr, ovl_col=self.ovl_col)
+
+
+jax.tree_util.register_dataclass(
+    SlottedView,
+    data_fields=["row_ptr", "slab_ptr", "slab_len", "slab_col", "ovl_ptr",
+                 "ovl_col"],
+    meta_fields=["m"],
+)
+
+
+class SlottedCSR:
+    """Mutable host-side slotted CSR (numpy); one instance per stream.
+
+    All mutation happens through :meth:`apply` (one canonical
+    :class:`~repro.stream.deltas.EdgeDelta`, O(touched rows)) and
+    :meth:`compact` (full re-pack, O(n + m), amortized by its triggers).
+    ``commits`` / ``compactions`` / ``touched_rows`` meter the commit cost
+    the streaming benchmarks export.
+    """
+
+    def __init__(self, n: int, slab_ptr: np.ndarray, slab_col: np.ndarray,
+                 slab_len: np.ndarray, deg: np.ndarray,
+                 ovl_row: np.ndarray, ovl_col: np.ndarray,
+                 symmetric: bool = False):
+        self.n = int(n)
+        self.slab_ptr = slab_ptr          # int64 [n+1]
+        self.slab_col = slab_col          # int32 [slab_ptr[-1]]
+        self.slab_len = slab_len          # int32 [n]
+        self.deg = deg                    # int32 [n]
+        self.ovl_row = ovl_row            # int32 [O] lexsorted (row, col)
+        self.ovl_col = ovl_col            # int32 [O]
+        #: the symmetric-workload contract (graph/generators.
+        #: edge_delta_stream emits both directions of every pair); tracked
+        #: per commit so the tight BFS invalidation rule can prove its
+        #: regional seed search exhaustive (stream/incremental).
+        self.symmetric = bool(symmetric)
+        self.commits = 0
+        self.compactions = 0
+        self.touched_rows = 0             # cumulative, across commits
+        self.last_touched = 0             # rows rewritten by the last apply
+        self.last_compacted = False       # did the last commit() compact?
+        self._slack_violated = False
+        self._view: Optional[SlottedView] = None
+
+    # ------------------------------------------------------------ build
+    @classmethod
+    def from_csr(cls, graph: CSRGraph) -> "SlottedCSR":
+        """O(m) one-time build from a canonical CSR (stream start)."""
+        n = graph.num_vertices
+        rp = np.asarray(graph.row_ptr, dtype=np.int64)
+        ci = np.asarray(graph.col_idx, dtype=np.int32)
+        deg = np.diff(rp).astype(np.int32)
+        caps = _next_pow2(deg)
+        slab_ptr = np.zeros(n + 1, dtype=np.int64)
+        np.cumsum(caps, out=slab_ptr[1:])
+        slab_col = np.zeros(int(slab_ptr[-1]), dtype=np.int32)
+        slab_col[_seg_indices(slab_ptr[:-1], deg)] = ci
+        # symmetric iff the directed edge set equals its transpose
+        src = np.repeat(np.arange(n, dtype=np.int64), deg)
+        keys = src * n + ci
+        tkeys = ci.astype(np.int64) * n + src
+        symmetric = bool(np.array_equal(keys, np.sort(tkeys)))
+        return cls(n, slab_ptr, slab_col, deg.copy(), deg.copy(),
+                   np.empty(0, np.int32), np.empty(0, np.int32),
+                   symmetric=symmetric)
+
+    # ------------------------------------------------------- properties
+    @property
+    def num_vertices(self) -> int:
+        return self.n
+
+    @property
+    def num_edges(self) -> int:
+        return int(self.deg.sum())
+
+    @property
+    def overlay_size(self) -> int:
+        return int(self.ovl_row.size)
+
+    def row_ptr64(self) -> np.ndarray:
+        """Canonical int64 ``[n+1]`` degree prefix sums."""
+        rp = np.zeros(self.n + 1, dtype=np.int64)
+        np.cumsum(self.deg, out=rp[1:])
+        return rp
+
+    def _ovl_ptr64(self) -> np.ndarray:
+        op = np.zeros(self.n + 1, dtype=np.int64)
+        np.cumsum(np.bincount(self.ovl_row, minlength=self.n), out=op[1:])
+        return op
+
+    # ------------------------------------------------------------ reads
+    def row_neighbors(self, r: int) -> np.ndarray:
+        """Sorted unique neighbor ids of row ``r`` (host, O(deg))."""
+        s = int(self.slab_ptr[r])
+        head = self.slab_col[s:s + int(self.slab_len[r])]
+        lo = np.searchsorted(self.ovl_row, r, side="left")
+        hi = np.searchsorted(self.ovl_row, r, side="right")
+        if lo == hi:
+            return head
+        return np.concatenate([head, self.ovl_col[lo:hi]])
+
+    def has_edge(self, r: int, c: int) -> bool:
+        """Membership test, O(log deg) against the sorted canonical row."""
+        nb = self.row_neighbors(int(r))
+        i = int(np.searchsorted(nb, c))
+        return i < nb.size and int(nb[i]) == int(c)
+
+    def range_cols(self, lo: int, hi: int) -> np.ndarray:
+        """Concatenated canonical neighbor lists of rows ``[lo, hi)``
+        (host, O(edges in range)) — the sharded per-owner patch's row
+        extraction (stream/ingest.reshard)."""
+        rp = self.row_ptr64()
+        out = np.empty(int(rp[hi] - rp[lo]), dtype=np.int32)
+        base = rp[lo:hi] - rp[lo]
+        lens = self.slab_len[lo:hi]
+        out[_seg_indices(base, lens)] = \
+            self.slab_col[_seg_indices(self.slab_ptr[lo:hi], lens)]
+        olo = np.searchsorted(self.ovl_row, lo, side="left")
+        ohi = np.searchsorted(self.ovl_row, hi, side="left")
+        if ohi > olo:
+            op = np.bincount(self.ovl_row[olo:ohi] - lo, minlength=hi - lo)
+            out[_seg_indices(base + lens, op)] = self.ovl_col[olo:ohi]
+        return out
+
+    def to_csr(self) -> CSRGraph:
+        """Canonical materialization — bit-identical to ``from_edges`` on
+        the same edge set (the parity contract the tests enforce)."""
+        rp = self.row_ptr64()
+        col = self.range_cols(0, self.n)
+        return CSRGraph(row_ptr=jnp.asarray(rp.astype(np.int32)),
+                        col_idx=jnp.asarray(col))
+
+    def view(self) -> SlottedView:
+        """Device snapshot (cached until the next mutation)."""
+        if self._view is None:
+            rp = self.row_ptr64()
+            op = self._ovl_ptr64()
+            ovl = self.ovl_col if self.ovl_col.size else \
+                np.zeros(1, np.int32)
+            slab = self.slab_col if self.slab_col.size else \
+                np.zeros(1, np.int32)
+            self._view = SlottedView(
+                row_ptr=jnp.asarray(rp.astype(np.int32)),
+                slab_ptr=jnp.asarray(self.slab_ptr.astype(np.int32)),
+                slab_len=jnp.asarray(self.slab_len),
+                slab_col=jnp.asarray(slab),
+                ovl_ptr=jnp.asarray(op.astype(np.int32)),
+                ovl_col=jnp.asarray(ovl),
+                m=int(rp[-1]),
+            )
+        return self._view
+
+    # ----------------------------------------------------------- commit
+    def apply(self, src: np.ndarray, dst: np.ndarray,
+              insert: np.ndarray) -> Tuple[np.ndarray, ...]:
+        """Commit one canonical op batch in place, O(touched rows).
+
+        ``(src, dst, insert)`` is an :class:`~repro.stream.deltas.
+        EdgeDelta`'s payload: sorted unique ``(src, dst)`` with a net
+        insert/delete verdict per pair (self-loops already rejected,
+        duplicates already last-wins collapsed).  Inserting a present edge
+        / deleting an absent one is a no-op.  Returns the *effective* ops
+        ``(ins_src, ins_dst, del_src, del_dst)`` — exactly what the
+        reference ``apply_delta`` set algebra computes.
+        """
+        src = np.asarray(src, dtype=np.int32)
+        dst = np.asarray(dst, dtype=np.int32)
+        insert = np.asarray(insert, dtype=bool)
+        rows = np.unique(src)
+        eff_is, eff_id, eff_ds, eff_dd = [], [], [], []
+        new_ovl_rows, new_ovl_cols = [], []
+        touched = []
+        slack_hit = False
+        for r in rows.tolist():
+            sel = src == r
+            ins_d = dst[sel & insert]
+            del_d = dst[sel & ~insert]
+            cur = self.row_neighbors(r)
+            if ins_d.size:
+                ins_d = ins_d[~np.isin(ins_d, cur, assume_unique=True)]
+            if del_d.size:
+                del_d = del_d[np.isin(del_d, cur, assume_unique=True)]
+            if not (ins_d.size or del_d.size):
+                continue
+            new = cur
+            if del_d.size:
+                new = np.setdiff1d(new, del_d, assume_unique=True)
+            if ins_d.size:
+                new = np.union1d(new, ins_d)
+            cap = int(self.slab_ptr[r + 1] - self.slab_ptr[r])
+            k = min(new.size, cap)
+            s = int(self.slab_ptr[r])
+            self.slab_col[s:s + k] = new[:k]
+            self.slab_len[r] = k
+            self.deg[r] = new.size
+            if new.size > k:
+                new_ovl_rows.append(np.full(new.size - k, r, np.int32))
+                new_ovl_cols.append(new[k:].astype(np.int32))
+            touched.append(r)
+            if cap > SLAB_SLACK * max(1, int(new.size)):
+                slack_hit = True
+            if ins_d.size:
+                eff_is.append(np.full(ins_d.size, r, np.int32))
+                eff_id.append(ins_d.astype(np.int32))
+            if del_d.size:
+                eff_ds.append(np.full(del_d.size, r, np.int32))
+                eff_dd.append(del_d.astype(np.int32))
+        if touched:
+            # rebuild the flat overlay: untouched entries survive verbatim,
+            # touched rows contribute their fresh tails — O(|overlay| +
+            # touched tails), then one lexsort of the (small) overlay
+            t = np.asarray(touched, dtype=np.int32)
+            keep = ~np.isin(self.ovl_row, t)
+            orow = np.concatenate([self.ovl_row[keep]] + new_ovl_rows) \
+                if new_ovl_rows else self.ovl_row[keep]
+            ocol = np.concatenate([self.ovl_col[keep]] + new_ovl_cols) \
+                if new_ovl_cols else self.ovl_col[keep]
+            order = np.lexsort((ocol, orow))
+            self.ovl_row, self.ovl_col = orow[order], ocol[order]
+            self._view = None
+        self.commits += 1
+        self.last_touched = len(touched)
+        self.touched_rows += len(touched)
+        self._slack_violated = self._slack_violated or slack_hit
+
+        def cat(parts):
+            return (np.concatenate(parts) if parts
+                    else np.empty(0, np.int32))
+
+        ins_s, ins_d = cat(eff_is), cat(eff_id)
+        del_s, del_d = cat(eff_ds), cat(eff_dd)
+        # maintain the symmetry flag per commit, O(delta log deg): the
+        # post-commit graph stays symmetric iff every effective op's mirror
+        # holds too (insert (r,c) needs (c,r) present, delete needs it
+        # absent).  A batch can't restore a broken flag — compact() runs
+        # the full re-detection instead (amortized by its triggers).
+        if self.symmetric and (ins_s.size or del_s.size):
+            sym = all(self.has_edge(c, r)
+                      for r, c in zip(ins_s.tolist(), ins_d.tolist()))
+            sym = sym and not any(
+                self.has_edge(c, r)
+                for r, c in zip(del_s.tolist(), del_d.tolist()))
+            self.symmetric = sym
+        return ins_s, ins_d, del_s, del_d
+
+    # ------------------------------------------------------- compaction
+    def should_compact(self, batch_index: int, compact_every: int,
+                       overlay_slack: float) -> bool:
+        """Deterministic compaction trigger (a pure function of the delta
+        log + knobs, so SIGKILL-resume replays the identical schedule):
+        violated slab-slack bound, every ``compact_every`` batches, or
+        overlay occupancy above ``overlay_slack * m``."""
+        if self._slack_violated:
+            return True
+        if compact_every > 0 and batch_index % compact_every == 0:
+            return True
+        return self.overlay_size > overlay_slack * max(1, self.num_edges)
+
+    def compact(self) -> None:
+        """Re-pack into fresh right-sized slabs; overlay empties; the
+        materialized edge set is untouched (to_csr before == after)."""
+        rp = self.row_ptr64()
+        col = self.range_cols(0, self.n)
+        caps = _next_pow2(self.deg)
+        slab_ptr = np.zeros(self.n + 1, dtype=np.int64)
+        np.cumsum(caps, out=slab_ptr[1:])
+        slab_col = np.zeros(int(slab_ptr[-1]), dtype=np.int32)
+        slab_col[_seg_indices(slab_ptr[:-1], self.deg)] = col
+        self.slab_ptr, self.slab_col = slab_ptr, slab_col
+        self.slab_len = self.deg.copy()
+        self.ovl_row = np.empty(0, np.int32)
+        self.ovl_col = np.empty(0, np.int32)
+        self.compactions += 1
+        self._slack_violated = False
+        self._view = None
+        if not self.symmetric:
+            # mirrored later ops may have restored symmetry; the per-commit
+            # rule can only lower the flag, so re-detect exactly here
+            src = np.repeat(np.arange(self.n, dtype=np.int64), self.deg)
+            keys = src * self.n + col
+            tkeys = col.astype(np.int64) * self.n + src
+            self.symmetric = bool(np.array_equal(keys, np.sort(tkeys)))
+        del rp

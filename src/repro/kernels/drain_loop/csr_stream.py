@@ -34,6 +34,7 @@ from jax.experimental.pallas import tpu as pltpu
 from ...core.backend import resolve_interpret
 from ...core.frontier import (Expansion, chunk_degrees, chunk_row_of,
                               searchsorted_right)
+from ...graph.slotted import SLAB_SLACK
 
 _N_BUFFERS = 2  # double buffering: one slice landing, one in flight
 
@@ -107,6 +108,7 @@ def expand_stream(
     work_budget: int,
     widths: jax.Array | None = None,
     max_width: int = 1,
+    overlay=None,
     *,
     interpret=None,
 ) -> Expansion:
@@ -142,9 +144,31 @@ def expand_stream(
     src = (head if widths is None else
            chunk_row_of(row_ptr, head, rank, widths[owner], max_width))
     in_range = k < total
-    slices = stream_row_slices(col_idx, row_ptr[safe], work_budget,
-                               interpret=interpret)
-    nbr = slices[owner, jnp.clip(rank, 0, work_budget - 1)]
+    if overlay is None:
+        slices = stream_row_slices(col_idx, row_ptr[safe], work_budget,
+                                   interpret=interpret)
+        nbr = slices[owner, jnp.clip(rank, 0, work_budget - 1)]
+    else:
+        # Slotted graph (graph/slotted.py): ``col_idx`` is the flat slab
+        # array.  A chunk's slab span is bounded by the slab-slack
+        # invariant: sum(cap_r) <= 4 * sum(max(1, deg_r)) <= 4 *
+        # (degree_sum + width) <= 4 * (work_budget + max_width), so one
+        # static-length DMA per chunk starting at ``slab_ptr[head]`` covers
+        # every member row's slab.  The extra over-fetch (4x on top of the
+        # full-budget slice above) is the price of in-place commits; the
+        # overlay tail is tiny and compaction-bounded, so it reads straight
+        # from its own flat array instead of the stream.
+        slab_budget = SLAB_SLACK * (work_budget + max_width)
+        slices = stream_row_slices(col_idx, overlay.slab_ptr[safe],
+                                   slab_budget, interpret=interpret)
+        edge = row_ptr[head] + rank
+        off = edge - row_ptr[src]
+        s_idx = overlay.slab_ptr[src] + off - overlay.slab_ptr[head]
+        s_val = slices[owner, jnp.clip(s_idx, 0, slab_budget - 1)]
+        o_idx = overlay.ovl_ptr[src] + off - overlay.slab_len[src]
+        o_val = overlay.ovl_col[jnp.clip(o_idx, 0,
+                                         overlay.ovl_col.shape[0] - 1)]
+        nbr = jnp.where(off < overlay.slab_len[src], s_val, o_val)
     return Expansion(
         src=jnp.where(in_range, src, 0),
         nbr=jnp.where(in_range, nbr, 0),

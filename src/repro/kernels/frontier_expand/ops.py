@@ -23,7 +23,8 @@ import jax
 import jax.numpy as jnp
 
 from ...core.backend import resolve_interpret
-from ...core.frontier import Expansion, chunk_degrees, chunk_row_of
+from ...core.frontier import (Expansion, chunk_degrees, chunk_row_of,
+                              gather_neighbors)
 from .kernel import lbs_pallas
 
 
@@ -31,7 +32,8 @@ from .kernel import lbs_pallas
                    static_argnames=("budget", "interpret", "max_width"))
 def frontier_expand(items, valid, row_ptr, col_idx, budget: int,
                     interpret: bool | None = None,
-                    widths=None, max_width: int = 1) -> Expansion:
+                    widths=None, max_width: int = 1,
+                    overlay=None) -> Expansion:
     """Drop-in replacement for ``core.frontier.expand_merge_path`` that runs
     the merge-path search as a Pallas TPU kernel.
 
@@ -61,7 +63,9 @@ def frontier_expand(items, valid, row_ptr, col_idx, budget: int,
     k = jnp.arange(budget, dtype=jnp.int32)
     in_range = k < total
     edge = row_ptr[head] + rank
-    nbr = col_idx[jnp.clip(edge, 0, col_idx.shape[0] - 1)]
+    # the LBS kernel only computes (owner, rank); the gather lives out here,
+    # so a slotted graph just swaps the flat read for the two-level one
+    nbr = gather_neighbors(row_ptr, col_idx, src, edge, overlay=overlay)
     return Expansion(
         src=jnp.where(in_range, src, 0),
         nbr=jnp.where(in_range, nbr, 0),

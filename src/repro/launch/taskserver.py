@@ -48,7 +48,8 @@ def mixed_specs(n_jobs: int, registry: JobRegistry, eps: float,
                 seed: int, shards: int = 1,
                 stream: int = 0, stream_batch: int = 32,
                 snapshot_every: int = 0, checkpoint_dir: str | None = None,
-                resume: bool = False) -> list[JobSpec]:
+                resume: bool = False, compact_every: int = 0,
+                overlay_slack: float = 0.25) -> list[JobSpec]:
     """Round-robin over algorithms x graphs, sources spread over vertices.
 
     With ``shards > 1`` the BFS jobs become sharded single-tenant jobs (the
@@ -86,7 +87,8 @@ def mixed_specs(n_jobs: int, registry: JobRegistry, eps: float,
             stream_spec = StreamSpec(
                 deltas=tuple(deltas),
                 snapshot_every=snapshot_every if job_dir else 0,
-                checkpoint_dir=job_dir, resume=resume and job_dir is not None)
+                checkpoint_dir=job_dir, resume=resume and job_dir is not None,
+                compact_every=compact_every, overlay_slack=overlay_slack)
         specs.append(JobSpec(algorithm, gname, params,
                              weight=1.0 + (i % 3),
                              shards=shards if algorithm == "bfs" else 1,
@@ -132,7 +134,8 @@ def print_stream_records(server) -> None:
             mode = "incr" if r.incremental else "full"
             print(f"  batch {r.batch:>3} [{mode}] ops={r.effective_ops:>4} "
                   f"seeds={r.seeds:>5} rounds={r.rounds:>5} "
-                  f"work={r.work:>7}")
+                  f"work={r.work:>7} touched={r.touched_rows:>4} "
+                  f"ovl={r.overlay:>4}{' compact' if r.compacted else ''}")
 
 
 def main() -> None:
@@ -207,6 +210,16 @@ def main() -> None:
     ap.add_argument("--stream-batch", type=int, default=32, metavar="K",
                     help="edge operations per delta batch (mixed "
                          "inserts/deletes, both directions emitted)")
+    ap.add_argument("--compact-every", type=int, default=0, metavar="B",
+                    help="re-pack the slotted CSR's slabs every B delta "
+                         "batches (graph/slotted.py; 0 = compact only on "
+                         "overlay occupancy / slab-slack triggers).  "
+                         "Commits stay O(touched rows) either way; "
+                         "compaction amortizes the overlay away")
+    ap.add_argument("--overlay-slack", type=float, default=0.25, metavar="F",
+                    help="compact when the edge-log overlay exceeds F * m "
+                         "live edges (default 0.25); smaller = tighter "
+                         "slabs and more frequent O(m) re-packs")
     ap.add_argument("--snapshot-every", type=int, default=0, metavar="R",
                     help="write a crash-consistent mid-drain snapshot every "
                          "R rounds of a streaming drain (0 = batch "
@@ -269,7 +282,9 @@ def main() -> None:
                         stream_batch=args.stream_batch,
                         snapshot_every=args.snapshot_every,
                         checkpoint_dir=args.checkpoint_dir,
-                        resume=args.resume)
+                        resume=args.resume,
+                        compact_every=args.compact_every,
+                        overlay_slack=args.overlay_slack)
 
     granularity = args.granularity
     if args.exec_policy == "auto":

@@ -140,6 +140,8 @@ KINDS: Dict[str, Dict[str, str]] = {
         "dropped": "int",
         "incremental": "bool",
         "topology": "str",
+        "touched_rows": "int",    # slab rows rewritten across all commits
+        "compactions": "int",     # slotted-CSR re-packs across the run
     },
     # per-tenant telemetry (core/counters.JobTelemetry)
     "job": {

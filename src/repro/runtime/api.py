@@ -313,14 +313,21 @@ def stream_execute(
     mesh=None,
     snapshot_hook=None,
     trace: Optional[Trace] = None,
+    compact_every: int = 0,
+    overlay_slack: float = 0.25,
 ):
     """Run ``algorithm`` as a long-lived streaming job over a mutating graph.
 
     Batch 0 drains the base ``graph``; each subsequent batch commits one
-    :class:`~repro.stream.deltas.EdgeDelta` from ``deltas``, re-seeds only
-    the dirtied frontier (the program's ``dirty_seeds`` rule, unless
-    ``incremental=False`` forces the full-recompute baseline), and drains
-    again — under any of the six execution policies ``cfg`` resolves to.
+    :class:`~repro.stream.deltas.EdgeDelta` from ``deltas`` — an O(touched
+    rows) in-place slotted-CSR commit (``graph/slotted.py``), never a full
+    rebuild — re-seeds only the dirtied frontier (the program's
+    ``dirty_seeds`` rule, unless ``incremental=False`` forces the
+    full-recompute baseline), and drains again — under any of the six
+    execution policies ``cfg`` resolves to.  ``compact_every`` /
+    ``overlay_slack`` steer the slab compaction schedule: compact every N
+    batches, and whenever the edge-log overlay exceeds ``overlay_slack *
+    m`` (a slab-slack violation always forces one).
     ``snapshot_every > 0`` (with ``checkpoint_dir``) writes crash-consistent
     mid-drain snapshots every that-many rounds; ``resume=True`` continues
     from the newest one.  ``algorithm`` is a registered program name (the
@@ -337,4 +344,5 @@ def stream_execute(
         queue_capacity=queue_capacity, incremental=incremental,
         snapshot_every=snapshot_every, checkpoint_dir=checkpoint_dir,
         keep=keep, resume=resume, route_width=route_width, mesh=mesh,
-        snapshot_hook=snapshot_hook, trace=trace)
+        snapshot_hook=snapshot_hook, trace=trace,
+        compact_every=compact_every, overlay_slack=overlay_slack)

@@ -435,6 +435,8 @@ class TaskServer:
             incremental=stream.incremental,
             snapshot_every=stream.snapshot_every,
             checkpoint_dir=stream.checkpoint_dir, resume=stream.resume,
+            compact_every=stream.compact_every,
+            overlay_slack=stream.overlay_slack,
             trace=self.trace,
             trace_engine=f"server.job{job.job_id}.stream")
         job.result = np.asarray(res.result)

@@ -643,6 +643,7 @@ def run_sharded(
     initial_queues: Optional[MultiQueue] = None,
     initial_state: Any = None,
     final_queues: Optional[list] = None,
+    parts: Optional[ShardedCSR] = None,
 ) -> Tuple[Any, ShardRunStats]:
     """Drain ``program`` over a ``cfg.num_shards``-device mesh.
 
@@ -673,7 +674,11 @@ def run_sharded(
                 else make_shard_mesh2d(*mesh_dims))
     n = graph.num_vertices
     steal_on = cfg.steal_threshold > 0
-    parts = partition_graph(graph, s, halo=steal_on)
+    if parts is None:
+        # callers with a long-lived partition (the streaming driver's
+        # per-owner patches, stream/ingest.reshard) pass it in; everyone
+        # else pays the one-shot O(m) build here
+        parts = partition_graph(graph, s, halo=steal_on)
     capacity = queue_capacity or max(4 * n, 1024)
     if initial_state is None or initial_queues is None:
         init_state, seeds = program.init()

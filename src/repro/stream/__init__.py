@@ -14,12 +14,14 @@ Front doors: :func:`repro.runtime.stream_execute` (programmatic),
 from .deltas import EdgeDelta, make_delta, symmetrized
 from .driver import (BatchRecord, StreamResult, StreamSpec, run_stream)
 from .incremental import reseed
-from .ingest import AppliedDelta, apply_delta, replay, reshard
+from .ingest import (AppliedDelta, apply_delta, commit, replay,
+                     replay_commits, reshard)
 from .snapshot import SnapshotManager, graph_fingerprint
 
 __all__ = [
     "EdgeDelta", "make_delta", "symmetrized",
-    "AppliedDelta", "apply_delta", "replay", "reshard",
+    "AppliedDelta", "apply_delta", "commit", "replay", "replay_commits",
+    "reshard",
     "reseed",
     "SnapshotManager", "graph_fingerprint",
     "BatchRecord", "StreamResult", "StreamSpec", "run_stream",

@@ -23,6 +23,7 @@ proves this under SIGKILL).
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, List, Optional, Tuple
 
 import jax
@@ -32,6 +33,7 @@ import numpy as np
 from ..core.queue import make_multiqueue, make_queue
 from ..core.scheduler import (SchedulerConfig, megakernel_drive,
                               megakernel_segment, persistent_drive)
+from ..graph.slotted import SlottedCSR
 from ..obs import Trace
 from ..runtime.api import _shared_setup, instrument_step, \
     shared_queue_capacity
@@ -39,7 +41,7 @@ from ..runtime.policy import policy_of
 from ..runtime.programs import build_program
 from .deltas import EdgeDelta
 from .incremental import reseed
-from .ingest import apply_delta, replay
+from .ingest import commit, replay_commits, reshard
 from .snapshot import SnapshotManager
 
 
@@ -52,6 +54,8 @@ class StreamSpec:
     snapshot_every: int = 0
     checkpoint_dir: Optional[str] = None
     resume: bool = False
+    compact_every: int = 0        # 0 = occupancy/slack triggers only
+    overlay_slack: float = 0.25   # compact when overlay > slack * m
 
     def __post_init__(self):
         object.__setattr__(self, "deltas", tuple(self.deltas))
@@ -61,6 +65,10 @@ class StreamSpec:
                 and not self.checkpoint_dir):
             raise ValueError(
                 "snapshot_every/resume require a checkpoint_dir")
+        if self.compact_every < 0:
+            raise ValueError("compact_every must be >= 0")
+        if not self.overlay_slack > 0:
+            raise ValueError("overlay_slack must be > 0")
 
 
 @dataclasses.dataclass
@@ -76,6 +84,10 @@ class BatchRecord:
     work: int             # program work-counter delta over this batch
     splits: int
     dropped: int
+    touched_rows: int = 0     # slab rows rewritten by this batch's commit
+    overlay: int = 0          # overlay occupancy after the commit
+    compacted: bool = False   # did this commit trigger a compaction?
+    commit_seconds: float = 0.0   # apply(+compaction) wall time
 
 
 @dataclasses.dataclass
@@ -135,7 +147,7 @@ def _drive_shared(step, cond, carry, kernel: str, every: int, cb):
 def _drive_sharded(program, graph, cfg: SchedulerConfig, capacity: int,
                    mq, state, rounds: int, processed: int, every: int, cb,
                    route_width, mesh, trace=None, trace_engine=None,
-                   trace_round_offset: int = 0):
+                   trace_round_offset: int = 0, parts=None):
     """Segmented sharded drain: each segment is one ``run_sharded`` call
     with its round budget clamped to the next snapshot boundary.  The
     host-side continuation replicates the in-loop ``keep_going`` exactly
@@ -168,7 +180,8 @@ def _drive_sharded(program, graph, cfg: SchedulerConfig, capacity: int,
             route_width=route_width, mesh=mesh, trace=trace,
             trace_engine=trace_engine,
             trace_round_offset=trace_round_offset + rounds,
-            initial_queues=mq, initial_state=state, final_queues=fq)
+            initial_queues=mq, initial_state=state, final_queues=fq,
+            parts=parts)
         mq = fq[0]
         rounds += st.rounds
         processed += st.items_processed
@@ -203,6 +216,8 @@ def run_stream(
     snapshot_hook=None,
     trace: Optional[Trace] = None,
     trace_engine: Optional[str] = None,
+    compact_every: int = 0,
+    overlay_slack: float = 0.25,
 ) -> StreamResult:
     """Run ``algorithm`` over ``graph`` + a delta log, batch by batch.
 
@@ -239,7 +254,18 @@ def run_stream(
             tick = resume_tick + 1
     resumed = resume_tick is not None
 
-    cur_graph = replay(graph, deltas[:start_batch]) if start_batch else graph
+    # ONE slotted CSR lives across the whole stream (graph/slotted.py):
+    # batch commits mutate it in place, O(touched rows) instead of the old
+    # per-batch from_edges rebuild.  Resume replays the committed prefix
+    # through the SAME commit path — identical compaction schedule, hence
+    # identical slab layout and snapshot fingerprints (the deltas and the
+    # knobs fully determine both).
+    slotted = SlottedCSR.from_csr(graph)
+    if start_batch:
+        replay_commits(slotted, deltas[:start_batch], compact_every,
+                       overlay_slack)
+    cur_graph = slotted.view()
+    parts = None  # sharded: long-lived partition, patched per owner below
     state = None
     records: List[BatchRecord] = []
     totals = {"rounds": 0, "processed": 0, "work": 0, "dropped": 0}
@@ -248,12 +274,16 @@ def run_stream(
     for b in range(start_batch, total):
         restoring = resumed and b == start_batch
         applied = None
+        commit_s = 0.0
         if b > 0 and not restoring:
-            applied = apply_delta(cur_graph, deltas[b - 1])
+            t_commit = time.perf_counter()
+            applied = commit(slotted, deltas[b - 1], b, compact_every,
+                             overlay_slack)
+            commit_s = time.perf_counter() - t_commit
             cur_graph = applied.new_graph
-        # the body closes over the CSR, so the program is rebuilt per batch
-        # (fresh chunk codec, budgets, and dirty-seed closure for the
-        # committed graph)
+        # the body closes over the adjacency view, so the program is
+        # rebuilt per batch (fresh chunk codec, budgets, and dirty-seed
+        # closure for the committed graph)
         program = build_program(algorithm, cur_graph, cfg,
                                 params=dict(params),
                                 queue_capacity=queue_capacity)
@@ -261,6 +291,20 @@ def run_stream(
                                and program.dirty_seeds is not None)
         n = cur_graph.num_vertices
         sharded = policy.topology == "sharded"
+        if sharded:
+            # owner-aware patch: only shards owning an effectively changed
+            # row (plus their halo successors) are rewritten; batch 0 (or a
+            # fresh resume) pays the one full build
+            t_commit = time.perf_counter()
+            halo = cfg.steal_threshold > 0
+            if parts is None:
+                parts = reshard(slotted, cfg.num_shards, halo=halo)
+            elif applied is not None:
+                parts = reshard(
+                    slotted, cfg.num_shards, halo=halo, parts=parts,
+                    touched_rows=np.concatenate([applied.ins_src,
+                                                 applied.del_src]))
+            commit_s += time.perf_counter() - t_commit
         capacity = (queue_capacity or max(4 * n, 1024)) if sharded else \
             shared_queue_capacity(program, queue_capacity)
 
@@ -353,7 +397,7 @@ def run_stream(
                 program, cur_graph, cfg, capacity, mq, state, r0, p0, every,
                 lambda q, st, r, p: save_snapshot(q, st, r, p),
                 route_width, mesh, trace=trace, trace_engine=engine,
-                trace_round_offset=batch_offset - r0)
+                trace_round_offset=batch_offset - r0, parts=parts)
 
         records.append(BatchRecord(
             batch=b, incremental=was_incremental, seeds=seeds_count,
@@ -361,6 +405,14 @@ def run_stream(
             work=program.work_of(state) - pre_work,
             splits=program.splits_of(state) - pre_splits,
             dropped=dropped,
+            # a restoring batch's commit happened inside replay_commits —
+            # the slotted counters still hold exactly that batch's numbers
+            touched_rows=(applied.touched_rows if applied is not None
+                          else (slotted.last_touched if b > 0 else 0)),
+            overlay=slotted.overlay_size,
+            compacted=(applied.compacted if applied is not None
+                       else (slotted.last_compacted if b > 0 else False)),
+            commit_seconds=commit_s,
         ))
         totals["rounds"] += rounds
         totals["processed"] += processed
@@ -378,6 +430,12 @@ def run_stream(
         "resumed_at": start_batch if resumed else None,
         "incremental": incremental,
         "topology": policy.topology,
+        # commit-cost meters (cumulative over the whole delta log,
+        # including any resume-replayed prefix — same totals as an
+        # uninterrupted run)
+        "touched_rows": slotted.touched_rows,
+        "compactions": slotted.compactions,
+        "commit_seconds": round(sum(r.commit_seconds for r in records), 6),
     })
     out = StreamResult(state=state, result=program.result(state),
                        batches=records, info=info)

@@ -74,12 +74,118 @@ def _chunked(verts: np.ndarray, codec: ChunkCodec, row_ptr,
 
 
 # ---------------------------------------------------------------------- BFS
+def _row_access(applied: AppliedDelta):
+    """``(row_ptr64, neighbors_fn, symmetric)`` for host-side rules.
+
+    Slotted commits answer per-row queries in O(degree) straight out of the
+    slabs and carry the tracked symmetry flag; a canonical CSR gets slice
+    access plus an O(m log m) symmetry check (that path was O(m) anyway).
+    """
+    if applied.slotted is not None:
+        s = applied.slotted
+        return s.row_ptr64(), s.row_neighbors, s.symmetric
+    g = applied.new_graph
+    n = g.num_vertices
+    rp = np.asarray(g.row_ptr, dtype=np.int64)
+    ci = np.asarray(g.col_idx, dtype=np.int32)
+
+    def nbrs(r):
+        return ci[rp[r]:rp[r + 1]]
+
+    src = np.repeat(np.arange(n, dtype=np.int64), np.diff(rp))
+    keys = src * n + ci
+    sym = bool(np.array_equal(keys, np.sort(ci.astype(np.int64) * n + src)))
+    return rp, nbrs, sym
+
+
 def bfs_dirty_seeds(applied: AppliedDelta, state, *, codec: ChunkCodec,
                     split_threshold, owner_block):
-    """Monotone re-relaxation with bounded invalidation (see module doc)."""
+    """Region-pruned delete invalidation (Ramalingam/Reps deletion phase).
+
+    The conservative rule below resets *every* level >= the lowest deleted
+    tree edge — on low-diameter graphs one early delete re-drains most of
+    the graph (the 0.92x work ratio in BENCH_stream.json).  This rule
+    instead walks only the truly disconnected region: candidates are the
+    deleted tree edges' targets, processed in ascending old level; a
+    candidate at level L is *supported* (keeps its distance) iff it still
+    has an unaffected neighbor at L-1, else it is affected and its old
+    tree children (neighbors at L+1) become candidates.  Level-order
+    processing finalizes every L-1 verdict before any L check, so supports
+    are never read stale.  Affected vertices reset to INF and the region's
+    finite fringe reseeds; monotone re-relaxation restores the (unique)
+    hop distances bit-for-bit.
+
+    The support/fringe scans read *out*-neighbors as in-neighbors, which
+    is only sound on symmetric graphs — the streaming workload contract
+    (``graph/generators.edge_delta_stream`` emits both directions).  The
+    slotted representation tracks symmetry per commit; asymmetric or
+    unknown cases fall back to :func:`bfs_dirty_seeds_conservative`
+    (always correct, never cheaper).
+    """
+    import dataclasses
+    import heapq
+
+    rp, nbrs, symmetric = _row_access(applied)
+    if not symmetric:
+        return bfs_dirty_seeds_conservative(
+            applied, state, codec=codec, split_threshold=split_threshold,
+            owner_block=owner_block)
+    n = rp.shape[0] - 1
+    dist = np.asarray(state.dist).astype(np.int64)
+
+    affected = np.zeros(n, dtype=bool)
+    seed_mask = np.zeros(n, dtype=bool)
+    if applied.del_src.size:
+        du = dist[applied.del_src]
+        dv = dist[applied.del_dst]
+        on_tree = (du < BFS_INF) & (dv == du + 1)
+        heap = [(int(l), int(v)) for l, v in
+                zip(dv[on_tree], applied.del_dst[on_tree])]
+        heapq.heapify(heap)
+        while heap:
+            L, v = heapq.heappop(heap)
+            if affected[v]:
+                continue
+            nb = nbrs(v)
+            dn = dist[nb]
+            if np.any((dn == L - 1) & ~affected[nb]):
+                continue  # supported: an intact parent remains
+            affected[v] = True
+            for w in nb[dn == L + 1].tolist():
+                if not affected[w]:
+                    heapq.heappush(heap, (L + 1, int(w)))
+    if affected.any():
+        # regional boundary: the affected region's finite, unaffected
+        # fringe relaxes back in (exact because the carried state was a
+        # drained fixed point: any other finite->INF edge would have
+        # relaxed already)
+        for v in np.flatnonzero(affected).tolist():
+            nb = nbrs(v)
+            seed_mask[nb[(dist[nb] < BFS_INF) & ~affected[nb]]] = True
+        dist[affected] = BFS_INF
+    if applied.ins_src.size:
+        iu = applied.ins_src[dist[applied.ins_src] < BFS_INF]
+        seed_mask[iu] = True
+
+    seeds = _chunked(np.flatnonzero(seed_mask), codec, rp,
+                     split_threshold, owner_block)
+    new_state = dataclasses.replace(
+        state, dist=jnp.asarray(dist.astype(np.int32)))
+    return new_state, jnp.asarray(seeds, jnp.int32)
+
+
+def bfs_dirty_seeds_conservative(applied: AppliedDelta, state, *,
+                                 codec: ChunkCodec, split_threshold,
+                                 owner_block):
+    """Monotone re-relaxation with level-cut invalidation (see module doc).
+
+    The regression oracle for :func:`bfs_dirty_seeds` (and its fallback on
+    asymmetric graphs): resets every level >= the lowest deleted tree
+    edge's target, always a superset of the region-pruned reset.
+    """
     import dataclasses
 
-    g = applied.new_graph
+    g = applied.csr()
     n = g.num_vertices
     rp, ci = _csr_host(g)
     dist = np.asarray(state.dist).astype(np.int64)
@@ -121,7 +227,7 @@ def pagerank_dirty_seeds(applied: AppliedDelta, state, *, damping: float,
     """Invariant restoration + negative-residue decay (see module doc)."""
     import dataclasses
 
-    g = applied.new_graph
+    g = applied.csr()
     n = g.num_vertices
     rp, ci = _csr_host(g)
     src = np.repeat(np.arange(n, dtype=np.int64), np.diff(rp))
@@ -173,8 +279,8 @@ def _priority_host(v: np.ndarray) -> np.ndarray:
 def coloring_dirty_seeds(applied: AppliedDelta, state, *, codec: ChunkCodec,
                          split_threshold, owner_block):
     """Conflict-endpoint recoloring (``"conflicts"`` mode; see module doc)."""
-    g = applied.new_graph
-    rp, _ = _csr_host(g)
+    g = applied.new_graph       # row_ptr only — any representation works
+    rp = np.asarray(g.row_ptr, dtype=np.int64)
     colors = np.asarray(state.colors)
 
     dirty = []

@@ -1,22 +1,29 @@
-"""Delta ingestion: commit an :class:`EdgeDelta` batch against a CSR graph.
+"""Delta ingestion: commit an :class:`EdgeDelta` batch against the graph.
 
-The CSR is the canonical edge set — sorted unique directed ``(src, dst)``
-pairs with self-loops dropped (``graph/csr.from_edges``).  Application is
-set algebra on the int64 pair keys: effective inserts are the batch's
-inserts not already present, effective deletes its deletes that are;
-inserting an existing edge or deleting an absent one is a no-op (which is
-what makes canonical batches idempotent).  The rebuilt graph goes through
-``from_edges`` itself, so a streamed graph is bit-identical to building
-the post-delta edge list from scratch — the round-trip property the
-hypothesis suite checks against a dense-adjacency oracle.
+The canonical edge set is sorted unique directed ``(src, dst)`` pairs with
+self-loops dropped (``graph/csr.from_edges``).  Two commit paths produce
+it:
+
+* **reference** (:func:`apply_delta` on a :class:`~repro.graph.csr.
+  CSRGraph`): set algebra on the int64 pair keys and a full ``from_edges``
+  rebuild — O(m) per batch, kept as the oracle;
+* **slotted** (:func:`apply_delta` on a :class:`~repro.graph.slotted.
+  SlottedCSR`, or :func:`commit` which adds the compaction schedule):
+  in-place slab insert/delete plus overlay append — O(touched rows) per
+  batch, the production path (DESIGN.md §17).  The materialized edge set
+  is bit-identical to the reference at *every* commit, before and after
+  compaction (the property battery in tests/test_slotted.py).
+
+Effective-op semantics are shared: inserts already present and deletes of
+absent edges are no-ops, which is what makes canonical batches idempotent.
 
 Sharded rebuild: the per-device :class:`~repro.shard.partition.ShardedCSR`
 keeps the *global* vertex index space, and ownership is a pure function of
-``(n, num_shards)`` — deltas change edges, never ``n`` — so
-:func:`reshard` (= ``partition_graph`` on the committed graph) *is* the
-owner-aware rebuild: every row lands on the shard that owned it before the
-delta, and the ring-predecessor steal halos are rebuilt from the fresh
-edge slices (DESIGN.md §13).
+``(n, num_shards)`` — deltas change edges, never ``n`` — so each committed
+batch maps to a **per-owner patch**: only the shards owning a touched row
+(plus their ring successors, which replicate that block as a steal halo)
+are rewritten; clean shards keep their device buffers untouched
+(:func:`reshard` with ``parts=``/``touched_rows=``).
 """
 from __future__ import annotations
 
@@ -25,24 +32,46 @@ import dataclasses
 import numpy as np
 
 from ..graph.csr import CSRGraph, from_edges
+from ..graph.slotted import SlottedCSR
 from .deltas import EdgeDelta
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
 class AppliedDelta:
     """A committed batch: the graphs on both sides plus the *effective*
-    ops (no-ops filtered out) — what the dirty-seed rules key off."""
+    ops (no-ops filtered out) — what the dirty-seed rules key off.
 
-    old_graph: CSRGraph
-    new_graph: CSRGraph
+    On the slotted path ``new_graph`` is a device
+    :class:`~repro.graph.slotted.SlottedView`; host rules that need a flat
+    ``col_idx`` call :meth:`csr` (materialized lazily, valid until the
+    *next* commit mutates the underlying :attr:`slotted` — the driver
+    reseeds immediately after each commit, inside that window).
+    ``touched_rows`` / ``compacted`` are the commit-cost meters the stream
+    records export (O(delta) evidence: touched rows stay far below n/m).
+    """
+
+    old_graph: object     # CSRGraph | SlottedView before the batch
+    new_graph: object     # CSRGraph | SlottedView after the batch
     ins_src: np.ndarray   # int32 [ki] effective inserts
     ins_dst: np.ndarray
     del_src: np.ndarray   # int32 [kd] effective deletes
     del_dst: np.ndarray
+    slotted: SlottedCSR | None = None
+    touched_rows: int = 0        # rows rewritten in place (0 = full rebuild)
+    compacted: bool = False
+    _csr_cache: list = dataclasses.field(default_factory=list, repr=False)
 
     @property
     def num_effective(self) -> int:
         return int(self.ins_src.size + self.del_src.size)
+
+    def csr(self) -> CSRGraph:
+        """Canonical host-facing materialization of ``new_graph``."""
+        if self.slotted is None:
+            return self.new_graph
+        if not self._csr_cache:
+            self._csr_cache.append(self.slotted.to_csr())
+        return self._csr_cache[0]
 
 
 def _edge_keys(graph: CSRGraph) -> np.ndarray:
@@ -54,12 +83,31 @@ def _edge_keys(graph: CSRGraph) -> np.ndarray:
     return src * n + ci  # CSR order = sorted by (src, dst) already
 
 
-def apply_delta(graph: CSRGraph, delta: EdgeDelta) -> AppliedDelta:
-    """Commit one canonical batch; returns the :class:`AppliedDelta`."""
+def _check_n(graph, delta: EdgeDelta) -> int:
     n = graph.num_vertices
     if delta.num_vertices != n:
         raise ValueError(
             f"delta is for {delta.num_vertices} vertices, graph has {n}")
+    return n
+
+
+def apply_delta(graph, delta: EdgeDelta) -> AppliedDelta:
+    """Commit one canonical batch; returns the :class:`AppliedDelta`.
+
+    Dispatches on the representation: a :class:`CSRGraph` takes the O(m)
+    reference rebuild, a :class:`SlottedCSR` the O(touched rows) in-place
+    path (mutating it; no compaction here — see :func:`commit`).
+    """
+    if isinstance(graph, SlottedCSR):
+        n = _check_n(graph, delta)
+        old_view = graph.view()
+        ins_s, ins_d, del_s, del_d = graph.apply(
+            delta.src, delta.dst, delta.insert)
+        return AppliedDelta(
+            old_graph=old_view, new_graph=graph.view(),
+            ins_src=ins_s, ins_dst=ins_d, del_src=del_s, del_dst=del_d,
+            slotted=graph, touched_rows=graph.last_touched)
+    n = _check_n(graph, delta)
     old_keys = _edge_keys(graph)
     dkeys = delta.src.astype(np.int64) * n + delta.dst.astype(np.int64)
     ins_keys = dkeys[delta.insert]
@@ -78,6 +126,27 @@ def apply_delta(graph: CSRGraph, delta: EdgeDelta) -> AppliedDelta:
     )
 
 
+def commit(slotted: SlottedCSR, delta: EdgeDelta, batch_index: int,
+           compact_every: int = 0,
+           overlay_slack: float = 0.25) -> AppliedDelta:
+    """One full slotted commit: in-place apply + the compaction schedule.
+
+    The compaction decision is a pure function of the delta-log prefix and
+    the two knobs (``--compact-every`` / ``--overlay-slack``), so a resumed
+    run replaying ``deltas[:b]`` through this same function lands on the
+    identical slab layout — what keeps SIGKILL-and-resume bit-exact at the
+    representation level, not just the edge-set level.
+    """
+    applied = apply_delta(slotted, delta)
+    slotted.last_compacted = False
+    if slotted.should_compact(batch_index, compact_every, overlay_slack):
+        slotted.compact()
+        slotted.last_compacted = True
+        applied = dataclasses.replace(applied, new_graph=slotted.view(),
+                                      compacted=True)
+    return applied
+
+
 def replay(graph: CSRGraph, deltas) -> CSRGraph:
     """Fold a delta-log prefix into the graph (deterministic: the resume
     path rebuilds the batch-``b`` graph by replaying ``deltas[:b]``)."""
@@ -86,14 +155,97 @@ def replay(graph: CSRGraph, deltas) -> CSRGraph:
     return graph
 
 
-def reshard(graph: CSRGraph, num_shards: int, halo: bool = True):
-    """Owner-aware sharded rebuild of a committed graph.
+def replay_commits(slotted: SlottedCSR, deltas, compact_every: int = 0,
+                   overlay_slack: float = 0.25,
+                   first_batch: int = 1) -> SlottedCSR:
+    """Fold a delta-log prefix through the *slotted* commit path (resume):
+    same per-batch :func:`commit` calls, same batch indices, therefore the
+    same compaction schedule and final slab layout as the original run."""
+    for i, d in enumerate(deltas):
+        commit(slotted, d, first_batch + i, compact_every, overlay_slack)
+    return slotted
 
-    Thin, named front door over ``partition_graph``: ownership blocks are a
-    function of ``(n, num_shards)`` only, so re-partitioning the post-delta
-    graph preserves every row's owner and rebuilds the steal halos — the
-    invariant the streaming sharded drain relies on.
+
+def reshard(graph, num_shards: int, halo: bool = True, *,
+            parts=None, touched_rows=None):
+    """Owner-aware sharded (re)build of a committed graph.
+
+    Without ``parts`` this is the full ``partition_graph`` build (ownership
+    blocks are a function of ``(n, num_shards)`` only, so re-partitioning
+    the post-delta graph preserves every row's owner and steal halos).
+
+    With ``parts`` (the previous :class:`~repro.shard.partition.ShardedCSR`)
+    and ``touched_rows`` (the rows the commit rewrote) and a
+    :class:`SlottedCSR` source, only the **dirty** shards — owners of
+    touched rows, plus their ring successors when halos are on (the
+    successor replicates the owner's block as its steal halo) — are
+    re-extracted and patched into the device stacks; clean shards keep
+    their buffers untouched.  If a dirty shard outgrows the stack's edge
+    padding, the build falls back to a full restack with monotonically
+    grown padding (shapes never shrink, so downstream shard traces are
+    reused).
     """
-    from ..shard.partition import partition_graph  # lazy: shard -> runtime
+    from ..shard.partition import (block_bounds, block_size,
+                                   partition_graph)  # lazy: shard -> runtime
 
-    return partition_graph(graph, num_shards, halo=halo)
+    import jax.numpy as jnp
+
+    if parts is None or touched_rows is None or \
+            not isinstance(graph, SlottedCSR):
+        source = graph.to_csr() if isinstance(graph, SlottedCSR) else graph
+        return partition_graph(source, num_shards, halo=halo)
+
+    touched = np.unique(np.asarray(touched_rows, dtype=np.int64))
+    if touched.size == 0:
+        return parts
+    n = graph.num_vertices
+    use_halo = parts.halo
+    owners = np.unique(np.clip(touched // block_size(n, num_shards),
+                               0, num_shards - 1))
+    dirty = set(owners.tolist())
+    if use_halo:
+        dirty |= {(d + 1) % num_shards for d in owners.tolist()}
+
+    rp = graph.row_ptr64()
+    e_pad = int(parts.col_idx.shape[1])
+    patches = {}
+    owned_edges = list(parts.edges_per_shard)
+    for d in sorted(dirty):
+        own_lo, own_hi = block_bounds(d, n, num_shards)
+        e_lo, e_hi = int(rp[own_lo]), int(rp[own_hi])
+        owned_edges[d] = e_hi - e_lo
+        lrp = np.zeros(n + 1, dtype=np.int32)
+        if use_halo and d > 0:
+            pre_lo, _ = block_bounds(d - 1, n, num_shards)
+            ep_lo = int(rp[pre_lo])
+            lcol = graph.range_cols(pre_lo, own_hi)
+            lrp[pre_lo:own_hi + 1] = rp[pre_lo:own_hi + 1] - ep_lo
+        elif use_halo:
+            pre_lo, pre_hi = block_bounds(num_shards - 1, n, num_shards)
+            ep_lo, ep_hi = int(rp[pre_lo]), int(rp[pre_hi])
+            lcol = np.concatenate([graph.range_cols(own_lo, own_hi),
+                                   graph.range_cols(pre_lo, pre_hi)])
+            lrp[own_lo:own_hi + 1] = rp[own_lo:own_hi + 1] - e_lo
+            lrp[pre_lo:pre_hi + 1] = (e_hi - e_lo) + (rp[pre_lo:pre_hi + 1]
+                                                      - ep_lo)
+        else:
+            lcol = graph.range_cols(own_lo, own_hi)
+            lrp[own_lo:own_hi + 1] = rp[own_lo:own_hi + 1] - e_lo
+        if len(lcol) > e_pad:
+            # overflow: full restack, padding grown monotonically so the
+            # [S, E_pad] operand shapes downstream never shrink
+            full = partition_graph(graph.to_csr(), num_shards, halo=halo)
+            new_pad = max(e_pad, int(full.col_idx.shape[1]))
+            col = jnp.zeros((num_shards, new_pad), jnp.int32)
+            col = col.at[:, :full.col_idx.shape[1]].set(full.col_idx)
+            return dataclasses.replace(full, col_idx=col)
+        patches[d] = (lrp, lcol)
+
+    row_ptr, col_idx = parts.row_ptr, parts.col_idx
+    for d, (lrp, lcol) in patches.items():
+        row_ptr = row_ptr.at[d].set(jnp.asarray(lrp))
+        pad = np.zeros(e_pad, dtype=np.int32)
+        pad[:len(lcol)] = lcol
+        col_idx = col_idx.at[d].set(jnp.asarray(pad))
+    return dataclasses.replace(parts, row_ptr=row_ptr, col_idx=col_idx,
+                               edges_per_shard=tuple(owned_edges))

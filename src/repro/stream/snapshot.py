@@ -44,14 +44,37 @@ CURSOR_FIELDS = ("batch", "rounds", "processed", "pre_work", "pre_splits",
 
 
 def graph_fingerprint(graph, num_deltas: int) -> dict:
-    """Cheap int64 digest of (graph, delta-log position)."""
+    """Cheap int64 digest of (graph, delta-log position).
+
+    Representation independent: a slotted graph (``graph/slotted.py`` —
+    anything exposing an ``overlay``) digests its live slab prefixes plus
+    overlay tail, which is the same multiset of (row, col) pairs the
+    canonical ``col_idx`` holds, and the canonical ``row_ptr`` both carry —
+    so a snapshot taken against a :class:`SlottedView` restores against
+    the replayed-and-recommitted slotted graph *or* its canonical
+    materialization interchangeably.
+    """
     rp = np.asarray(graph.row_ptr, dtype=np.int64)
-    ci = np.asarray(graph.col_idx, dtype=np.int64)
+    if getattr(graph, "overlay", None) is not None:
+        slab_ptr = np.asarray(graph.slab_ptr, dtype=np.int64)
+        slab_len = np.asarray(graph.slab_len, dtype=np.int64)
+        slab_col = np.asarray(graph.slab_col, dtype=np.int64)
+        ovl_ptr = np.asarray(graph.ovl_ptr, dtype=np.int64)
+        ovl_col = np.asarray(graph.ovl_col, dtype=np.int64)
+        # sum of each row's live slab prefix, via cumsum differences
+        cs = np.concatenate([[0], np.cumsum(slab_col)])
+        col_sum = int((cs[slab_ptr[:-1] + slab_len] - cs[slab_ptr[:-1]]).sum())
+        col_sum += int(ovl_col[:int(ovl_ptr[-1])].sum())
+        m = int(rp[-1])
+    else:
+        ci = np.asarray(graph.col_idx, dtype=np.int64)
+        col_sum = int(ci.sum())
+        m = int(ci.size)
     return {
         "n": np.int64(graph.num_vertices),
-        "m": np.int64(ci.size),
+        "m": np.int64(m),
         "row_sum": np.int64(rp.sum()),
-        "col_sum": np.int64(ci.sum()),
+        "col_sum": np.int64(col_sum),
         "deltas": np.int64(num_deltas),
     }
 

@@ -477,3 +477,192 @@ def test_multidevice_stream_parity():
     """)
     assert res["vs_single"] and res["vs_cold"]
     assert res["dropped"] == 0 and res["mis"] == 0
+
+
+# ------------------------------ slotted commit path (DESIGN.md section 17)
+def test_stream_commit_counters_and_compaction_schedule():
+    """Every commit is O(delta): touched rows stay strictly below m, the
+    overlay stays bounded, and --compact-every drives a deterministic
+    compaction schedule surfaced in the per-batch records."""
+    base = rmat(6, edge_factor=6, seed=17)
+    deltas = edge_delta_stream(base, 4, 12, seed=18)
+    cfg = _cfg("single", 1, True)
+    res = stream_execute("bfs", base, deltas, cfg, params={"source": 0},
+                         compact_every=2)
+    m = base.num_edges
+    assert res.batches[0].touched_rows == 0          # cold batch, no commit
+    for r in res.batches[1:]:
+        assert 0 < r.touched_rows < m
+        assert r.commit_seconds >= 0.0
+    assert res.info["touched_rows"] == sum(r.touched_rows
+                                           for r in res.batches)
+    # compact_every=2: exactly the even batches re-pack
+    assert [r.compacted for r in res.batches] == \
+        [b > 0 and b % 2 == 0 for b in range(len(res.batches))]
+    assert res.info["compactions"] == sum(r.compacted for r in res.batches)
+
+
+def test_bfs_tight_rule_resets_only_disconnected_region():
+    """Satellite regression for the region-pruned delete rule: on two
+    chains hanging off the source, deleting one chain's first tree edge
+    must invalidate only that chain — the conservative level-cut resets
+    the other chain's equal-or-deeper levels too (and then re-derives
+    them).  Both rules' outputs re-drain to the same fixed point; the
+    tight rule provably touches a strict subset."""
+    from repro.core.task import ChunkCodec
+    from repro.graph import SlottedCSR
+    from repro.stream.incremental import (BFS_INF, bfs_dirty_seeds,
+                                          bfs_dirty_seeds_conservative)
+
+    # 0-1-2-3-4 and 0-5-6-7-8, symmetric
+    und = [(0, 1), (1, 2), (2, 3), (3, 4), (0, 5), (5, 6), (6, 7), (7, 8)]
+    src = [e[0] for e in und] + [e[1] for e in und]
+    dst = [e[1] for e in und] + [e[0] for e in und]
+    g = from_edges(9, src, dst)
+    cfg = _cfg("single", 1, True)
+    prog, state = _scratch("bfs", g, cfg, {"source": 0})
+    assert np.asarray(state.dist).tolist() == [0, 1, 2, 3, 4, 1, 2, 3, 4]
+
+    slotted = SlottedCSR.from_csr(g)
+    assert slotted.symmetric
+    applied = apply_delta(slotted, make_delta(9, [1, 2], [2, 1],
+                                              [False, False]))
+    kw = dict(codec=ChunkCodec(1), split_threshold=None, owner_block=None)
+    st_t, seeds_t = bfs_dirty_seeds(applied, state, **kw)
+    st_c, seeds_c = bfs_dirty_seeds_conservative(applied, state, **kw)
+
+    inf_t = set(np.flatnonzero(np.asarray(st_t.dist) == BFS_INF).tolist())
+    inf_c = set(np.flatnonzero(np.asarray(st_c.dist) == BFS_INF).tolist())
+    assert inf_t == {2, 3, 4}            # the disconnected chain only
+    assert inf_c == {2, 3, 4, 6, 7, 8}   # level-cut collateral
+    assert inf_t < inf_c
+    # nothing can relax back into the detached region; the conservative
+    # rule must reseed vertex 5 to rebuild the chain it reset
+    assert np.asarray(seeds_t).size == 0
+    assert 5 in np.asarray(seeds_c).tolist()
+    # untouched entries carry over bit-for-bit
+    keep = [0, 1, 5]
+    assert np.asarray(st_t.dist)[keep].tolist() == [0, 1, 1]
+
+
+def test_bfs_tight_rule_stream_parity_and_work(monkeypatch):
+    """End-to-end: the tight rule and the conservative oracle both land on
+    the from-scratch distances; the tight rule does no more re-drain work
+    (the BENCH_stream work-ratio gap this rule closes)."""
+    base = rmat(6, edge_factor=6, seed=21)
+    deltas = edge_delta_stream(base, 3, 12, seed=22)
+    cfg = _cfg("single", 1, True)
+    params = {"source": 0}
+    tight = stream_execute("bfs", base, deltas, cfg, params=params)
+
+    import repro.stream.incremental as inc
+    monkeypatch.setattr(inc, "bfs_dirty_seeds",
+                        inc.bfs_dirty_seeds_conservative)
+    cons = stream_execute("bfs", base, deltas, cfg, params=params)
+
+    final_graph = replay(base, deltas)
+    prog, state = _scratch("bfs", final_graph, cfg, params)
+    ref = np.asarray(prog.result(state))
+    np.testing.assert_array_equal(np.asarray(tight.result), ref)
+    np.testing.assert_array_equal(np.asarray(cons.result), ref)
+    t_work = sum(r.work for r in tight.batches[1:])
+    c_work = sum(r.work for r in cons.batches[1:])
+    assert t_work <= c_work
+
+
+def test_asymmetric_stream_falls_back_to_conservative():
+    """Directed (asymmetric) deltas break the tight rule's in-neighbor
+    scan; the dispatch must quietly use the conservative rule and still
+    match the from-scratch drain."""
+    base = rmat(5, edge_factor=6, seed=23)
+    # one *directed* delete: the graph goes asymmetric at batch 1
+    rp = np.asarray(base.row_ptr)
+    ci = np.asarray(base.col_idx)
+    s0 = int(np.flatnonzero(np.diff(rp) > 0)[0])
+    t0 = int(ci[rp[s0]])
+    deltas = [make_delta(base.num_vertices, [s0], [t0], [False])]
+    cfg = _cfg("single", 1, False)
+    res = stream_execute("bfs", base, deltas, cfg, params={"source": 0})
+    final_graph = replay(base, deltas)
+    prog, state = _scratch("bfs", final_graph, cfg, {"source": 0})
+    np.testing.assert_array_equal(np.asarray(res.result),
+                                  np.asarray(prog.result(state)))
+    assert all(r.incremental for r in res.batches[1:])
+
+
+# ------------------------- SIGKILL through the slotted commit (resume)
+_SLOTTED_CRASH_CHILD = """
+    import json
+    import os
+    import signal
+    import numpy as np
+    from repro.core import SchedulerConfig
+    from repro.graph.generators import edge_delta_stream, rmat
+    from repro.runtime import stream_execute
+
+    base = rmat(6, edge_factor=6, seed=19)
+    deltas = edge_delta_stream(base, 4, 12, seed=20)
+    cfg = SchedulerConfig(num_workers=32, topology="single",
+                          persistent=False)
+    kill_at = int(os.environ.get("KILL_AT_TICK", "-1"))
+
+    def hook(tick, batch):
+        if tick == kill_at:
+            os.kill(os.getpid(), signal.SIGKILL)
+
+    res = stream_execute(
+        "bfs", base, deltas, cfg, params={"source": 2},
+        compact_every=2, overlay_slack=0.05,
+        snapshot_every=2, checkpoint_dir=os.environ["SNAP_DIR"],
+        keep=100, resume=os.environ.get("RESUME") == "1",
+        snapshot_hook=hook)
+    print(json.dumps({
+        "result": np.asarray(res.result).tolist(),
+        "resumed_at": res.info["resumed_at"],
+        "batches_run": res.info["batches_run"],
+        "compactions": res.info["compactions"],
+        "touched": res.info["touched_rows"],
+    }))
+"""
+
+
+def _slotted_crash_child(snap_dir, kill_at=-1, resume=False):
+    prog = ("import os\n"
+            "os.environ.setdefault('JAX_PLATFORMS', 'cpu')\n"
+            + textwrap.dedent(_SLOTTED_CRASH_CHILD))
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"),
+               SNAP_DIR=str(snap_dir), KILL_AT_TICK=str(kill_at),
+               RESUME="1" if resume else "0")
+    return subprocess.run([sys.executable, "-c", prog],
+                          capture_output=True, text=True, env=env,
+                          timeout=900)
+
+
+def test_sigkill_resume_replays_slotted_commits(tmp_path):
+    """SIGKILL a streaming drain whose commits run through the slotted
+    path with compactions every 2 batches; the resumed process replays
+    the delta prefix through the *same* commit schedule
+    (ingest.replay_commits) and reproduces the uninterrupted run bit for
+    bit — including the compaction count, which is a pure function of
+    the delta log and the knobs."""
+    import signal
+
+    ref_dir = tmp_path / "ref"
+    out = _slotted_crash_child(ref_dir)
+    assert out.returncode == 0, out.stderr[-3000:]
+    ref = json.loads(out.stdout.strip().splitlines()[-1])
+    assert ref["resumed_at"] is None
+    assert ref["compactions"] >= 2       # the schedule actually fired
+
+    crash_dir = tmp_path / "crash"
+    killed = _slotted_crash_child(crash_dir, kill_at=3)
+    assert killed.returncode == -signal.SIGKILL
+    assert any(p.startswith("snap_") for p in os.listdir(crash_dir))
+
+    resumed = _slotted_crash_child(crash_dir, resume=True)
+    assert resumed.returncode == 0, resumed.stderr[-3000:]
+    got = json.loads(resumed.stdout.strip().splitlines()[-1])
+    assert got["resumed_at"] is not None
+    assert got["batches_run"] < ref["batches_run"]
+    assert got["result"] == ref["result"]
+    assert got["compactions"] == ref["compactions"]
